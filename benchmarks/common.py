@@ -1,0 +1,39 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+# small-but-faithful model configs (offline synthetic stand-ins, sized so a
+# full benchmark run stays CPU-tractable; convergence ~60 iters as in paper)
+MODEL_KW = {
+    "qp": {},
+    "mlr": dict(n=600, dim=64, n_classes=5, batch=200),
+    "mf": dict(m=120, n=180, rank=4),
+    "lda": dict(n_docs=60, vocab=120, n_topics=5, doc_len_mean=40),
+    "cnn": dict(n=256, size=16, batch=64),
+}
+
+
+def timed(fn, *args, repeats=3, **kw):
+    ts = []
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return out, 1e6 * float(np.median(ts))
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def summarize(vals):
+    a = np.asarray(vals, float)
+    return float(np.mean(a)), float(np.std(a) / max(np.sqrt(a.size), 1))

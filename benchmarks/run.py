@@ -1,0 +1,58 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,...]
+
+Prints ``name,us_per_call,derived`` CSV rows. Sections:
+
+  fig3  — QP iteration cost vs Theorem 3.2 bound        (bench_qp_bound)
+  fig5  — MLR random vs adversarial perturbations       (bench_mlr_bound)
+  fig6  — reset-to-init perturbations, MLR + LDA        (bench_reset)
+  fig7  — partial vs full recovery, 4 models × 3 fracs  (bench_partial_recovery)
+  fig8  — priority/round/random checkpoints + headline  (bench_priority)
+  fig9  — system overhead (t_dump vs t_step, budget)    (bench_overhead)
+  kern  — Pallas kernel microbenches vs jnp oracles     (bench_kernels)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (bench_kernels, bench_mlr_bound, bench_overhead,
+                        bench_partial_recovery, bench_priority, bench_qp_bound,
+                        bench_reset)
+
+SECTIONS = {
+    "fig3": bench_qp_bound.run,
+    "fig5": bench_mlr_bound.run,
+    "fig6": bench_reset.run,
+    "fig7": bench_partial_recovery.run,
+    "fig8": bench_priority.run,
+    "fig9": bench_overhead.run,
+    "kern": bench_kernels.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SECTIONS)
+
+    print("name,us_per_call,derived")
+    for name, fn in SECTIONS.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn(quick=args.quick)
+        except Exception as e:  # keep the harness running; report the break
+            rows = [f"{name}_ERROR,0.0,{type(e).__name__}:{e}"]
+        for row in rows:
+            print(row, flush=True)
+        print(f"_section_{name}_seconds,{(time.time()-t0)*1e6:.0f},"
+              f"wall={time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Persistent checkpoint storage (the paper's CephFS/NFS role)."""
+from repro.checkpoint_io.store import ShardedCheckpointStore
+
+__all__ = ["ShardedCheckpointStore"]

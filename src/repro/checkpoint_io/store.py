@@ -1,0 +1,147 @@
+"""On-disk mirror of the running checkpoint (paper §4.3 persistent storage).
+
+Layout: one ``.npy`` file per parameter *block* (the unit of partial save /
+restore), plus a JSON manifest recording the leaf geometry and which
+iteration each block was last persisted. Writing only the selected blocks
+gives the paper's property that a fraction-r checkpoint writes the same
+bytes per C iterations as a full checkpoint.
+
+Writes can be deferred to a background thread (``background=True``),
+matching §4.3: "the training algorithm can be resumed as soon as the
+in-memory caches have been updated, while output to the shared persistent
+storage happens asynchronously".
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import queue
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.blocks import BlockPartition
+
+PyTree = Any
+
+
+class ShardedCheckpointStore:
+    def __init__(self, root: str):
+        self.root = root
+        self.partition: Optional[BlockPartition] = None
+        self.must_reload = False
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def init(self, params: PyTree, partition: BlockPartition) -> None:
+        self.partition = partition
+        manifest = {
+            "block_rows": partition.block_rows,
+            "leaves": [
+                {"name": l.name, "shape": list(l.shape), "dtype": str(np.dtype(l.dtype)),
+                 "rows": l.rows, "row_width": l.row_width,
+                 "n_blocks": l.n_blocks, "offset": l.offset}
+                for l in partition.leaves
+            ],
+            "saved_iter": [0] * partition.total_blocks,
+        }
+        with open(self._manifest_path(), "w") as f:
+            json.dump(manifest, f)
+        # initial full mirror (x^(0)) — the running checkpoint's base
+        full_mask = np.ones((partition.total_blocks,), bool)
+        self.write_blocks(full_mask, params, step=0, background=False)
+
+    def _manifest_path(self) -> str:
+        return os.path.join(self.root, "MANIFEST.json")
+
+    def _block_path(self, gid: int) -> str:
+        return os.path.join(self.root, f"block_{gid:08d}.npy")
+
+    # -- write path ---------------------------------------------------------
+
+    def write_blocks(self, mask, values: PyTree, step: int,
+                     background: bool = True) -> int:
+        """Persist the masked blocks. Returns bytes written (scheduled)."""
+        assert self.partition is not None, "call init() first"
+        mask_np = np.asarray(mask)
+        # materialize only the selected blocks on host
+        leaves = jax.tree_util.tree_leaves(values)
+        jobs: list[tuple[int, np.ndarray]] = []
+        nbytes = 0
+        br = self.partition.block_rows
+        for leaf_meta, x in zip(self.partition.leaves, leaves):
+            seg = mask_np[leaf_meta.offset:leaf_meta.offset + leaf_meta.n_blocks]
+            if not seg.any():
+                continue
+            arr = np.asarray(x).reshape(max(leaf_meta.rows, 1), -1)
+            for b in np.nonzero(seg)[0]:
+                lo, hi = b * br, min((b + 1) * br, leaf_meta.rows)
+                blk = arr[lo:hi]
+                jobs.append((leaf_meta.offset + int(b), blk))
+                nbytes += blk.nbytes
+        if background:
+            self._ensure_worker()
+            self._q.put(("write", jobs, step))
+        else:
+            self._do_write(jobs, step)
+        return nbytes
+
+    def _ensure_worker(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    def _drain(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            _, jobs, step = item
+            self._do_write(jobs, step)
+            self._q.task_done()
+
+    def _do_write(self, jobs, step: int) -> None:
+        for gid, blk in jobs:
+            np.save(self._block_path(gid), blk)
+        with open(self._manifest_path()) as f:
+            manifest = json.load(f)
+        for gid, _ in jobs:
+            manifest["saved_iter"][gid] = int(step)
+        with open(self._manifest_path(), "w") as f:
+            json.dump(manifest, f)
+
+    def flush(self) -> None:
+        """Block until all background writes have landed."""
+        if self._worker is not None and self._worker.is_alive():
+            self._q.join()
+
+    # -- read path ----------------------------------------------------------
+
+    def read_all(self) -> PyTree:
+        """Reassemble the full running checkpoint from disk (total-failure
+        recovery). Returns a flat list in leaf order; callers unflatten with
+        the partition's treedef."""
+        assert self.partition is not None
+        self.flush()
+        br = self.partition.block_rows
+        out = []
+        for leaf_meta in self.partition.leaves:
+            rows = max(leaf_meta.rows, 1)
+            arr = np.zeros((rows, leaf_meta.row_width), np.dtype(leaf_meta.dtype))
+            for b in range(leaf_meta.n_blocks):
+                p = self._block_path(leaf_meta.offset + b)
+                if os.path.exists(p):
+                    blk = np.load(p)
+                    arr[b * br:b * br + blk.shape[0]] = blk
+            out.append(arr.reshape(leaf_meta.shape))
+        return jax.tree_util.tree_unflatten(self.partition.treedef, out)
+
+    def saved_iters(self) -> np.ndarray:
+        with open(self._manifest_path()) as f:
+            return np.asarray(json.load(f)["saved_iter"], np.int32)

@@ -1,0 +1,47 @@
+"""Core SCAR library: iteration-cost theory + checkpoint/recovery strategies.
+
+The paper's contribution, expressed as composable JAX modules:
+
+- :mod:`repro.core.iteration_cost` — Theorem 3.2 / Appendix B bounds.
+- :mod:`repro.core.perturb`        — perturbation generators (random /
+  adversarial / reset), the objects the theory quantifies.
+- :mod:`repro.core.blocks`         — deterministic block partition of a
+  parameter PyTree (the "PS partitions" of the paper, adapted to SPMD).
+- :mod:`repro.core.norms`          — pluggable norms (L2, scaled TV).
+- :mod:`repro.core.checkpoint`     — running checkpoint + priority/round/
+  random selection (paper §4.2).
+- :mod:`repro.core.recovery`       — full vs partial recovery (paper §4.1).
+- :mod:`repro.core.controller`     — the fault-tolerance controller
+  (paper §4.3) driving save/detect/recover.
+"""
+from repro.core.policy import CheckpointPolicy, SelectionStrategy, RecoveryMode
+from repro.core.blocks import BlockPartition, partition_pytree
+from repro.core.checkpoint import RunningCheckpoint, init_running_checkpoint, save_step
+from repro.core.recovery import sample_failure_mask, apply_failure_and_recover
+from repro.core.controller import FTController
+from repro.core.iteration_cost import (
+    iteration_cost_bound,
+    delta_T,
+    estimate_contraction,
+    iterations_to_eps,
+    infinite_perturbation_bound,
+)
+
+__all__ = [
+    "CheckpointPolicy",
+    "SelectionStrategy",
+    "RecoveryMode",
+    "BlockPartition",
+    "partition_pytree",
+    "RunningCheckpoint",
+    "init_running_checkpoint",
+    "save_step",
+    "sample_failure_mask",
+    "apply_failure_and_recover",
+    "FTController",
+    "iteration_cost_bound",
+    "delta_T",
+    "estimate_contraction",
+    "iterations_to_eps",
+    "infinite_perturbation_bound",
+]

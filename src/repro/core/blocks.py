@@ -1,0 +1,216 @@
+"""Deterministic block partition of a parameter PyTree.
+
+The paper partitions model parameters across PS nodes "uniformly at random"
+at row granularity (§5.1: rows of the MLR matrix, rows of L / columns of R
+for MF, document-topic rows for LDA, layer/shard tensors for the CNN).
+
+In the SPMD adaptation, the unit of loss/checkpoint/priority is a **block**:
+``block_rows`` consecutive leading-dim rows of each leaf (TPU-aligned, 128 by
+default). A ``BlockPartition`` is the static (host-side) description of that
+blocking; every runtime operation over blocks (distance scoring, masked
+restore, failure injection) is a pure jittable function parameterized by it.
+
+Layout per leaf ``x`` of shape ``(d0, d1, ..., dn)``:
+  rows      = d0              (ndim ≥ 1; scalars are treated as 1 row)
+  row_width = prod(d1..dn)
+  n_blocks  = ceil(rows / block_rows)
+Blocks of a leaf are contiguous row groups; global block ids concatenate
+leaves in flatten order. Padding rows (to fill the last block) are zeros on
+both sides of any distance computation, so they never affect scores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafMeta:
+    name: str
+    shape: tuple[int, ...]
+    dtype: Any
+    rows: int
+    row_width: int
+    n_blocks: int
+    offset: int            # global block-id offset of this leaf's first block
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPartition:
+    block_rows: int
+    leaves: tuple[LeafMeta, ...]
+    treedef: Any
+
+    @property
+    def total_blocks(self) -> int:
+        # colocated leaves share offsets, so count by extent not by sum
+        return max(l.offset + l.n_blocks for l in self.leaves)
+
+    @property
+    def total_params(self) -> int:
+        return sum(int(np.prod(l.shape)) if l.shape else 1 for l in self.leaves)
+
+    def leaf_slices(self) -> list[tuple[int, int]]:
+        """[(start, end)] global block-id ranges per leaf, in flatten order."""
+        return [(l.offset, l.offset + l.n_blocks) for l in self.leaves]
+
+    def blocks_for_k(self, fraction: float) -> int:
+        """Number of blocks in a fraction-r checkpoint (ceil, >= 1)."""
+        return max(1, math.ceil(fraction * self.total_blocks))
+
+
+def _leaf_name(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def partition_pytree(params: PyTree, block_rows: int = 128,
+                     colocate: tuple = ()) -> BlockPartition:
+    """Build the static block partition for ``params``.
+
+    Works on concrete arrays or ShapeDtypeStructs (no data access).
+
+    ``colocate``: top-level keys whose subtrees share block ids with each
+    other (matching by the remaining path). This models the parameter-
+    server reality that optimizer state lives WITH its parameters — a
+    failed partition loses a weight block *and its Adam moments together*,
+    and partial recovery restores them together. Without colocation, a
+    partial restore could mix a new weight with stale moments (which makes
+    adaptive optimizers diverge — measured in EXPERIMENTS.md §Repro).
+    E.g. state = {"net": ..., "mu": ..., "nu": ...} with
+    colocate=("net", "mu", "nu"): mu's and nu's leaves reuse net's blocks.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = []
+    offset = 0
+    canonical_offsets: dict = {}
+    for path, x in flat:
+        shape = tuple(x.shape)
+        rows = shape[0] if len(shape) >= 1 else 1
+        row_width = int(np.prod(shape[1:])) if len(shape) >= 1 else 1
+        n_blocks = max(1, math.ceil(rows / block_rows))
+        name = _leaf_name(path)
+        leaf_offset = offset
+        if colocate and path and getattr(path[0], "key", None) in colocate:
+            canon = jax.tree_util.keystr(tuple(path[1:]))
+            if canon in canonical_offsets:
+                leaf_offset, prev_blocks = canonical_offsets[canon]
+                assert prev_blocks == n_blocks, (
+                    f"colocated leaf {name} has {n_blocks} blocks, "
+                    f"group has {prev_blocks}")
+            else:
+                canonical_offsets[canon] = (offset, n_blocks)
+                offset += n_blocks
+        else:
+            offset += n_blocks
+        leaves.append(LeafMeta(
+            name=name, shape=shape, dtype=x.dtype, rows=rows,
+            row_width=row_width, n_blocks=n_blocks, offset=leaf_offset))
+    return BlockPartition(block_rows=block_rows, leaves=tuple(leaves),
+                          treedef=treedef)
+
+
+# ---------------------------------------------------------------------------
+# Runtime (jittable) block ops
+# ---------------------------------------------------------------------------
+
+def leaf_block_view(x: jnp.ndarray, block_rows: int) -> jnp.ndarray:
+    """Reshape a leaf to (n_blocks, elems_per_block), zero-padded.
+
+    Single-block leaves (rows <= block_rows) are returned unpadded as
+    (1, rows·row_width) — padding a 2-row layer-stacked leaf out to 128
+    rows would be a 64× memory/compute blowup for zero benefit. Consumers
+    reduce within blocks, so per-leaf block widths may differ.
+    """
+    if x.ndim == 0:
+        x = x[None]
+    rows = x.shape[0]
+    row_width = int(np.prod(x.shape[1:])) if x.ndim > 1 else 1
+    flat = x.reshape(rows, row_width)
+    n_blocks = max(1, math.ceil(rows / block_rows))
+    if n_blocks == 1:
+        return flat.reshape(1, rows * row_width)
+    pad = n_blocks * block_rows - rows
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    return flat.reshape(n_blocks, block_rows * row_width)
+
+
+def split_global_mask(mask: jnp.ndarray, partition: BlockPartition) -> list[jnp.ndarray]:
+    """Split a (total_blocks,) vector into per-leaf (n_blocks,) segments."""
+    return [mask[l.offset:l.offset + l.n_blocks] for l in partition.leaves]
+
+
+def expand_block_mask(block_mask: jnp.ndarray, leaf: LeafMeta,
+                      block_rows: int) -> jnp.ndarray:
+    """(n_blocks,) bool -> bool array broadcastable to the leaf shape.
+
+    Expands over rows then broadcasts across trailing dims.
+    """
+    row_mask = jnp.repeat(block_mask, block_rows)[:leaf.rows]
+    if len(leaf.shape) == 0:
+        return row_mask[0]
+    return row_mask.reshape((leaf.rows,) + (1,) * (len(leaf.shape) - 1))
+
+
+def select_blocks(dst: PyTree, src: PyTree, global_mask: jnp.ndarray,
+                  partition: BlockPartition) -> PyTree:
+    """Per-block select: where mask is True take ``src``'s block, else ``dst``.
+
+    This is the primitive behind both partial recovery (dst=live params,
+    src=checkpoint, mask=lost blocks) and partial checkpoint save
+    (dst=checkpoint values, src=live params, mask=selected blocks).
+    """
+    dst_flat = jax.tree_util.tree_leaves(dst)
+    src_flat = jax.tree_util.tree_leaves(src)
+    masks = split_global_mask(global_mask, partition)
+    out = []
+    for d, s, m, leaf in zip(dst_flat, src_flat, masks, partition.leaves):
+        em = expand_block_mask(m, leaf, partition.block_rows)
+        out.append(jnp.where(em, s, d))
+    return jax.tree_util.tree_unflatten(partition.treedef, out)
+
+
+def block_scores(a: PyTree, b: PyTree, partition: BlockPartition,
+                 norm_fn: Callable[[jnp.ndarray, jnp.ndarray, LeafMeta], jnp.ndarray],
+                 ) -> jnp.ndarray:
+    """Per-block distance scores between two pytrees -> (total_blocks,) f32.
+
+    ``norm_fn(a_view, b_view, leaf)`` maps two (n_blocks, block_elems) views
+    to per-block scores; see :mod:`repro.core.norms`. Colocated leaves
+    (shared offsets) accumulate into the same slots.
+    """
+    a_flat = jax.tree_util.tree_leaves(a)
+    b_flat = jax.tree_util.tree_leaves(b)
+    out = jnp.zeros((partition.total_blocks,), jnp.float32)
+    for xa, xb, leaf in zip(a_flat, b_flat, partition.leaves):
+        va = leaf_block_view(xa.astype(jnp.float32), partition.block_rows)
+        vb = leaf_block_view(xb.astype(jnp.float32), partition.block_rows)
+        s = norm_fn(va, vb, leaf).astype(jnp.float32)
+        out = jax.lax.dynamic_update_slice(
+            out, jax.lax.dynamic_slice(out, (leaf.offset,),
+                                       (leaf.n_blocks,)) + s,
+            (leaf.offset,))
+    return out
+
+
+def masked_sq_norm(a: PyTree, b: PyTree, global_mask: jnp.ndarray,
+                   partition: BlockPartition) -> jnp.ndarray:
+    """||(a − b) restricted to masked blocks||² — the δ' of Theorem 4.1."""
+    def sq(va, vb, leaf):
+        return jnp.sum((va - vb) ** 2, axis=-1)
+    per_block = block_scores(a, b, partition, sq)
+    return jnp.sum(jnp.where(global_mask, per_block, 0.0))
+
+
+def tree_sq_norm(a: PyTree, b: PyTree) -> jnp.ndarray:
+    """||a − b||² over the whole tree — the δ of full recovery."""
+    diffs = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum((x.astype(jnp.float32) - y.astype(jnp.float32)) ** 2), a, b)
+    return jax.tree_util.tree_reduce(jnp.add, diffs, jnp.float32(0.0))

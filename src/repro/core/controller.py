@@ -1,0 +1,130 @@
+"""Fault-tolerance controller (paper §4.3, Figure 4).
+
+Host-side orchestrator that owns the running checkpoint and drives:
+
+1. *Checkpoint coordination* — every ``policy.partial_interval`` iterations,
+   score blocks (priority), update the in-memory running checkpoint
+   (jitted, device-resident), and mirror the saved blocks to persistent
+   storage. Training resumes as soon as the in-memory cache is updated;
+   the disk write is a background-able host callback (paper §4.3 step 4).
+2. *Recovery coordination* — on a detected failure (a lost block mask),
+   partially (or fully) restore from the running checkpoint. If the
+   in-memory replica itself was lost (total failure), reload from the
+   persistent store.
+
+The controller is deliberately thin: all numerics are pure functions from
+:mod:`repro.core.checkpoint` / :mod:`repro.core.recovery`, so it composes
+with any training loop (including the big-model SPMD trainer).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import BlockPartition, block_scores, partition_pytree
+from repro.core.checkpoint import (RunningCheckpoint, full_save,
+                                   init_running_checkpoint, save_step)
+from repro.core.norms import get_norm
+from repro.core.policy import CheckpointPolicy, RecoveryMode, SelectionStrategy
+from repro.core.recovery import apply_failure_and_recover, sample_failure_mask
+
+PyTree = Any
+
+
+class FTController:
+    """Checkpoint + recovery coordinator for one training job."""
+
+    def __init__(self, params: PyTree, policy: CheckpointPolicy, *,
+                 norm_aux: Optional[dict] = None,
+                 store: Optional[Any] = None,
+                 score_fn: Optional[Callable] = None,
+                 rng: Optional[jax.Array] = None,
+                 colocate: tuple = ()):
+        self.policy = policy
+        self.partition = partition_pytree(params, policy.block_rows,
+                                          colocate=colocate)
+        self.norm_fn = get_norm(policy.norm, aux=norm_aux,
+                                block_rows=policy.block_rows)
+        self.ckpt = init_running_checkpoint(params, self.partition)
+        self.store = store
+        self._score_fn = score_fn  # optional kernel-backed scorer
+        self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.stats = {"saves": 0, "recoveries": 0, "save_seconds": 0.0,
+                      "blocks_saved": 0, "bytes_mirrored": 0}
+        self._jit_save = jax.jit(partial(
+            save_step, policy=self.policy, partition=self.partition,
+            norm_fn=self.norm_fn))
+        if store is not None:
+            store.init(params, self.partition)
+
+    # -- checkpoint path ----------------------------------------------------
+
+    def should_checkpoint(self, step: int) -> bool:
+        interval = (self.policy.full_interval
+                    if self.policy.fraction >= 1.0
+                    else self.policy.partial_interval)
+        return step > 0 and step % interval == 0
+
+    def maybe_checkpoint(self, step: int, params: PyTree) -> bool:
+        if not self.should_checkpoint(step):
+            return False
+        self.checkpoint_now(step, params)
+        return True
+
+    def checkpoint_now(self, step: int, params: PyTree) -> jnp.ndarray:
+        """Update the running checkpoint; returns the saved block mask."""
+        t0 = time.perf_counter()
+        if self.policy.fraction >= 1.0 and \
+                self.policy.strategy != SelectionStrategy.PRIORITY:
+            self.ckpt = full_save(self.ckpt, params, jnp.int32(step))
+            mask = jnp.ones((self.partition.total_blocks,), bool)
+        else:
+            self._rng, sub = jax.random.split(self._rng)
+            scores = None
+            if self._score_fn is not None and \
+                    self.policy.strategy == SelectionStrategy.PRIORITY:
+                scores = self._score_fn(params, self.ckpt.values)
+            self.ckpt, mask = self._jit_save(self.ckpt, params,
+                                             jnp.int32(step), rng=sub,
+                                             scores=scores)
+        # block until the in-memory cache is consistent (paper: training may
+        # resume now), then mirror to disk
+        jax.block_until_ready(self.ckpt.values)
+        self.stats["saves"] += 1
+        self.stats["blocks_saved"] += int(jnp.sum(mask))
+        self.stats["save_seconds"] += time.perf_counter() - t0
+        if self.store is not None:
+            self.stats["bytes_mirrored"] += self.store.write_blocks(
+                mask, self.ckpt.values, step,
+                background=self.policy.async_persist)
+        return mask
+
+    # -- recovery path ------------------------------------------------------
+
+    def sample_failure(self, fraction: float) -> jnp.ndarray:
+        self._rng, sub = jax.random.split(self._rng)
+        return sample_failure_mask(sub, self.partition, fraction)
+
+    def on_failure(self, params: PyTree, lost_mask: jnp.ndarray,
+                   ) -> tuple[PyTree, dict]:
+        """Recover from a partial failure. Returns (params', diagnostics)."""
+        ckpt = self.ckpt
+        if self.store is not None and getattr(self.store, "must_reload", False):
+            values = self.store.read_all()
+            ckpt = RunningCheckpoint(values, ckpt.saved_iter, ckpt.rr_cursor)
+        recovered, info = apply_failure_and_recover(
+            params, ckpt, lost_mask, self.policy.recovery, self.partition)
+        self.stats["recoveries"] += 1
+        return recovered, {k: (float(v) if hasattr(v, "item") else v)
+                           for k, v in info.items()}
+
+    # -- analysis helpers ---------------------------------------------------
+
+    def block_drift(self, params: PyTree) -> jnp.ndarray:
+        """Per-block distance between live params and the running ckpt."""
+        return block_scores(params, self.ckpt.values, self.partition,
+                            self.norm_fn)

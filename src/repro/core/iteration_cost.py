@@ -1,0 +1,168 @@
+"""Iteration-cost theory (paper §3 and Appendix B).
+
+Implements, as plain JAX-compatible functions:
+
+- ``delta_T``                    — the time-discounted perturbation aggregate
+                                   ``Δ_T = Σ_{ℓ=0}^T c^{-ℓ} E||δ_ℓ||``.
+- ``iteration_cost_bound``       — Theorem 3.2:
+                                   ``ι ≤ log(1 + Δ_T/||x⁰−x*||) / log(1/c)``.
+- ``infinite_perturbation_bound``— Appendix B.1 (perturbation every step,
+                                   bounded by Δ): irreducible error
+                                   ``(c/(1−c))Δ`` and the adjusted cost bound.
+- ``estimate_contraction``       — empirical fit of the linear rate ``c``
+                                   from an observed error trajectory
+                                   (paper: "the value of c is determined
+                                   empirically").
+- ``iterations_to_eps``          — κ(·, ε) for a measured error trajectory:
+                                   first iteration index whose error is < ε
+                                   (used to *measure* iteration cost
+                                   empirically, ι = κ(y) − κ(x)).
+- ``sgd_iteration_bound``        — Appendix B.2 sublinear analogue with
+                                   a_k = Π(1−α_i): implicit-k bound solved
+                                   numerically.
+
+All functions are pure and operate on scalars / 1-D arrays so they can be
+used both inside jit (for on-the-fly predictive decisions, paper §7) and on
+the host for analysis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+def delta_T(delta_norms: Array, c: float) -> Array:
+    """Δ_T = Σ_{ℓ=0}^{T} c^{-ℓ} E||δ_ℓ|| (Theorem 3.2).
+
+    ``delta_norms[ℓ]`` is E||δ_ℓ|| for ℓ = 0..T. Perturbation-free steps
+    contribute 0, so sparse fault histories can be passed as dense vectors.
+
+    Computed in log-space-free stable form by factoring out c^{-T}:
+    Δ_T = c^{-T} Σ c^{T-ℓ}||δ_ℓ|| — avoids overflow of c^{-ℓ} for long
+    horizons when combined with the bound (which only needs Δ_T relative
+    to ||x⁰−x*||; callers comparing at iteration k should prefer
+    :func:`discounted_delta` below).
+    """
+    delta_norms = jnp.asarray(delta_norms)
+    T = delta_norms.shape[0] - 1
+    ell = jnp.arange(T + 1)
+    # c^{T-ℓ} is <= 1, then one overall factor c^{-T}.
+    weights = jnp.power(c, T - ell)
+    return jnp.power(c, -T) * jnp.sum(weights * delta_norms)
+
+
+def discounted_delta(delta_norms: Array, c: float, k: int) -> Array:
+    """c^k · Δ_T — the *absolute* residual contribution of perturbations at
+    iteration k ≥ T (numerically stable form of the Lemma A.1 second term)."""
+    delta_norms = jnp.asarray(delta_norms)
+    T = delta_norms.shape[0] - 1
+    ell = jnp.arange(T + 1)
+    return jnp.sum(jnp.power(c, k - ell) * delta_norms)
+
+
+def iteration_cost_bound(delta_norms: Array, c: float, x0_err: float) -> Array:
+    """Theorem 3.2: ι(δ, ε) ≤ log(1 + Δ_T/||x⁰−x*||) / log(1/c).
+
+    Note the bound is independent of ε (it cancels). ``x0_err`` is
+    ||x^{(0)} − x*||.
+    """
+    dT = delta_T(delta_norms, c)
+    return jnp.log1p(dT / x0_err) / jnp.log(1.0 / c)
+
+
+def single_perturbation_bound(delta_norm: float, c: float, T: int, x0_err: float) -> float:
+    """Specialization for one perturbation of size ||δ|| at iteration T
+    (the checkpoint-recovery case, Example 2.3): Δ_T = c^{-T}||δ||."""
+    dT = (c ** (-T)) * delta_norm
+    return float(math.log1p(dT / x0_err) / math.log(1.0 / c))
+
+
+def infinite_perturbation_bound(delta_bound: float, c: float, x0_err: float, eps: float) -> float:
+    """Appendix B.1: perturbations of size ≤ Δ in *every* iteration.
+
+    Returns the iteration-cost bound (14); ``float('inf')`` when ε is
+    below the irreducible error (c/(1−c))Δ or the bound is uninformative.
+    """
+    irreducible = (c / (1.0 - c)) * delta_bound
+    if eps <= irreducible or x0_err <= irreducible:
+        return float("inf")
+    num = 1.0 - irreducible / x0_err
+    den = 1.0 - irreducible / eps
+    return math.log(num / den) / math.log(1.0 / c)
+
+
+def irreducible_error(delta_bound: float, c: float) -> float:
+    """Appendix B.1 irreducible error (c/(1−c))·Δ."""
+    return (c / (1.0 - c)) * delta_bound
+
+
+def estimate_contraction(errors: Sequence[float], burn_in: int = 0) -> float:
+    """Fit the linear rate c from an error trajectory ||x^{(k)} − x*||.
+
+    Least-squares slope of log(err) vs k (geometric fit), ignoring the
+    first ``burn_in`` iterations and any non-positive/zero errors.
+    Clipped into (0, 1) exclusive — callers need log(1/c) > 0.
+    """
+    errs = np.asarray(errors, dtype=np.float64)[burn_in:]
+    mask = errs > 0
+    ks = np.arange(errs.shape[0], dtype=np.float64)[mask]
+    logs = np.log(errs[mask])
+    if ks.shape[0] < 2:
+        raise ValueError("need at least two positive error observations")
+    slope = np.polyfit(ks, logs, 1)[0]
+    c = float(np.exp(slope))
+    return min(max(c, 1e-9), 1.0 - 1e-9)
+
+
+def iterations_to_eps(errors: Sequence[float], eps: float) -> int:
+    """κ(a, ε): first iteration with error < ε, else len(errors) (∞-proxy)."""
+    errs = np.asarray(errors)
+    hits = np.nonzero(errs < eps)[0]
+    return int(hits[0]) if hits.size else int(errs.shape[0])
+
+
+def empirical_iteration_cost(perturbed_errors: Sequence[float],
+                             clean_errors: Sequence[float],
+                             eps: float) -> int:
+    """Measured ι = κ(y, ε) − κ(x, ε) from two error trajectories."""
+    return iterations_to_eps(perturbed_errors, eps) - iterations_to_eps(clean_errors, eps)
+
+
+def sgd_iteration_bound(delta_norms: Array,
+                        alpha0: float,
+                        G: float,
+                        x0_err: float,
+                        eps: float,
+                        max_k: int = 1_000_000) -> int:
+    """Appendix B.2: sublinear (SGD, α_k = α₀/k) analogue of Theorem 3.2.
+
+    Uses a_k = Π_{i=1..k}(1 − α_i) and the recursion
+    E||y^{(k)} − x*|| ≤ a_k [ ||x⁰−x*|| + Σ_ℓ a_ℓ^{-1}(E||δ_ℓ|| + α_ℓ² G²) ],
+    solving for the smallest k meeting ε numerically. Returns ``max_k`` if
+    unreachable within the horizon.
+    """
+    deltas = np.asarray(delta_norms, dtype=np.float64)
+    T = deltas.shape[0]
+    a = 1.0
+    # accumulate the bracketed constant over the perturbation horizon
+    bracket = float(x0_err)
+    a_hist = []
+    for k in range(1, T + 1):
+        alpha = min(alpha0 / k, 0.999)
+        a *= (1.0 - alpha)
+        a_hist.append(a)
+        bracket += (deltas[k - 1] + alpha * alpha * G * G) / a
+    # after T: no more perturbations; error ≤ a_k * bracket
+    k = T
+    while k < max_k:
+        if a * bracket < eps:
+            return k
+        k += 1
+        alpha = min(alpha0 / k, 0.999)
+        a *= (1.0 - alpha)
+    return max_k

@@ -1,0 +1,89 @@
+"""Pluggable block norms for priority scoring (paper §4.2 + Appendix C).
+
+A norm function has signature ``(a_view, b_view, leaf) -> (n_blocks,)`` where
+the views are ``(n_blocks, block_rows * row_width)`` float32 arrays produced
+by :func:`repro.core.blocks.leaf_block_view`.
+
+- ``sq_l2``       — squared L2 distance per block (default; what Theorems
+                    4.1/4.2 measure).
+- ``scaled_tv``   — scaled total-variation for distribution-valued rows
+                    (paper Appendix C, LDA): per-row TV = ½ Σ|p − q| scaled
+                    by a per-row weight (document length), summed per block.
+                    Falls back to uniform weights when none registered.
+
+Norms are registered by name so ``CheckpointPolicy.norm`` stays a plain
+string (config-system friendly). Per-leaf auxiliary data (e.g. document
+lengths) is attached via ``register_aux``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.core.blocks import LeafMeta
+
+NormFn = Callable[[jnp.ndarray, jnp.ndarray, LeafMeta], jnp.ndarray]
+
+_REGISTRY: Dict[str, Callable[..., NormFn]] = {}
+
+
+def register_norm(name: str):
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def get_norm(name: str, aux=None, block_rows: int = 128) -> NormFn:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown norm {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](aux=aux, block_rows=block_rows)
+
+
+@register_norm("l2")
+def _sq_l2_factory(aux=None, block_rows: int = 128) -> NormFn:
+    def sq_l2(a, b, leaf):
+        return jnp.sum((a - b) ** 2, axis=-1)
+    return sq_l2
+
+
+@register_norm("l1")
+def _l1_factory(aux=None, block_rows: int = 128) -> NormFn:
+    def l1(a, b, leaf):
+        return jnp.sum(jnp.abs(a - b), axis=-1)
+    return l1
+
+
+@register_norm("linf")
+def _linf_factory(aux=None, block_rows: int = 128) -> NormFn:
+    def linf(a, b, leaf):
+        return jnp.max(jnp.abs(a - b), axis=-1)
+    return linf
+
+
+@register_norm("scaled_tv")
+def _scaled_tv_factory(aux=None, block_rows: int = 128) -> NormFn:
+    """aux: dict leaf-name -> (rows,) weight vector (document lengths).
+
+    Rows of the leaf are probability distributions; TV distance per row is
+    ½ Σ_t |p_t − q_t|, weighted and summed within each block. The weighting
+    keeps long documents from being under-prioritized (paper Appendix C).
+    """
+    aux = aux or {}
+
+    def scaled_tv(a, b, leaf):
+        n_blocks, block_elems = a.shape
+        width = leaf.row_width
+        ar = a.reshape(n_blocks, -1, width)
+        br = b.reshape(n_blocks, -1, width)
+        tv = 0.5 * jnp.sum(jnp.abs(ar - br), axis=-1)   # (n_blocks, block_rows)
+        w = aux.get(leaf.name)
+        if w is not None:
+            w = jnp.asarray(w, jnp.float32)
+            pad = n_blocks * tv.shape[1] - leaf.rows
+            if pad:
+                w = jnp.pad(w, (0, pad))
+            tv = tv * w.reshape(n_blocks, tv.shape[1])
+        return jnp.sum(tv, axis=-1)
+    return scaled_tv

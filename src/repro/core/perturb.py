@@ -1,0 +1,81 @@
+"""Perturbation generators (paper §5.2 experiment types).
+
+Three families, matching Figures 3/5/6:
+
+- ``random``      — isotropic Gaussian of a target norm (Fig. 3a, 5a).
+- ``adversarial`` — opposite the direction of convergence, i.e. pointing
+                    away from x* (Fig. 5b): δ = s · (x − x*)/||x − x*||.
+- ``reset``       — reset a uniformly-random fraction of parameters back to
+                    their initial values (Fig. 6) — the realistic analogue
+                    of partial checkpoint recovery.
+
+Each generator maps a parameter PyTree to a *perturbed* PyTree and also
+returns ||δ|| so experiments can plug it directly into the Theorem 3.2
+bound.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import BlockPartition, select_blocks, tree_sq_norm
+
+PyTree = Any
+
+
+def _tree_random_like(rng: jax.Array, tree: PyTree) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(rng, len(leaves))
+    out = [jax.random.normal(k, x.shape, jnp.float32).astype(x.dtype)
+           for k, x in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _tree_scale(tree: PyTree, s) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: (x.astype(jnp.float32) * s).astype(x.dtype), tree)
+
+
+def _tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x, y: x + y.astype(x.dtype), a, b)
+
+
+def _tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x, y: x - y.astype(x.dtype), a, b)
+
+
+def random_perturbation(rng: jax.Array, params: PyTree, norm: float,
+                        ) -> tuple[PyTree, jnp.ndarray]:
+    """Gaussian direction scaled to ``norm``. Returns (perturbed, ||δ||)."""
+    noise = _tree_random_like(rng, params)
+    nsq = tree_sq_norm(noise, _tree_scale(noise, 0.0))
+    scale = norm / jnp.sqrt(nsq + 1e-30)
+    delta = _tree_scale(noise, scale)
+    return _tree_add(params, delta), jnp.asarray(norm, jnp.float32)
+
+
+def adversarial_perturbation(params: PyTree, x_star: PyTree, norm: float,
+                             ) -> tuple[PyTree, jnp.ndarray]:
+    """δ points away from the optimum: δ = s·(x − x*)/||x − x*|| (Fig. 5b)."""
+    direction = _tree_sub(params, x_star)
+    dsq = tree_sq_norm(params, x_star)
+    scale = norm / jnp.sqrt(dsq + 1e-30)
+    delta = _tree_scale(direction, scale)
+    return _tree_add(params, delta), jnp.asarray(norm, jnp.float32)
+
+
+def reset_perturbation(rng: jax.Array, params: PyTree, x0: PyTree,
+                       fraction: float, partition: BlockPartition,
+                       ) -> tuple[PyTree, jnp.ndarray]:
+    """Reset a random fraction of parameter blocks to initial values (Fig. 6).
+
+    Returns (perturbed, ||δ||).
+    """
+    total = partition.total_blocks
+    k = max(1, round(fraction * total))
+    idx = jax.random.choice(rng, total, (min(k, total),), replace=False)
+    mask = jnp.zeros((total,), bool).at[idx].set(True)
+    perturbed = select_blocks(params, x0, mask, partition)
+    dn = jnp.sqrt(tree_sq_norm(perturbed, params))
+    return perturbed, dn

@@ -1,0 +1,7 @@
+"""Deterministic synthetic data pipeline (offline container — no downloads)."""
+from repro.data.synthetic import (lm_batch, input_specs, classification_data,
+                                  ratings_matrix, lda_corpus, image_batch)
+from repro.data.pipeline import ShardedLMDataset
+
+__all__ = ["lm_batch", "input_specs", "classification_data", "ratings_matrix",
+           "lda_corpus", "image_batch", "ShardedLMDataset"]

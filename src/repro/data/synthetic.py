@@ -1,0 +1,142 @@
+"""Synthetic datasets + ShapeDtypeStruct input specs.
+
+Two roles:
+
+1. **Concrete batches** for smoke tests / examples / the classic-model
+   reproduction (offline container: synthetic stand-ins for MNIST,
+   CoverType, MovieLens, Jester, 20news, Reuters — sizes matched to the
+   paper's parameter-count regime).
+2. **``input_specs``** — ShapeDtypeStruct stand-ins for every model input
+   of a given (arch × input shape), used by the multi-pod dry-run (no
+   allocation).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# LM batches (assigned architectures)
+# ---------------------------------------------------------------------------
+
+def _lm_batch_struct(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    d = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        d["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.vit_dim), jnp.bfloat16
+            if cfg.dtype == "bfloat16" else jnp.float32)
+    if cfg.family == "audio":
+        d["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16
+            if cfg.dtype == "bfloat16" else jnp.float32)
+    return d
+
+
+def lm_batch(rng: jax.Array, cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Concrete random batch matching ``input_specs`` (smoke tests)."""
+    ks = jax.random.split(rng, 3)
+    specs = _lm_batch_struct(cfg, batch, seq)
+    out = {
+        "tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab, jnp.int32),
+    }
+    for key in ("patches", "frames"):
+        if key in specs:
+            s = specs[key]
+            out[key] = jax.random.normal(ks[2], s.shape, jnp.float32).astype(s.dtype)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct inputs for a named input shape (dry-run)."""
+    shapes = {
+        "train_4k": dict(seq=4096, batch=256, kind="train"),
+        "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+        "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+        "long_500k": dict(seq=524288, batch=1, kind="decode"),
+        # reduced shapes for CPU-side integration tests
+        "smoke_train": dict(seq=64, batch=2, kind="train"),
+        "smoke_decode": dict(seq=64, batch=2, kind="decode"),
+    }
+    s = shapes[shape_name]
+    if s["kind"] in ("train", "prefill"):
+        return _lm_batch_struct(cfg, s["batch"], s["seq"])
+    # decode: one new token
+    return {"tokens": jax.ShapeDtypeStruct((s["batch"], 1), jnp.int32)}
+
+
+def shape_params(shape_name: str) -> dict:
+    return {
+        "train_4k": dict(seq=4096, batch=256, kind="train"),
+        "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+        "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+        "long_500k": dict(seq=524288, batch=1, kind="decode"),
+        "smoke_train": dict(seq=64, batch=2, kind="train"),
+        "smoke_decode": dict(seq=64, batch=2, kind="decode"),
+    }[shape_name]
+
+
+# ---------------------------------------------------------------------------
+# classic-model datasets (paper §5.1 stand-ins)
+# ---------------------------------------------------------------------------
+
+def classification_data(rng: np.random.Generator, n: int = 2000, dim: int = 784,
+                        n_classes: int = 10, sep: float = 2.0):
+    """Gaussian-cluster classification (MNIST/CoverType stand-in)."""
+    centers = rng.normal(0, sep, (n_classes, dim))
+    y = rng.integers(0, n_classes, n)
+    x = centers[y] + rng.normal(0, 1.0, (n, dim))
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+def ratings_matrix(rng: np.random.Generator, m: int = 600, n: int = 900,
+                   rank: int = 5, noise: float = 0.05, density: float = 0.1):
+    """Low-rank ratings (MovieLens/Jester stand-in). Returns (R, mask)."""
+    L = rng.normal(0, 1.0, (m, rank))
+    R = rng.normal(0, 1.0, (rank, n))
+    full = L @ R + noise * rng.normal(0, 1.0, (m, n))
+    mask = rng.random((m, n)) < density
+    return (full * mask).astype(np.float32), mask.astype(np.float32)
+
+
+def lda_corpus(rng: np.random.Generator, n_docs: int = 200, vocab: int = 500,
+               n_topics: int = 10, doc_len_mean: int = 80):
+    """Documents sampled from the LDA generative model (20news stand-in).
+
+    Returns (tokens (n_docs, max_len) int32 padded with -1, doc_lens).
+    """
+    alpha, beta = 0.5, 0.1
+    topic_word = rng.dirichlet([beta] * vocab, n_topics)
+    doc_lens = np.maximum(10, rng.poisson(doc_len_mean, n_docs))
+    max_len = int(doc_lens.max())
+    tokens = np.full((n_docs, max_len), -1, np.int32)
+    for d in range(n_docs):
+        theta = rng.dirichlet([alpha] * n_topics)
+        zs = rng.choice(n_topics, doc_lens[d], p=theta)
+        for i, z in enumerate(zs):
+            tokens[d, i] = rng.choice(vocab, p=topic_word[z])
+    return tokens, doc_lens.astype(np.int32)
+
+
+def image_batch(rng: np.random.Generator, n: int = 512, size: int = 28,
+                n_classes: int = 10):
+    """Class-dependent structured images (MNIST stand-in for the CNN)."""
+    y = rng.integers(0, n_classes, n)
+    x = rng.normal(0, 0.3, (n, size, size, 1)).astype(np.float32)
+    xs = np.linspace(-1, 1, size)
+    xx, yy = np.meshgrid(xs, xs)
+    for c in range(n_classes):
+        pat = np.sin((c + 1) * np.pi * xx) * np.cos((c + 1) * np.pi * yy)
+        x[y == c] += pat[None, :, :, None].astype(np.float32)
+    return x, y.astype(np.int32)

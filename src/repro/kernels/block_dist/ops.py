@@ -1,0 +1,58 @@
+"""jit'd wrapper: PyTree-level priority scoring backed by the Pallas kernel.
+
+``tree_block_scores`` is drop-in for :func:`repro.core.blocks.block_scores`
+with the L2 norm, wired into FTController via ``score_fn``. On CPU it runs
+the kernel in interpret mode (correctness); on TPU it compiles natively.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import BlockPartition, leaf_block_view
+from repro.kernels.block_dist.kernel import block_dist_pallas
+from repro.kernels.block_dist.ref import block_dist_ref
+
+PyTree = Any
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def block_dist(a: jnp.ndarray, b: jnp.ndarray,
+               use_pallas: bool = True,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """(n_blocks, E) pair → (n_blocks,) squared distances."""
+    if not use_pallas:
+        return block_dist_ref(a, b)
+    if interpret is None:
+        interpret = not _is_tpu()
+    return block_dist_pallas(a, b, interpret=interpret)
+
+
+def tree_block_scores(params: PyTree, ckpt_values: PyTree,
+                      partition: BlockPartition,
+                      use_pallas: bool = True,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Per-block squared distances over a whole PyTree -> (total_blocks,)."""
+    a_flat = jax.tree_util.tree_leaves(params)
+    b_flat = jax.tree_util.tree_leaves(ckpt_values)
+    scores = []
+    for xa, xb, leaf in zip(a_flat, b_flat, partition.leaves):
+        va = leaf_block_view(xa.astype(jnp.float32), partition.block_rows)
+        vb = leaf_block_view(xb.astype(jnp.float32), partition.block_rows)
+        scores.append(block_dist(va, vb, use_pallas=use_pallas,
+                                 interpret=interpret))
+    return jnp.concatenate(scores) if len(scores) > 1 else scores[0]
+
+
+def make_score_fn(partition: BlockPartition, interpret: bool | None = None):
+    """score_fn for FTController(score_fn=...) — kernel-backed priority."""
+    def score(params, ckpt_values):
+        return tree_block_scores(params, ckpt_values, partition,
+                                 interpret=interpret)
+    return score

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the block_dist kernel."""
+import jax.numpy as jnp
+
+
+def block_dist_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a, b: (n_blocks, E) → (n_blocks,) f32 squared L2 distances."""
+    d = a.astype(jnp.float32) - b.astype(jnp.float32)
+    return jnp.sum(d * d, axis=1)

@@ -1,0 +1,49 @@
+"""jit'd wrapper: PyTree-level partial restore backed by the Pallas kernel.
+
+Drop-in for :func:`repro.core.blocks.select_blocks` (dst=live params,
+src=checkpoint, mask=lost blocks).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import BlockPartition, leaf_block_view, split_global_mask
+from repro.kernels.masked_restore.kernel import masked_restore_pallas
+from repro.kernels.masked_restore.ref import masked_restore_ref
+
+PyTree = Any
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def masked_restore(dst: jnp.ndarray, src: jnp.ndarray, mask: jnp.ndarray,
+                   use_pallas: bool = True,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    if not use_pallas:
+        return masked_restore_ref(dst, src, mask)
+    if interpret is None:
+        interpret = not _is_tpu()
+    return masked_restore_pallas(dst, src, mask, interpret=interpret)
+
+
+def tree_masked_restore(dst: PyTree, src: PyTree, global_mask: jnp.ndarray,
+                        partition: BlockPartition,
+                        interpret: bool | None = None) -> PyTree:
+    """select_blocks equivalent, kernel-backed."""
+    dst_flat = jax.tree_util.tree_leaves(dst)
+    src_flat = jax.tree_util.tree_leaves(src)
+    masks = split_global_mask(global_mask, partition)
+    out = []
+    for d, s, m, leaf in zip(dst_flat, src_flat, masks, partition.leaves):
+        dv = leaf_block_view(d, partition.block_rows)
+        sv = leaf_block_view(s, partition.block_rows)
+        rv = masked_restore(dv, sv, m, interpret=interpret)
+        rows = max(leaf.rows, 1)
+        flat = rv.reshape(-1, leaf.row_width)[:rows]
+        out.append(flat.reshape(leaf.shape).astype(d.dtype))
+    return jax.tree_util.tree_unflatten(partition.treedef, out)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the masked_restore kernel."""
+import jax.numpy as jnp
+
+
+def masked_restore_ref(dst: jnp.ndarray, src: jnp.ndarray,
+                       mask: jnp.ndarray) -> jnp.ndarray:
+    """out[b] = src[b] if mask[b] else dst[b]."""
+    return jnp.where(mask[:, None], src, dst)

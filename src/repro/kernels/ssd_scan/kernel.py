@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk dual form [arXiv:2405.21060].
+
+The SSD algorithm splits the selective-state-space recurrence into
+(a) an O(Q²) *intra-chunk* quadratic (attention-like) matmul form and
+(b) an O(nc) inter-chunk state recurrence. (a) dominates FLOPs and maps
+onto the MXU; this kernel computes, per (batch, chunk, head) grid cell:
+
+    cum     = cumsum(dt·A)                                   (Q,)
+    scores  = C Bᵀ                                           (Q,Q)  MXU
+    M       = tril(exp(cum_i − cum_j)) ⊙ scores ⊙ dt_j       (Q,Q)
+    y_intra = M x                                            (Q,P)  MXU
+    w       = exp(cum_Q − cum) ⊙ dt                          (Q,)
+    state   = Bᵀ (x ⊙ w)                                     (N,P)  MXU
+
+Q is the SSD chunk (128 → MXU-aligned); the cheap inter-chunk recurrence
+and the rank-1 y_inter correction stay in jnp (see ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_intra_kernel(la_ref, dt_ref, x_ref, b_ref, c_ref,
+                      y_ref, state_ref):
+    la = la_ref[...].reshape(la_ref.shape[-2])          # (Q,)
+    dt = dt_ref[...].reshape(dt_ref.shape[-2])          # (Q,)
+    Q = la.shape[0]
+    x = x_ref[...].reshape(Q, x_ref.shape[-1])          # (Q, P)
+    Bm = b_ref[...].reshape(Q, b_ref.shape[-1])         # (Q, N)
+    Cm = c_ref[...].reshape(Q, c_ref.shape[-1])         # (Q, N)
+
+    cum = jnp.cumsum(la)                                 # (Q,)
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)
+    decay = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    causal = ii >= jj
+    M = jnp.where(causal, jnp.exp(decay), 0.0) * scores * dt[None, :]
+    y = jnp.dot(M, x, preferred_element_type=jnp.float32)
+    w = jnp.exp(cum[-1] - cum) * dt
+    state = jnp.dot(Bm.T, x * w[:, None],
+                    preferred_element_type=jnp.float32)  # (N, P)
+    y_ref[...] = y.reshape(y_ref.shape)
+    state_ref[...] = state.reshape(state_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_pallas(la, dt, x, Bm, Cm, interpret: bool = False):
+    """Intra-chunk SSD.
+
+    la, dt: (B, nc, Q, H); x: (B, nc, Q, H, P); Bm, Cm: (B, nc, Q, N).
+    Returns (y_intra (B, nc, Q, H, P), chunk_state (B, nc, H, N, P)).
+    """
+    B, nc, Q, H = la.shape
+    P = x.shape[-1]
+    N = Bm.shape[-1]
+    grid = (B, nc, H)
+    y, state = pl.pallas_call(
+        _ssd_intra_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, c, h: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(la, dt, x, Bm, Cm)
+    return y, state

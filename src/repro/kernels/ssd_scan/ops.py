@@ -1,0 +1,74 @@
+"""jit'd wrapper: full SSD scan with kernel-backed intra-chunk compute.
+
+``ssd_chunked_kernel`` matches :func:`repro.models.ssm.ssd_chunked`
+(the pure-jnp reference the models use): kernel for the quadratic part,
+jnp for the O(nc) inter-chunk recurrence + rank-1 correction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_pallas
+from repro.kernels.ssd_scan.ref import ssd_intra_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd_intra(la, dt, x, Bm, Cm, use_pallas: bool = True,
+              interpret: bool | None = None):
+    if not use_pallas:
+        return ssd_intra_ref(la, dt, x, Bm, Cm)
+    if interpret is None:
+        interpret = not _is_tpu()
+    return ssd_intra_pallas(la, dt, x, Bm, Cm, interpret=interpret)
+
+
+def ssd_chunked_kernel(x, dt, A, Bm, Cm, chunk: int, h0=None,
+                       use_pallas: bool = True,
+                       interpret: bool | None = None):
+    """Full SSD scan. Same contract as models.ssm.ssd_chunked:
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm, Cm: (B,S,N)
+    -> (y (B,S,H,P), h_final (B,H,P,N))
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    assert nc * Q == S
+
+    la = (dt * A).reshape(Bsz, nc, Q, H)
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    y_intra, chunk_state = ssd_intra(la, dtc, xc, Bc, Cc,
+                                     use_pallas=use_pallas,
+                                     interpret=interpret)
+    # chunk_state from kernel: (B, nc, H, N, P) -> match (B, nc, H, P, N)
+    chunk_state = jnp.swapaxes(chunk_state, -1, -2)
+
+    cum = jnp.cumsum(la, axis=2)
+    seg_total = cum[:, :, -1]                                # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def body(h, xs):
+        seg, st = xs
+        h_out = h
+        h = h * jnp.exp(seg)[:, :, None, None] + st
+        return h, h_out
+
+    h_final, h_prev = jax.lax.scan(
+        body, h0, (jnp.moveaxis(seg_total, 1, 0),
+                   jnp.moveaxis(chunk_state, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                      # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Cc, h_prev) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, h_final

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the ssd_scan intra-chunk kernel."""
+import jax.numpy as jnp
+
+
+def ssd_intra_ref(la, dt, x, Bm, Cm):
+    """Same contract as ssd_intra_pallas.
+
+    la, dt: (B, nc, Q, H); x: (B, nc, Q, H, P); Bm, Cm: (B, nc, Q, N).
+    Returns (y_intra (B, nc, Q, H, P), chunk_state (B, nc, H, N, P)).
+    """
+    Q = la.shape[2]
+    cum = jnp.cumsum(la, axis=2)                               # (B,nc,Q,H)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)             # (B,nc,Q,Q)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0) \
+        * scores[..., None] * dt[:, :, None, :, :]
+    y = jnp.einsum("bcijh,bcjhp->bcihp", M, x)
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dt                  # (B,nc,Q,H)
+    state = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", w, Bm, x)
+    return y, state

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: sliding-window (banded) flash attention.
+
+The sub-quadratic attention used by the dense archs' long_500k variant.
+Standard flash-attention tiling adapted to a causal band of width W:
+
+- grid = (B·Hk, nq, nspan): for query chunk i only the kv chunks that can
+  intersect the band [qpos − W, qpos] are visited — nspan =
+  ⌈(W + QC)/KC⌉ + 1 blocks, *independent of sequence length*.
+- online softmax state (m, l, acc) lives in VMEM scratch across the j
+  sweep; the output block is written on the final j step.
+- the kv block index is computed in the index_map (clamped so padding
+  blocks resolve to block 0 and are masked out by position arithmetic
+  inside the kernel).
+
+GQA: queries are pre-grouped to (B·Hk, G, S, Dh); K/V are (B·Hk, S, Dh).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kv_start_block(i, window: int, q_chunk: int, kv_chunk: int, nk: int,
+                    nspan: int):
+    """First kv block visible to q chunk i (block units, clamped)."""
+    lo = (i * q_chunk - window) // kv_chunk
+    lo = jnp.maximum(lo, 0)
+    return jnp.minimum(lo, jnp.maximum(nk - nspan, 0))
+
+
+def _sw_attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                    window: int, q_chunk: int, kv_chunk: int, nk: int,
+                    nspan: int, scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions of this tile
+    kb = _kv_start_block(i, window, q_chunk, kv_chunk, nk, nspan) + j
+    qpos = i * q_chunk + jax.lax.broadcasted_iota(
+        jnp.int32, (q_chunk, kv_chunk), 0)
+    kpos = kb * kv_chunk + jax.lax.broadcasted_iota(
+        jnp.int32, (q_chunk, kv_chunk), 1)
+    mask = (kpos <= qpos) & (qpos - kpos < window)
+
+    q = q_ref[...].reshape(-1, q_ref.shape[-1]).astype(jnp.float32)  # (G*QC, Dh)
+    k = k_ref[...].reshape(kv_chunk, -1).astype(jnp.float32)         # (KC, Dh)
+    v = v_ref[...].reshape(kv_chunk, -1).astype(jnp.float32)
+    G = q.shape[0] // q_chunk
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G*QC, KC)
+    big_mask = jnp.tile(mask, (G, 1))
+    s = jnp.where(big_mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # (G*QC, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(big_mask, p, 0.0)
+    r = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...] * r + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * r + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == nspan - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "q_chunk", "kv_chunk",
+                                    "interpret"))
+def sw_attention_pallas(q, k, v, *, window: int, q_chunk: int = 128,
+                        kv_chunk: int = 128,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Banded causal attention.
+
+    q: (BH, G, S, Dh); k, v: (BH, S, Dh). Returns (BH, G, S, Dh) f32.
+    """
+    BH, G, S, Dh = q.shape
+    scale = 1.0 / math.sqrt(Dh)
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    nq = -(-S // q_chunk)
+    nk = -(-S // kv_chunk)
+    nspan = min(nk, -(-(window + q_chunk) // kv_chunk) + 1)
+    pad = nq * q_chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+
+    kernel = functools.partial(
+        _sw_attn_kernel, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        nk=nk, nspan=nspan, scale=scale)
+
+    def kv_index(b, i, j):
+        return (b, _kv_start_block(i, window, q_chunk, kv_chunk, nk, nspan) + j, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nspan),
+        in_specs=[
+            pl.BlockSpec((1, G, q_chunk, Dh), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, kv_chunk, Dh), kv_index),
+            pl.BlockSpec((1, kv_chunk, Dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, G, q_chunk, Dh), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G * q_chunk, 1), jnp.float32),
+            pltpu.VMEM((G * q_chunk, 1), jnp.float32),
+            pltpu.VMEM((G * q_chunk, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S]

@@ -1,0 +1,37 @@
+"""jit'd wrapper: model-layout sliding-window attention.
+
+Accepts the model's (B, S, Hq, Dh) / (B, S, Hk, Dh) layout, regroups for
+GQA, and dispatches to the Pallas kernel (TPU) or the jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sw_attention.kernel import sw_attention_pallas
+from repro.kernels.sw_attention.ref import sw_attention_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sw_attention(q, k, v, *, window: int, q_chunk: int = 128,
+                 kv_chunk: int = 128, use_pallas: bool = True,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """q: (B, S, Hq, Dh); k, v: (B, S, Hk, Dh) -> (B, S, Hq, Dh)."""
+    B, S, Hq, Dh = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    qg = q.transpose(0, 2, 1, 3).reshape(B * Hk, G, S, Dh)
+    kg = k.transpose(0, 2, 1, 3).reshape(B * Hk, S, Dh)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * Hk, S, Dh)
+    if use_pallas:
+        if interpret is None:
+            interpret = not _is_tpu()
+        o = sw_attention_pallas(qg, kg, vg, window=window, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk, interpret=interpret)
+    else:
+        o = sw_attention_ref(qg, kg, vg, window=window)
+    o = o.reshape(B, Hk, G, S, Dh).transpose(0, 3, 1, 2, 4)
+    return o.reshape(B, S, Hq, Dh).astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the sliding-window attention kernel."""
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sw_attention_ref(q, k, v, *, window: int) -> jnp.ndarray:
+    """Banded causal attention (materializes (S, S) — oracle only).
+
+    q: (BH, G, S, Dh); k, v: (BH, S, Dh). Returns (BH, G, S, Dh) f32.
+    """
+    BH, G, S, Dh = q.shape
+    scale = 1.0 / math.sqrt(Dh)
+    s = jnp.einsum("bgqd,bkd->bgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = (kpos <= qpos) & (qpos - kpos < window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bgqk,bkd->bgqd", p, v.astype(jnp.float32))

@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+MUST be run as its own process (``python -m repro.launch.dryrun``) — the
+XLA_FLAGS line above must execute before any other jax import in the
+process, which is why it is the first statement of this file.
+
+For every combination this script:
+
+1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+2. constructs ShapeDtypeStruct stand-ins for params / optimizer state /
+   serving caches / input batch (``jax.eval_shape`` — no allocation),
+3. lowers + compiles the appropriate step function
+   (train_step for train_4k, prefill for prefill_32k, decode_step for
+   decode_32k & long_500k),
+4. records ``memory_analysis()`` (fits-per-device proof),
+   ``cost_analysis()`` (FLOPs/bytes for §Roofline) and the collective
+   bytes parsed from the compiled HLO.
+
+Results stream to stdout and are appended as JSON to
+``results/dryrun/<arch>__<shape>__<mesh>.json`` for the roofline report.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_configs
+from repro.data.synthetic import input_specs, shape_params
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.models.api import serve_cache_len
+from repro.optim.optimizers import adamw
+from repro.sharding.partition import (batch_partition_specs, make_dist_ctx,
+                                      named_shardings, param_partition_specs,
+                                      state_partition_specs)
+from repro.training.train_state import TrainState
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+# long_500k needs a sub-quadratic serve path (see DESIGN.md):
+#  - ssm / hybrid: recurrent state — native
+#  - dense / moe / vlm: sliding-window ring cache variant (opt-in)
+#  - audio (whisper): SKIPPED — 30 s enc-dec format, noted in DESIGN.md
+def applicable(cfg, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k":
+        if cfg.family == "audio":
+            return False, "enc-dec 30s format: 500k decode out of family (DESIGN.md)"
+        if cfg.family in ("dense", "moe", "vlm") and not cfg.sliding_window:
+            return False, "full attention is quadratic at 500k"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# HLO collective-bytes accounting
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shapes_bytes(type_str: str) -> int:
+    """Sum bytes over all array types in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-kind output bytes of every collective in the compiled HLO.
+
+    Uses each collective instruction's *result* shape (bytes that cross
+    the network per device, modulo algorithm factors — a consistent,
+    comparable accounting for the roofline's collective term).
+    """
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"^(?:ROOT )?[%\w.\-]+ = (.+?) (\S+)\(", ls)
+        if not m:
+            continue
+        type_str, opname = m.groups()
+        for kind in _COLLECTIVES:
+            if opname.startswith(kind):
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += _shapes_bytes(type_str)
+                break
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# lowering per shape kind
+# ---------------------------------------------------------------------------
+
+def lower_combination(arch: str, shape: str, mesh, *, window_for_long=True):
+    """Returns (lowered, meta). Raises on sharding/compile errors."""
+    cfg = get_config(arch)
+    sp = shape_params(shape)
+    ctx = make_dist_ctx(mesh, batch_shardable=(sp["batch"] >= 1 and
+                                               sp["batch"] % _dp_total(mesh) == 0))
+    if cfg.moe_no_fsdp:
+        ctx = dataclasses.replace(ctx, expert_fsdp=False)
+    ops = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+
+    p_shape = jax.eval_shape(lambda: ops.init_params(rng, cfg))
+    p_shard = named_shardings(p_shape, ctx)
+
+    batch_struct = input_specs(cfg, shape)
+    b_specs = batch_partition_specs(batch_struct, ctx)
+    b_shard = jax.tree_util.tree_map(
+        lambda s: jax.NamedSharding(mesh, s), b_specs,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+
+    if sp["kind"] == "train":
+        optimizer = adamw(3e-4, moment_dtype=jnp.dtype(cfg.opt_moment_dtype))
+        state_shape = jax.eval_shape(
+            lambda p: TrainState.create(p, optimizer), p_shape)
+        # opt-state moments mirror param sharding; scalars replicated
+        ps = param_partition_specs(p_shape, ctx)
+
+        def opt_specs(tree):
+            return jax.tree_util.tree_map(
+                lambda leaf_spec: leaf_spec, ps)
+
+        state_shardings = TrainState(
+            params=p_shard,
+            opt_state=type(state_shape.opt_state)(
+                step=jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                mu=jax.tree_util.tree_map(
+                    lambda s: jax.NamedSharding(mesh, s), ps,
+                    is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+                if state_shape.opt_state.mu else (),
+                nu=jax.tree_util.tree_map(
+                    lambda s: jax.NamedSharding(mesh, s), ps,
+                    is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+                if state_shape.opt_state.nu else (),
+            ),
+            step=jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        )
+
+        from repro.training.step import make_train_step
+        train_step = make_train_step(ops, cfg, ctx, optimizer)
+
+        fn = jax.jit(train_step,
+                     in_shardings=(state_shardings, b_shard),
+                     out_shardings=(state_shardings,
+                                    jax.NamedSharding(mesh, jax.sharding.PartitionSpec())))
+        with mesh:
+            lowered = fn.lower(state_shape, batch_struct)
+        return lowered, {"step": "train_step", "ctx": ctx, "cfg": cfg}
+
+    if sp["kind"] == "prefill":
+        def prefill(params, batch):
+            return ops.prefill(params, batch, cfg, ctx)
+        fn = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+        with mesh:
+            lowered = fn.lower(p_shape, batch_struct)
+        return lowered, {"step": "prefill", "ctx": ctx, "cfg": cfg}
+
+    # decode: ONE new token against a cache of seq_len
+    cache_len = serve_cache_len(cfg, sp["seq"])
+    cache_shape = jax.eval_shape(
+        lambda: ops.init_cache(cfg, sp["batch"], sp["seq"], ctx))
+    c_specs = state_partition_specs(cache_shape, ctx)
+    c_shard = jax.tree_util.tree_map(
+        lambda s: jax.NamedSharding(mesh, s), c_specs,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+
+    def serve_step(params, cache, tokens):
+        return ops.decode_step(params, cache, tokens, cfg, ctx)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_shard, c_shard, b_shard["tokens"]))
+    with mesh:
+        lowered = fn.lower(p_shape, cache_shape, batch_struct["tokens"])
+    return lowered, {"step": "serve_step", "ctx": ctx, "cfg": cfg,
+                     "cache_len": cache_len}
+
+
+def _dp_total(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape: str, multi_pod: bool, outdir: str,
+            skip_memory: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "ok": False}
+    cfg = get_config(arch)
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        rec.update(skipped=True, reason=why, ok=True)
+        if outdir:
+            os.makedirs(outdir, exist_ok=True)
+            with open(os.path.join(
+                    outdir, f"{arch}__{shape}__{mesh_name}.json"), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered, meta = lower_combination(arch, shape, mesh)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        cost = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        rec.update(
+            ok=True,
+            step=meta["step"],
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops=float(cost.get("flops", 0.0)),
+            bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+            collectives=coll,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            },
+        )
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    finally:
+        jax.clear_caches()   # keep host RSS bounded across 80 compiles
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        path = os.path.join(outdir, f"{arch}__{shape}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all", choices=SHAPES + ["all"])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--outdir", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = list_configs() if args.arch == "all" else [args.arch]
+    shapes = SHAPES if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, args.outdir)
+                status = ("SKIP " + rec.get("reason", "") if rec.get("skipped")
+                          else ("OK" if rec["ok"] else "FAIL " + rec.get("error", "")))
+                print(f"[dryrun] {arch:28s} {shape:12s} {rec['mesh']:10s} "
+                      f"{status}", flush=True)
+                if rec["ok"] and not rec.get("skipped"):
+                    print(f"         flops={rec['flops']:.3e} "
+                          f"bytes={rec['bytes_accessed']:.3e} "
+                          f"coll={rec['collectives']['total_bytes']:.3e} "
+                          f"temp/device={rec['memory']['temp_bytes']} "
+                          f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                          flush=True)
+                n_fail += 0 if rec["ok"] else 1
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model definitions (assigned architectures + the paper's classic models)."""
+from repro.models.api import get_model, ModelOps
+
+__all__ = ["get_model", "ModelOps"]

@@ -1,0 +1,123 @@
+"""Unified model API across families.
+
+``get_model(cfg)`` returns a ``ModelOps`` bundle:
+
+- ``init_params(rng, cfg)``                       -> params pytree
+- ``train_loss(params, batch, cfg, ctx, **kw)``   -> scalar
+- ``init_cache(cfg, batch_size, seq_len, ctx)``   -> serving state
+- ``prefill(params, batch, cfg, ctx)``            -> (logits, state)
+- ``decode_step(params, state, tokens, cfg, ctx)``-> (logits, state)
+- ``make_batch(cfg, batch, seq, rng|specs)``      handled by repro.data
+
+Decode shapes in the brief lower ``decode_step`` with a cache of
+``seq_len``; the cache geometry (ring vs linear) is decided by
+``serve_cache_len``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.sharding.partition import DistContext
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOps:
+    init_params: Callable
+    train_loss: Callable
+    init_cache: Callable          # (cfg, batch, seq_len, ctx) -> state
+    prefill: Callable
+    decode_step: Callable         # (params, state, tokens, cfg, ctx) -> (logits, state)
+    supports_long_context: bool   # sub-quadratic serve path exists
+
+
+def serve_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Slots in the dense KV cache for a decode at context ``seq_len``."""
+    if cfg.sliding_window and seq_len > cfg.sliding_window:
+        return cfg.sliding_window
+    return seq_len
+
+
+def _transformer_ops(cfg: ModelConfig) -> ModelOps:
+    def init_cache(cfg, batch, seq_len, ctx):
+        spec = transformer.cache_spec(cfg, seq_len, use_window=True)
+        return transformer.init_cache(None, cfg, batch, spec, ctx)
+
+    def prefill(params, batch, cfg, ctx, *, slack: int = 64):
+        S = batch["tokens"].shape[1]
+        if cfg.family == "vlm" and "patches" in batch:
+            S += cfg.n_patches          # image prefix occupies cache slots
+        # slack: empty slots for tokens generated after the prefill
+        spec = transformer.cache_spec(cfg, S + slack, use_window=False)
+        spec = transformer.CacheSpec(cache_len=spec.cache_len, ring=spec.ring)
+        return transformer.prefill(params, batch, cfg, ctx, spec)
+
+    def decode_step(params, cache, tokens, cfg, ctx):
+        # geometry is static: infer ring from cache length vs window
+        cache_len = cache["k"].shape[2]
+        spec = transformer.CacheSpec(
+            cache_len=cache_len,
+            ring=bool(cfg.sliding_window) and cache_len == cfg.sliding_window)
+        return transformer.decode_step(params, cache, tokens, cfg, ctx, spec)
+
+    return ModelOps(
+        init_params=transformer.init_params,
+        train_loss=transformer.train_loss,
+        init_cache=init_cache,
+        prefill=prefill,
+        decode_step=decode_step,
+        supports_long_context=bool(cfg.sliding_window),
+    )
+
+
+def _ssm_ops(cfg: ModelConfig) -> ModelOps:
+    return ModelOps(
+        init_params=ssm.init_params,
+        train_loss=ssm.train_loss,
+        init_cache=lambda cfg, batch, seq_len, ctx: ssm.init_state(cfg, batch, ctx),
+        prefill=ssm.prefill,
+        decode_step=ssm.decode_step,
+        supports_long_context=True,
+    )
+
+
+def _hybrid_ops(cfg: ModelConfig) -> ModelOps:
+    return ModelOps(
+        init_params=hybrid.init_params,
+        train_loss=hybrid.train_loss,
+        init_cache=lambda cfg, batch, seq_len, ctx: hybrid.init_state(
+            cfg, batch, seq_len, ctx),
+        prefill=hybrid.prefill,
+        decode_step=hybrid.decode_step,
+        supports_long_context=True,
+    )
+
+
+def _encdec_ops(cfg: ModelConfig) -> ModelOps:
+    return ModelOps(
+        init_params=encdec.init_params,
+        train_loss=encdec.train_loss,
+        init_cache=lambda cfg, batch, seq_len, ctx: encdec.init_cache(
+            cfg, batch, seq_len, ctx),
+        prefill=encdec.prefill,
+        decode_step=encdec.decode_step,
+        supports_long_context=False,   # 30 s enc-dec format (DESIGN.md skip)
+    )
+
+
+def get_model(cfg: ModelConfig) -> ModelOps:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _transformer_ops(cfg)
+    if cfg.family == "ssm":
+        return _ssm_ops(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_ops(cfg)
+    if cfg.family == "audio":
+        return _encdec_ops(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,248 @@
+"""Whisper-style encoder-decoder transformer [arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is a STUB per the brief:
+``input_specs()`` provides precomputed frame embeddings (B, enc_seq, D).
+Sinusoidal positions (no RoPE — rope_theta=0 for this arch). Decoder layers
+have self-attention (causal, cached) + cross-attention to the encoder
+output (cross-KV computed once at prefill) + MLP.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.partition import DistContext
+
+PyTree = Any
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_enc_layer(rng, cfg: ModelConfig) -> PyTree:
+    ks = jax.random.split(rng, 2)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), _dtype(cfg)),
+        "attn": L.init_attention(ks[0], cfg, _dtype(cfg)),
+        "mlp_norm": jnp.ones((cfg.d_model,), _dtype(cfg)),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, _dtype(cfg)),
+    }
+
+
+def init_dec_layer(rng, cfg: ModelConfig) -> PyTree:
+    ks = jax.random.split(rng, 3)
+    return {
+        "self_norm": jnp.ones((cfg.d_model,), _dtype(cfg)),
+        "self_attn": L.init_attention(ks[0], cfg, _dtype(cfg)),
+        "cross_norm": jnp.ones((cfg.d_model,), _dtype(cfg)),
+        "cross_attn": L.init_attention(ks[1], cfg, _dtype(cfg)),
+        "mlp_norm": jnp.ones((cfg.d_model,), _dtype(cfg)),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, _dtype(cfg)),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> PyTree:
+    k_embed, k_enc, k_dec, k_in = jax.random.split(rng, 4)
+    enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        **L.init_embed(k_embed, cfg, _dtype(cfg)),
+        # stub frontend: learned projection of precomputed frame features
+        "frame_proj": {"proj": L.dense_init(k_in, (cfg.d_model, cfg.d_model),
+                                            cfg.d_model, _dtype(cfg))},
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), _dtype(cfg)),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": jnp.ones((cfg.d_model,), _dtype(cfg)),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, ctx: DistContext):
+    """frames: (B, T, D) stub embeddings -> encoder output (B, T, D)."""
+    B, T, _ = frames.shape
+    h = jnp.einsum("btd,de->bte", frames.astype(_dtype(cfg)),
+                   params["frame_proj"]["proj"])
+    h = h + L.sinusoidal_positions(T, cfg.d_model).astype(h.dtype)
+    h = ctx.shard(h, "dp", None, None)
+    positions = jnp.arange(T)
+
+    def body(x, lp):
+        a = L.attention_block(L.rms_norm(x, lp["attn_norm"]), lp["attn"],
+                              cfg, ctx, positions=positions, causal=False,
+                              q_chunk=min(512, T), kv_chunk=min(512, T))
+        x = x + a
+        x = x + L.mlp_block(L.rms_norm(x, lp["mlp_norm"]), lp["mlp"], ctx)
+        return ctx.shard(x, "dp", ctx.tp, None), None
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"],
+                        unroll=L.UNROLL_FOR_COSTING)
+    return L.rms_norm(h, params["enc_norm"])
+
+
+def _dec_layer(x, lp, cfg, ctx, positions, enc_kv=None, enc_out=None,
+               enc_pos=None, q_chunk=512):
+    """One decoder layer (training path: enc_out given; cross-KV recomputed)."""
+    a = L.attention_block(L.rms_norm(x, lp["self_norm"]), lp["self_attn"],
+                          cfg, ctx, positions=positions, causal=True,
+                          q_chunk=q_chunk, kv_chunk=q_chunk)
+    x = x + a
+    xn = L.rms_norm(x, lp["cross_norm"])
+    p = lp["cross_attn"]
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    o = L.flash_attention(q, k, v, positions, enc_pos, causal=False,
+                          q_chunk=q_chunk, kv_chunk=min(512, k.shape[1]),
+                          ctx=ctx)
+    c = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    x = x + ctx.shard(c, "dp", None, None)
+    return x + L.mlp_block(L.rms_norm(x, lp["mlp_norm"]), lp["mlp"], ctx)
+
+
+def train_loss(params, batch, cfg: ModelConfig, ctx: DistContext, **_):
+    enc_out = encode(params, batch["frames"], cfg, ctx)
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    h = L.embed_tokens(tokens, params, ctx)
+    h = h + L.sinusoidal_positions(Sq, cfg.d_model).astype(h.dtype)
+    h = ctx.shard(h, "dp", None, None)
+    positions = jnp.arange(Sq)
+    enc_pos = jnp.arange(enc_out.shape[1])
+
+    def body(x, lp):
+        fn = _dec_layer
+        if cfg.remat:
+            fn = jax.checkpoint(_dec_layer, static_argnums=(2, 3),
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        x = fn(x, lp, cfg, ctx, positions, enc_out=enc_out, enc_pos=enc_pos)
+        return ctx.shard(x, "dp", ctx.tp, None), None
+
+    h, _ = jax.lax.scan(body, h, params["dec_layers"],
+                        unroll=L.UNROLL_FOR_COSTING)
+    h = L.rms_norm(h, params["final_norm"])
+    mask = batch.get("mask", jnp.ones_like(batch["labels"], jnp.float32))
+    return L.lm_loss_chunked(h, params, batch["labels"], mask, cfg, ctx)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               ctx: DistContext) -> PyTree:
+    Hk, Dh, Ln, T = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers, cfg.enc_seq
+    dt = _dtype(cfg)
+    return {
+        "k": ctx.shard(jnp.zeros((Ln, batch, cache_len, Hk, Dh), dt),
+                       None, "dp", None, ctx.tp, None),
+        "v": ctx.shard(jnp.zeros((Ln, batch, cache_len, Hk, Dh), dt),
+                       None, "dp", None, ctx.tp, None),
+        "cross_k": ctx.shard(jnp.zeros((Ln, batch, T, Hk, Dh), dt),
+                             None, "dp", None, ctx.tp, None),
+        "cross_v": ctx.shard(jnp.zeros((Ln, batch, T, Hk, Dh), dt),
+                             None, "dp", None, ctx.tp, None),
+        "kpos": jnp.full((cache_len,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx: DistContext, spec=None):
+    """Encode + teacher-forced decoder pass, building self+cross caches."""
+    enc_out = encode(params, batch["frames"], cfg, ctx)
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    h = L.embed_tokens(tokens, params, ctx)
+    h = h + L.sinusoidal_positions(Sq, cfg.d_model).astype(h.dtype)
+    h = ctx.shard(h, "dp", None, None)
+    positions = jnp.arange(Sq)
+    enc_pos = jnp.arange(enc_out.shape[1])
+
+    def body(x, lp):
+        p = lp["self_attn"]
+        xn = L.rms_norm(x, lp["self_norm"])
+        q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", xn, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", xn, p["wv"])
+        o = L.flash_attention(q, k, v, positions, positions, causal=True,
+                              q_chunk=min(512, Sq), kv_chunk=min(512, Sq),
+                              ctx=ctx)
+        x = x + ctx.shard(jnp.einsum("bshk,hkd->bsd", o, p["wo"]),
+                          "dp", None, None)
+        pc = lp["cross_attn"]
+        xn = L.rms_norm(x, lp["cross_norm"])
+        qc = jnp.einsum("bsd,dhk->bshk", xn, pc["wq"])
+        ck = jnp.einsum("btd,dhk->bthk", enc_out, pc["wk"])
+        cv = jnp.einsum("btd,dhk->bthk", enc_out, pc["wv"])
+        oc = L.flash_attention(qc, ck, cv, positions, enc_pos, causal=False,
+                               q_chunk=min(512, Sq),
+                               kv_chunk=min(512, ck.shape[1]), ctx=ctx)
+        x = x + ctx.shard(jnp.einsum("bshk,hkd->bsd", oc, pc["wo"]),
+                          "dp", None, None)
+        x = x + L.mlp_block(L.rms_norm(x, lp["mlp_norm"]), lp["mlp"], ctx)
+        return x, (k.astype(_dtype(cfg)), v.astype(_dtype(cfg)),
+                   ck.astype(_dtype(cfg)), cv.astype(_dtype(cfg)))
+
+    h, (ks, vs, cks, cvs) = jax.lax.scan(body, h, params["dec_layers"],
+                                         unroll=L.UNROLL_FOR_COSTING)
+    h = L.rms_norm(h, params["final_norm"])
+    logits = L.lm_logits(h[:, -1:], params, ctx)
+    slack = 64                 # room for subsequently generated tokens
+    zk = jnp.zeros(ks.shape[:2] + (slack,) + ks.shape[3:], ks.dtype)
+    ks = jnp.concatenate([ks, zk], axis=2)
+    vs = jnp.concatenate([vs, zk], axis=2)
+    kpos = jnp.concatenate([jnp.arange(Sq, dtype=jnp.int32),
+                            jnp.full((slack,), -1, jnp.int32)])
+    cache = {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs,
+             "kpos": kpos,
+             "pos": jnp.asarray(Sq, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: DistContext,
+                spec=None):
+    x = L.embed_tokens(tokens, params, ctx)
+    pos = cache["pos"]
+    x = x + L.sinusoidal_positions(1, cfg.d_model, offset=pos).astype(x.dtype)
+    x = ctx.shard(x, "dp", None, None)
+    positions = pos[None] + jnp.zeros((1,), jnp.int32)
+    cache_len = cache["k"].shape[2]
+    kpos = cache["kpos"].at[pos].set(pos)
+    enc_pos = jnp.arange(cfg.enc_seq)
+
+    def body(x, xs):
+        lp, kc, vc, ck, cv = xs
+        p = lp["self_attn"]
+        xn = L.rms_norm(x, lp["self_norm"])
+        q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", xn, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", xn, p["wv"])
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+        o = L.flash_attention(q, kc, vc, positions, kpos, causal=True,
+                              q_chunk=1, kv_chunk=min(1024, cache_len), ctx=ctx)
+        x = x + ctx.shard(jnp.einsum("bshk,hkd->bsd", o, p["wo"]),
+                          "dp", None, None)
+        pc = lp["cross_attn"]
+        xn = L.rms_norm(x, lp["cross_norm"])
+        qc = jnp.einsum("bsd,dhk->bshk", xn, pc["wq"])
+        oc = L.flash_attention(qc, ck, cv, positions, enc_pos, causal=False,
+                               q_chunk=1, kv_chunk=min(512, cfg.enc_seq),
+                               ctx=ctx)
+        x = x + ctx.shard(jnp.einsum("bshk,hkd->bsd", oc, pc["wo"]),
+                          "dp", None, None)
+        x = x + L.mlp_block(L.rms_norm(x, lp["mlp_norm"]), lp["mlp"], ctx)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]),
+        unroll=L.UNROLL_FOR_COSTING)
+    h = L.rms_norm(x, params["final_norm"])
+    logits = L.lm_logits(h, params, ctx)
+    new_cache = dict(cache, k=k_new, v=v_new, kpos=kpos, pos=pos + 1)
+    return logits, new_cache

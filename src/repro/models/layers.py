@@ -1,0 +1,740 @@
+"""Shared transformer layers: RMSNorm, RoPE, chunked (flash-style) GQA
+attention, SwiGLU MLP, expert-parallel MoE, chunked vocab-sharded LM loss.
+
+Everything is functional JAX. Attention and the LM loss are *chunked* so
+that activation memory stays bounded at 32k–512k sequence lengths: logits /
+score matrices are never materialized beyond a (q_chunk × kv_chunk) tile —
+the pure-JAX analogue of the flash-attention tiling the Pallas kernels
+(kernels/sw_attention) implement for TPU.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partition import DistContext
+
+PyTree = Any
+
+NEG_INF = -1e30
+
+# When True (set by launch/roofline.py cost probes), layer-stack and
+# loss/embedding chunk scans are UNROLLED so XLA's cost_analysis counts
+# every iteration (a rolled `while` body is counted once regardless of
+# trip count). Never enabled for real execution.
+UNROLL_FOR_COSTING = False
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, shape, in_axis_size: Optional[int] = None, dtype=jnp.float32):
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int, offset=0) -> jnp.ndarray:
+    pos = (jnp.arange(seq) + offset)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d_model, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / d_model))
+    pe = jnp.zeros((seq, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# chunked flash-style attention (pure JAX; TPU kernel in kernels/sw_attention)
+# ---------------------------------------------------------------------------
+
+def _attend_chunk(q, k, v, qpos, kpos, *, causal, window, scale,
+                  k_scale=None, v_scale=None):
+    """One (q_chunk × kv_chunk) tile. q: (B,qc,Hk,G,Dh); k/v: (B,kc,Hk,Dh).
+    Optional per-(token, head) dequant scales for int8 KV (§Perf C).
+    Returns unnormalized (acc, m, l) online-softmax contributions."""
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+    if v_scale is not None:
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32), kf) * scale
+    mask = kpos[None, :] <= qpos[:, None] if causal else \
+        jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if window:
+        mask = mask & (qpos[:, None] - kpos[None, :] < window)
+    mask = mask & (kpos >= 0)[None, :]            # ring-buffer validity
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                   # (B,Hk,G,qc)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return acc, m, l
+
+
+def _fwd_chunks(qg, kc, vc, qposc, kposc, *, causal, window, scale,
+                q_chunk, kv_chunk, nk, Skv):
+    """Forward over all (q-chunk × kv-chunk) tiles with online softmax.
+
+    qg: (B, nq, qc, Hk, G, Dh); kc/vc: (B, nk, kc, Hk, Dh).
+    Returns (o (B, nq, qc, Hk, G, Dh) f32, lse (B, nq, Hk, G, qc) f32).
+    """
+    B = qg.shape[0]
+
+    def one_q_chunk(qck, qpck):
+        if window > 0 and Skv > window + q_chunk:
+            # sliding window: only a static-size kv span can be visible
+            span = window + q_chunk
+            nspan = min(-(-span // kv_chunk) + 1, nk)
+            lo_chunk = jnp.clip((jnp.min(qpck) - window) // kv_chunk,
+                                0, max(nk - nspan, 0)).astype(jnp.int32)
+            idx = lo_chunk + jnp.arange(nspan)
+            ks, vs, kps = kc[:, idx], vc[:, idx], kposc[idx]
+        else:
+            ks, vs, kps = kc, vc, kposc
+
+        def body(carry, xs):
+            acc, m, l = carry
+            kt, vt, kpt = xs
+            a, mt, lt = _attend_chunk(qck, kt, vt, qpck, kpt,
+                                      causal=causal, window=window, scale=scale)
+            m_new = jnp.maximum(m, mt)
+            r_old = jnp.exp(m - m_new)
+            r_new = jnp.exp(mt - m_new)
+            acc = acc * r_old.transpose(0, 3, 1, 2)[..., None] \
+                + a * r_new.transpose(0, 3, 1, 2)[..., None]
+            l = l * r_old + lt * r_new
+            return (acc, m_new, l), None
+
+        qc, Hk, G, Dh = qck.shape[1], qck.shape[2], qck.shape[3], qck.shape[4]
+        init = (jnp.zeros((B, qc, Hk, G, Dh), jnp.float32),
+                jnp.full((B, Hk, G, qc), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hk, G, qc), jnp.float32))
+        (acc, m, l), _ = jax.lax.scan(
+            body, init,
+            (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0), kps))
+        l = jnp.maximum(l, 1e-30)
+        # output in input dtype: halves the custom-vjp residual and keeps
+        # the backward cotangent chain in bf16 (D is recomputed in f32)
+        o = (acc / l.transpose(0, 3, 1, 2)[..., None]).astype(qck.dtype)
+        lse = m + jnp.log(l)
+        return o, lse
+
+    nq = qg.shape[1]
+    if nq == 1:
+        o, lse = one_q_chunk(qg[:, 0], qposc[0])
+        return o[:, None], lse[:, None]
+    o, lse = jax.lax.map(lambda i: one_q_chunk(qg[:, i], qposc[i]),
+                         jnp.arange(nq))
+    return jnp.moveaxis(o, 0, 1), jnp.moveaxis(lse, 0, 1)
+
+
+def _pad_chunks(q, k, v, qpos, kpos, q_chunk, kv_chunk):
+    B, Sq, Hk, G, Dh = q.shape
+    Skv = k.shape[1]
+    nq = -(-Sq // q_chunk)
+    nk = -(-Skv // kv_chunk)
+    qpad, kpad = nq * q_chunk - Sq, nk * kv_chunk - Skv
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, (0, qpad), constant_values=qpos[-1])
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, kpad), constant_values=-1)
+    qg = q.reshape(B, nq, q_chunk, Hk, G, Dh)
+    kc = k.reshape(B, nk, kv_chunk, Hk, Dh)
+    vc = v.reshape(B, nk, kv_chunk, Hk, Dh)
+    return qg, kc, vc, qpos.reshape(nq, q_chunk), kpos.reshape(nk, kv_chunk), nq, nk
+
+
+def _fwd_chunks_triangle(qg, kc, vc, qposc, kposc, *, scale, q_chunk,
+                         kv_chunk):
+    """Causal prefill with triangle skip: q-chunk i visits ONLY kv-chunks
+    j ≤ i (a python loop over q chunks — static per-i scan lengths), so no
+    masked-out tiles are ever computed. ~2× fewer attention FLOPs than the
+    visit-all-and-mask baseline at Sq == Skv (§Perf iteration A).
+    Forward-only (prefill); training keeps the scannable baseline.
+    """
+    B, nq = qg.shape[0], qg.shape[1]
+    outs = []
+    for i in range(nq):
+        qck, qpck = qg[:, i], qposc[i]
+        ks, vs, kps = kc[:, :i + 1], vc[:, :i + 1], kposc[:i + 1]
+
+        def body(carry, xs):
+            acc, m, l = carry
+            kt, vt, kpt = xs
+            a, mt, lt = _attend_chunk(qck, kt, vt, qpck, kpt,
+                                      causal=True, window=0, scale=scale)
+            m_new = jnp.maximum(m, mt)
+            r_old = jnp.exp(m - m_new)
+            r_new = jnp.exp(mt - m_new)
+            acc = acc * r_old.transpose(0, 3, 1, 2)[..., None] \
+                + a * r_new.transpose(0, 3, 1, 2)[..., None]
+            l = l * r_old + lt * r_new
+            return (acc, m_new, l), None
+
+        qc, Hk, G, Dh = qck.shape[1], qck.shape[2], qck.shape[3], qck.shape[4]
+        init = (jnp.zeros((B, qc, Hk, G, Dh), jnp.float32),
+                jnp.full((B, Hk, G, qc), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hk, G, qc), jnp.float32))
+        (acc, m, l), _ = jax.lax.scan(
+            body, init,
+            (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0), kps))
+        l = jnp.maximum(l, 1e-30)
+        outs.append(((acc / l.transpose(0, 3, 1, 2)[..., None])
+                     .astype(qck.dtype)))
+    return jnp.stack(outs, axis=1)
+
+
+def _flash_core_fwd(q, k, v, qpos, kpos, causal, window, q_chunk, kv_chunk):
+    B, Sq, Hk, G, Dh = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+    qg, kc, vc, qposc, kposc, nq, nk = _pad_chunks(
+        q, k, v, qpos, kpos, q_chunk, kv_chunk)
+    o, lse = _fwd_chunks(qg, kc, vc, qposc, kposc, causal=causal,
+                         window=window, scale=scale, q_chunk=q_chunk,
+                         kv_chunk=kv_chunk, nk=nk, Skv=Skv)
+    o_full = jnp.moveaxis(o, 1, 1).reshape(B, nq * q_chunk, Hk, G, Dh)[:, :Sq]
+    return o_full, (q, k, v, qpos, kpos, o_full, lse)
+
+
+def _flash_core_bwd(causal, window, q_chunk, kv_chunk, res, do):
+    """Flash-attention backward: recompute tiles, never materialize S×S."""
+    q, k, v, qpos, kpos, o, lse = res
+    B, Sq, Hk, G, Dh = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+    qg, kc, vc, qposc, kposc, nq, nk = _pad_chunks(
+        q, k, v, qpos, kpos, q_chunk, kv_chunk)
+    dpad = nq * q_chunk - Sq
+    dog = jnp.pad(do.astype(jnp.float32),
+                  ((0, 0), (0, dpad), (0, 0), (0, 0), (0, 0))
+                  ).reshape(B, nq, q_chunk, Hk, G, Dh)
+    og = jnp.pad(o.astype(jnp.float32),
+                 ((0, 0), (0, dpad), (0, 0), (0, 0), (0, 0))
+                 ).reshape(B, nq, q_chunk, Hk, G, Dh)
+    # lse from fwd is per (B, nq, Hk, G, qc)
+    lseg = res[6]
+    # D_i = rowsum(do * o): (B, nq, Hk, G, qc)
+    Drow = jnp.einsum("bnqhgd,bnqhgd->bnhgq", dog, og)
+
+    def one_q_chunk(i):
+        qck = qg[:, i]                                  # (B,qc,Hk,G,Dh)
+        qpck = qposc[i]
+        dock = dog[:, i]
+        lsek = lseg[:, i]                               # (B,Hk,G,qc)
+        Dk = Drow[:, i]
+
+        def body(carry, xs):
+            dq = carry
+            kt, vt, kpt = xs                            # (B,kc,Hk,Dh), (kc,)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qck.astype(jnp.float32),
+                           kt.astype(jnp.float32)) * scale
+            mask = kpt[None, :] <= qpck[:, None] if causal else \
+                jnp.ones((qpck.shape[0], kpt.shape[0]), bool)
+            if window:
+                mask = mask & (qpck[:, None] - kpt[None, :] < window)
+            mask = mask & (kpt >= 0)[None, :]
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lsek[..., None]), 0.0)
+            dv_c = jnp.einsum("bhgqk,bqhgd->bkhd", p, dock)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dock,
+                            vt.astype(jnp.float32))
+            ds = p * (dp - Dk[..., None]) * scale
+            dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                                 kt.astype(jnp.float32))
+            dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", ds,
+                              qck.astype(jnp.float32))
+            return dq, (dk_c, dv_c)
+
+        dq0 = jnp.zeros_like(qck, jnp.float32)
+        dq, (dk_parts, dv_parts) = jax.lax.scan(
+            body, dq0, (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), kposc))
+        # dk_parts: (nk, B, kc, Hk, Dh) for this q chunk
+        return dq, dk_parts, dv_parts
+
+    if nq == 1:
+        dq, dkp, dvp = one_q_chunk(0)
+        dq = dq[:, None]
+        dk = jnp.moveaxis(dkp, 0, 1).reshape(B, nk * kv_chunk, Hk, Dh)
+        dv = jnp.moveaxis(dvp, 0, 1).reshape(B, nk * kv_chunk, Hk, Dh)
+    else:
+        dq, dkp, dvp = jax.lax.map(one_q_chunk, jnp.arange(nq))
+        dq = jnp.moveaxis(dq, 0, 1)                      # (B,nq,qc,...)
+        dk = jnp.moveaxis(jnp.sum(dkp, axis=0), 0, 1).reshape(
+            B, nk * kv_chunk, Hk, Dh)
+        dv = jnp.moveaxis(jnp.sum(dvp, axis=0), 0, 1).reshape(
+            B, nk * kv_chunk, Hk, Dh)
+    dq = dq.reshape(B, nq * q_chunk, Hk, G, Dh)[:, :Sq]
+    dk = dk[:, :Skv]
+    dv = dv[:, :Skv]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash(q, k, v, qpos, kpos, causal, window, q_chunk, kv_chunk):
+    o, _ = _flash_core_fwd(q, k, v, qpos, kpos, causal, window,
+                           q_chunk, kv_chunk)
+    return o
+
+
+def _flash_fwd_rule(q, k, v, qpos, kpos, causal, window, q_chunk, kv_chunk):
+    return _flash_core_fwd(q, k, v, qpos, kpos, causal, window,
+                           q_chunk, kv_chunk)
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_core_bwd)
+
+
+def quantize_kv(x):
+    """(..., Hk, Dh) -> (int8 values, per-(..., Hk) f32 scales). §Perf C."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def flash_attention_kvq(q, k8, v8, k_scale, v_scale, qpos, kpos, *,
+                        window=0, kv_chunk=1024, ctx: DistContext = None):
+    """Single-query-chunk decode attention over an int8 KV cache.
+
+    q: (B,Sq,Hq,Dh) — Sq small (decode); k8/v8: (B,Skv,Hk) int8;
+    k_scale/v_scale: (B,Skv,Hk) f32. The cache is streamed chunk-by-chunk
+    and dequantized in-register — HBM traffic is the int8 bytes (§Perf C:
+    halves the decode memory term vs bf16).
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hk, _ = k8.shape
+    G = Hq // Hk
+    if G > 1:
+        k8 = jnp.repeat(k8, G, axis=2)
+        v8 = jnp.repeat(v8, G, axis=2)
+        k_scale = jnp.repeat(k_scale, G, axis=2)
+        v_scale = jnp.repeat(v_scale, G, axis=2)
+    qg = q.reshape(B, Sq, Hq, 1, Dh)
+    scale = 1.0 / math.sqrt(Dh)
+    kv_chunk = min(kv_chunk, Skv)
+    nk = -(-Skv // kv_chunk)
+    kpad = nk * kv_chunk - Skv
+    if kpad:
+        k8 = jnp.pad(k8, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v8 = jnp.pad(v8, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, kpad), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, kpad), (0, 0)))
+        kpos = jnp.pad(kpos, (0, kpad), constant_values=-1)
+    kc = k8.reshape(B, nk, kv_chunk, Hq, Dh)
+    vc = v8.reshape(B, nk, kv_chunk, Hq, Dh)
+    ksc = k_scale.reshape(B, nk, kv_chunk, Hq)
+    vsc = v_scale.reshape(B, nk, kv_chunk, Hq)
+    kposc = kpos.reshape(nk, kv_chunk)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kt, vt, kst, vst, kpt = xs
+        a, mt, lt = _attend_chunk(qg, kt, vt, qpos, kpt, causal=True,
+                                  window=window, scale=scale,
+                                  k_scale=kst, v_scale=vst)
+        m_new = jnp.maximum(m, mt)
+        r_old = jnp.exp(m - m_new)
+        r_new = jnp.exp(mt - m_new)
+        acc = acc * r_old.transpose(0, 3, 1, 2)[..., None] \
+            + a * r_new.transpose(0, 3, 1, 2)[..., None]
+        l = l * r_old + lt * r_new
+        return (acc, m_new, l), None
+
+    init = (jnp.zeros((B, Sq, Hq, 1, Dh), jnp.float32),
+            jnp.full((B, Hq, 1, Sq), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hq, 1, Sq), jnp.float32))
+    (acc, m, l), _ = jax.lax.scan(
+        body, init, (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+                     jnp.moveaxis(ksc, 1, 0), jnp.moveaxis(vsc, 1, 0), kposc))
+    l = jnp.maximum(l, 1e-30)
+    o = acc / l.transpose(0, 3, 1, 2)[..., None]
+    return o.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def flash_attention_triangle(q, k, v, qpos, kpos, *, q_chunk=1024,
+                             kv_chunk=1024, ctx: DistContext = None):
+    """Forward-only causal attention with triangle skip (§Perf A).
+
+    Same contract as flash_attention(causal=True, window=0); used by the
+    optimized prefill path (cfg.triangle_prefill)."""
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hk, _ = k.shape
+    G = Hq // Hk
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qg = q.reshape(B, Sq, Hq, 1, Dh)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    scale = 1.0 / math.sqrt(Dh)
+    qgc, kc, vc, qposc, kposc, nq, nk = _pad_chunks(
+        qg, k, v, qpos, kpos, q_chunk, kv_chunk)
+    o = _fwd_chunks_triangle(qgc, kc, vc, qposc, kposc, scale=scale,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk)
+    o = o.reshape(B, nq * q_chunk, Hq, 1, Dh)[:, :Sq]
+    return o.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def flash_attention(q, k, v, qpos, kpos, *, causal=True, window=0,
+                    q_chunk=1024, kv_chunk=1024, ctx: DistContext = None):
+    """Chunked attention with online softmax and a flash-style custom VJP
+    (backward recomputes tiles — activation memory stays O(S), not O(S²)).
+
+    q: (B, Sq, Hq, Dh);  k, v: (B, Skv, Hk, Dh);  Hq = G·Hk (GQA).
+    qpos: (Sq,) absolute positions; kpos: (Skv,) positions (−1 = invalid).
+    ``window > 0`` restricts to a sliding window (sub-quadratic: only kv
+    chunks overlapping [qpos−window, qpos] are visited).
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hk, _ = k.shape
+    G = Hq // Hk
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    if G > 1:
+        # GQA: repeat KV heads to Hq so the head dim shards evenly over the
+        # model axis (a 5-D (Hk, G) grouping breaks XLA's tiling when
+        # Hq % tp == 0 but Hk % tp != 0 — e.g. 96 q-heads, 8 kv-heads, tp=16).
+        # The repeat is outside the custom VJP, so dk/dv group-sums happen
+        # via autodiff; XLA shards the repeated operand with the einsum.
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qg = q.reshape(B, Sq, Hq, 1, Dh)
+    o = _flash(qg, k, v, qpos, kpos, causal, window, q_chunk, kv_chunk)
+    return o.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ModelConfig, dtype) -> PyTree:
+    D, Hq, Hk, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, Hq, Dh), D, dtype),
+        "wk": dense_init(ks[1], (D, Hk, Dh), D, dtype),
+        "wv": dense_init(ks[2], (D, Hk, Dh), D, dtype),
+        "wo": dense_init(ks[3], (Hq, Dh, D), Hq * Dh, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq, Dh), dtype)
+        p["bk"] = jnp.zeros((Hk, Dh), dtype)
+        p["bv"] = jnp.zeros((Hk, Dh), dtype)
+    return p
+
+
+def qkv_project(x, p, cfg: ModelConfig, ctx: DistContext, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # heads on tp when the count divides; else shard head_dim (ctx.shard
+    # drops non-divisible entries, so listing tp on both dims is safe for
+    # exactly one of them to stick)
+    if ctx.mesh is not None and ctx.tp is not None \
+            and q.shape[2] % ctx.tp_size != 0:
+        q = ctx.shard(q, "dp", None, None, ctx.tp)
+        k = ctx.shard(k, "dp", None, None, ctx.tp)
+        v = ctx.shard(v, "dp", None, None, ctx.tp)
+    else:
+        q = ctx.shard(q, "dp", None, ctx.tp, None)
+        k = ctx.shard(k, "dp", None, ctx.tp, None)
+        v = ctx.shard(v, "dp", None, ctx.tp, None)
+    return q, k, v
+
+
+def attention_block(x, p, cfg: ModelConfig, ctx: DistContext, *,
+                    positions, causal=True, window=0,
+                    q_chunk=1024, kv_chunk=1024):
+    """Self-attention over x: (B,S,D) -> (B,S,D)."""
+    q, k, v = qkv_project(x, p, cfg, ctx, positions)
+    o = flash_attention(q, k, v, positions, positions, causal=causal,
+                        window=window, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                        ctx=ctx)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return ctx.shard(out, "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d_model: int, d_ff: int, dtype) -> PyTree:
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), d_model, dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), d_model, dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def mlp_block(x, p, ctx: DistContext):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) \
+        * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = ctx.shard(h, "dp", None, ctx.tp)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return ctx.shard(out, "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (expert-parallel over the model axis)
+# ---------------------------------------------------------------------------
+
+def init_moe(rng, cfg: ModelConfig, dtype) -> PyTree:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), D, jnp.float32),
+        "w_gate_experts": dense_init(ks[1], (E, D, F), D, dtype),
+        "w_up_experts": dense_init(ks[2], (E, D, F), D, dtype),
+        "w_down_experts": dense_init(ks[3], (E, F, D), F, dtype),
+    }
+    if cfg.shared_expert:
+        p["shared"] = init_mlp(ks[4], D, F, dtype)
+    return p
+
+
+def _moe_body(x, router, wg, wu, wd, *, cfg: ModelConfig, E_local: int,
+              e_offset, capacity: int):
+    """Token-choice top-k routing, per-expert top-capacity gather.
+
+    x: (N, D) local tokens; wg/wu/wd: (E_local, ...) local expert weights.
+    Every device sees all local tokens (activations replicated over the
+    model axis) and computes only its experts; outputs are summed over the
+    model axis by the caller. Returns (out (N,D) fp32, aux losses).
+    """
+    N, D = x.shape
+    logits = x.astype(jnp.float32) @ router               # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(probs, cfg.top_k)       # (N, k)
+    # normalized combine weights
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    # dense (N, E) sparse-weight matrix, then slice local experts
+    w_full = jnp.zeros((N, cfg.n_experts), jnp.float32)
+    w_full = w_full.at[jnp.arange(N)[:, None], sel].set(gate_vals)
+    w_local = jax.lax.dynamic_slice(w_full, (0, e_offset), (N, E_local))
+
+    def expert_one(we, wg_e, wu_e, wd_e):
+        vals, idx = jax.lax.top_k(we, capacity)            # top-C tokens
+        xe = x[idx]                                        # (C, D)
+        h = jax.nn.silu(xe @ wg_e) * (xe @ wu_e)
+        he = (h @ wd_e).astype(jnp.float32) * vals[:, None]
+        return idx, he
+
+    idxs, hes = jax.vmap(expert_one)(w_local.T, wg, wu, wd)  # (E_l,C),(E_l,C,D)
+    out = jnp.zeros((N, D), jnp.float32)
+    out = out.at[idxs.reshape(-1)].add(hes.reshape(-1, D))
+    # router aux losses (load balance + z-loss), standard formulation
+    me = jnp.mean(probs, axis=0)                            # (E,)
+    ce = jnp.mean(w_full > 0, axis=0)
+    lb_loss = cfg.n_experts * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, lb_loss, z_loss
+
+
+def moe_block(x, p, cfg: ModelConfig, ctx: DistContext):
+    """x: (B,S,D) -> (B,S,D). Expert-parallel under shard_map when a mesh
+    with a model axis is present; plain local compute otherwise."""
+    from jax.sharding import PartitionSpec as P
+    B, S, D = x.shape
+    E = cfg.n_experts
+
+    if ctx.mesh is not None and ctx.tp is not None:
+        tp_size = ctx.tp_size
+        E_local = E // tp_size
+        dp_total = 1
+        for a in ctx.dp:
+            dp_total *= ctx.mesh.shape[a]
+        N_local = (B // dp_total if ctx.batch_shardable else B) * S
+        capacity = max(1, int(math.ceil(
+            N_local * cfg.top_k / E * cfg.capacity_factor)))
+        dps = ctx.dp_spec
+
+        # §Perf B: combine expert outputs with reduce-scatter over the token
+        # dim instead of all-reduce — the next consumer (the residual
+        # stream) is S-sharded over the model axis anyway, so the all-gather
+        # half of the all-reduce is pure waste. 2× less ICI traffic.
+        S_local = x.shape[1]
+        use_rs = (cfg.moe_reduce_scatter and S_local % tp_size == 0
+                  and S_local > 1)
+
+        def body(xl, router, wg, wu, wd):
+            n = xl.shape[0] * xl.shape[1]
+            e_off = jax.lax.axis_index(ctx.tp) * E_local
+            out, lb, zl = _moe_body(xl.reshape(n, D), router, wg, wu, wd,
+                                    cfg=cfg, E_local=E_local, e_offset=e_off,
+                                    capacity=min(capacity, n))
+            if use_rs:
+                out = out.reshape(xl.shape[0], S_local, D)
+                out = jax.lax.psum_scatter(out, ctx.tp, scatter_dimension=1,
+                                           tiled=True)
+                return out.astype(xl.dtype), lb, zl
+            out = jax.lax.psum(out, ctx.tp)
+            return out.reshape(xl.shape).astype(xl.dtype), lb, zl
+
+        out_spec = P(dps, ctx.tp, None) if use_rs else P(dps, None, None)
+        out, lb, zl = jax.shard_map(
+            body, mesh=ctx.mesh,
+            in_specs=(P(dps, None, None), P(), P(ctx.tp), P(ctx.tp), P(ctx.tp)),
+            out_specs=(out_spec, P(), P()),
+            check_vma=False,
+        )(x, p["router"], p["w_gate_experts"], p["w_up_experts"],
+          p["w_down_experts"])
+    else:
+        n = B * S
+        capacity = max(1, int(math.ceil(n * cfg.top_k / E * cfg.capacity_factor)))
+        out, lb, zl = _moe_body(x.reshape(n, D), p["router"],
+                                p["w_gate_experts"], p["w_up_experts"],
+                                p["w_down_experts"], cfg=cfg, E_local=E,
+                                e_offset=0, capacity=min(capacity, n))
+        out = out.reshape(B, S, D).astype(x.dtype)
+
+    if cfg.shared_expert:
+        out = out + mlp_block(x, p["shared"], ctx)
+    return out, (lb, zl)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked vocab-sharded LM loss
+# ---------------------------------------------------------------------------
+
+def init_embed(rng, cfg: ModelConfig, dtype) -> PyTree:
+    ks = jax.random.split(rng, 2)
+    p = {"embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.vocab, cfg.d_model), cfg.d_model, dtype)
+    return p
+
+
+def embed_tokens(tokens, p, ctx: DistContext, chunk: int = 8192):
+    """Token embedding lookup.
+
+    Single device: plain gather. Under tensor parallelism the embedding
+    table is vocab-sharded — a gather would make XLA all-gather the whole
+    table (GBs for 256k vocab). Instead: chunked one-hot matmul, which the
+    partitioner turns into a local partial matmul + all-reduce, never
+    materializing the full table or the full one-hot. The chunk body is
+    rematted so no (chunk, V) one-hot is saved for backward.
+    """
+    embed = p["embed"]
+    if ctx.mesh is None or ctx.tp is None:
+        return jnp.take(embed, tokens, axis=0)
+    B, S = tokens.shape
+    V, D = embed.shape
+    # chunk along S, preserving the batch dim: reshapes that flatten (B, S)
+    # globally lose the dp sharding and force XLA into involuntary full
+    # replication of (tokens, D)-sized buffers
+    C = min(max(chunk // max(B // 8, 1), 128), S)
+    while S % C:
+        C //= 2
+    C = max(C, 1)
+    ncs = S // C
+    tok = tokens.reshape(B, ncs, C)
+    tok = jnp.moveaxis(tok, 1, 0)                     # (ncs, B, C)
+
+    def body(_, tx):
+        onehot = (tx[..., None] == jnp.arange(V)).astype(embed.dtype)
+        onehot = ctx.shard(onehot, "dp", None, ctx.tp)
+        return None, jnp.einsum("bcv,vd->bcd", onehot, embed)
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, out = jax.lax.scan(body, None, tok,
+                          unroll=UNROLL_FOR_COSTING)  # (ncs, B, C, D)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, D)
+    return ctx.shard(out, "dp", None, None)
+
+
+def lm_logits(h, p, ctx: DistContext):
+    head = p.get("lm_head", p["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                        head.astype(jnp.float32))
+    return ctx.shard(logits, "dp", None, ctx.tp)
+
+
+def lm_loss_chunked(h, p, labels, mask, cfg: ModelConfig, ctx: DistContext):
+    """Next-token cross-entropy without materializing (N, V) logits.
+
+    h: (B,S,D); labels/mask: (B,S). Scans over S-chunks *preserving the
+    batch dim* (a global (B·S) flatten would break the dp sharding and
+    force involuntary replication); within a chunk the (B, chunk, V)
+    logits are vocab-sharded over the model axis.
+    """
+    B, S, D = h.shape
+    head = p.get("lm_head", p["embed"])
+    C = min(max(cfg.loss_chunk // max(B // 8, 1), 128), S)
+    while S % C:
+        C //= 2
+    C = max(C, 1)
+    nc = S // C
+    hc = jnp.moveaxis(h.reshape(B, nc, C, D), 1, 0)           # (nc,B,C,D)
+    yc = jnp.moveaxis(labels.reshape(B, nc, C), 1, 0)
+    mc = jnp.moveaxis(mask.astype(jnp.float32).reshape(B, nc, C), 1, 0)
+
+    def chunk_loss(hx, yx, mx):
+        logits = jnp.einsum("bcd,vd->bcv", hx.astype(jnp.float32),
+                            head.astype(jnp.float32))
+        logits = ctx.shard(logits, "dp", None, ctx.tp)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, yx[..., None], axis=2)[..., 0]
+        return jnp.sum((lse - ll) * mx), jnp.sum(mx)
+
+    # remat: the (chunk, V) logits are recomputed in backward, never saved
+    chunk_loss = jax.checkpoint(
+        chunk_loss, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, xs):
+        loss, cnt = chunk_loss(*xs)
+        return (carry[0] + loss, carry[1] + cnt), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)), (hc, yc, mc),
+        unroll=UNROLL_FOR_COSTING)
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,271 @@
+"""Mamba2 (SSD — state-space duality) language model [arXiv:2405.21060].
+
+TPU adaptation of the SSD algorithm: the sequence is processed in chunks of
+``cfg.ssm_chunk`` tokens. Within a chunk the recurrence is computed in its
+*dual* quadratic (attention-like) matmul form — MXU-friendly, 128-aligned —
+and chunk-to-chunk state is carried by a short ``lax.scan``. This is the
+structure the paper's authors target at GPU tensor cores; it maps directly
+onto the TPU MXU (see kernels/ssd_scan for the Pallas tile).
+
+Simplifications vs. the reference CUDA implementation (noted in DESIGN.md):
+single B/C group (n_groups=1), depthwise short conv applied to x only.
+
+Decode is the O(1) recurrent form: h ← a·h + dt·B⊗x per layer.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.partition import DistContext
+
+PyTree = Any
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_mixer(rng, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    D, DI, N, H, P = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_headdim)
+    ks = jax.random.split(rng, 4)
+    return {
+        # in_proj -> [z (DI), x (DI), B (N), C (N), dt (H)]
+        "in_proj": L.dense_init(ks[0], (D, 2 * DI + 2 * N + H), D, dt),
+        "conv_w": L.dense_init(ks[1], (cfg.conv_width, DI), cfg.conv_width, dt),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "out_proj": L.dense_init(ks[2], (DI, D), DI, dt),
+    }
+
+
+def init_layer(rng, cfg: ModelConfig) -> PyTree:
+    return {"norm": jnp.ones((cfg.d_model,), _dtype(cfg)),
+            "mixer": init_mixer(rng, cfg)}
+
+
+def init_params(rng, cfg: ModelConfig) -> PyTree:
+    k_embed, k_layers = jax.random.split(rng)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    return {
+        **L.init_embed(k_embed, cfg, _dtype(cfg)),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), _dtype(cfg)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mixer forward pieces
+# ---------------------------------------------------------------------------
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :DI]
+    x = zxbcdt[..., DI:2 * DI]
+    Bm = zxbcdt[..., 2 * DI:2 * DI + N]
+    Cm = zxbcdt[..., 2 * DI + N:2 * DI + 2 * N]
+    dt = zxbcdt[..., 2 * DI + 2 * N:]
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,DI); w: (K,DI). state: (B,K-1,DI)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, cfg: ModelConfig, ctx: DistContext,
+                h0=None):
+    """Chunked SSD scan (pure-JAX oracle for kernels/ssd_scan).
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B,S,N). Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    nc = S // Q
+    assert nc * Q == S, f"seq {S} must be divisible by chunk {Q}"
+
+    la = (dt * A).reshape(Bsz, nc, Q, H)                  # log a_t (negative)
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    cum = jnp.cumsum(la, axis=2)                           # (B,nc,Q,H)
+    seg_total = cum[:, :, -1]                              # (B,nc,H)
+
+    # intra-chunk (dual quadratic form): M[i,j] = exp(cum_i - cum_j)·dt_j·(C_i·B_j)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)         # (B,nc,Q,Q)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(causal[None, None, :, :, None],
+                  jnp.exp(decay), 0.0) * scores[..., None] \
+        * dtc[:, :, None, :, :]                            # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # chunk summaries: S_c = Σ_j exp(cum_Q - cum_j)·dt_j·(B_j ⊗ x_j)
+    w = jnp.exp(seg_total[:, :, None, :] - cum) * dtc      # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", w, Bc, xc)
+
+    # inter-chunk recurrence over nc chunks
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def body(h, xs):
+        seg, st = xs                                       # (B,H), (B,H,P,N)
+        h_out = h                                          # state BEFORE chunk
+        h = h * jnp.exp(seg)[:, :, None, None] + st
+        return h, h_out
+
+    hs_final, h_prev = jax.lax.scan(
+        body, h0, (jnp.moveaxis(seg_total, 1, 0), jnp.moveaxis(chunk_state, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                    # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_inter[i] = exp(cum_i)·(C_i · h_prev)
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Cc, h_prev) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, hs_final
+
+
+def mixer_fwd(x, p, cfg: ModelConfig, ctx: DistContext):
+    """x: (B,S,D) -> (B,S,D). Training/prefill path."""
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xi, Bm, Cm, dtr = _split_proj(zxbcdt, cfg)
+    xi, _ = _causal_conv(xi, p["conv_w"])
+    H, P = cfg.ssm_heads, cfg.ssm_headdim
+    Bsz, S, _ = x.shape
+    # SSD heads are independent -> shard H over the model axis so the
+    # O(Q²)·H intra-chunk intermediates divide across TP
+    xh = xi.reshape(Bsz, S, H, P).astype(jnp.float32)
+    xh = ctx.shard(xh, "dp", None, ctx.tp, None)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    dt = ctx.shard(dt, "dp", None, ctx.tp)
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                       Cm.astype(jnp.float32), cfg, ctx)
+    y = ctx.shard(y, "dp", None, ctx.tp, None)
+    y = y + xh * p["D_skip"][:, None]
+    y = y.reshape(Bsz, S, cfg.d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return ctx.shard(out, "dp", None, None)
+
+
+def mixer_decode(x, p, state, cfg: ModelConfig, ctx: DistContext):
+    """Single-token recurrent step. x: (B,1,D); state: dict(h, conv)."""
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xi, Bm, Cm, dtr = _split_proj(zxbcdt, cfg)
+    xi, conv_state = _causal_conv(xi, p["conv_w"], state["conv"])
+    H, P = cfg.ssm_heads, cfg.ssm_headdim
+    Bsz = x.shape[0]
+    xh = xi.reshape(Bsz, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                     # (B,H)
+    h = state["h"] * a[:, :, None, None] \
+        + jnp.einsum("bh,bn,bhp->bhpn", dt, Bm[:, 0].astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y + xh * p["D_skip"][:, None]
+    y = y.reshape(Bsz, 1, cfg.d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return ctx.shard(out, "dp", None, None), {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# model-level API
+# ---------------------------------------------------------------------------
+
+def train_loss(params, batch, cfg: ModelConfig, ctx: DistContext, **_):
+    h = L.embed_tokens(batch["tokens"], params, ctx)
+    h = ctx.shard(h, "dp", None, None)
+
+    def body(x, lp):
+        fn = mixer_fwd
+        if cfg.remat:
+            fn = jax.checkpoint(mixer_fwd, static_argnums=(2, 3),
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        x = x + fn(L.rms_norm(x, lp["norm"]), lp["mixer"], cfg, ctx)
+        # sequence-parallel residual stream (saved activations S-sharded)
+        return ctx.shard(x, "dp", ctx.tp, None), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"],
+                        unroll=L.UNROLL_FOR_COSTING)
+    h = L.rms_norm(h, params["final_norm"])
+    mask = batch.get("mask", jnp.ones_like(batch["labels"], jnp.float32))
+    return L.lm_loss_chunked(h, params, batch["labels"], mask, cfg, ctx)
+
+
+def init_state(cfg: ModelConfig, batch: int, ctx: DistContext) -> PyTree:
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    return {
+        "h": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1,
+                           cfg.d_inner), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx: DistContext, spec=None):
+    """Run the chunked scan over the prompt, carrying final SSM states."""
+    tokens = batch["tokens"]
+    h = L.embed_tokens(tokens, params, ctx)
+    h = ctx.shard(h, "dp", None, None)
+    Bsz, S = tokens.shape
+
+    def body(x, lp):
+        xn = L.rms_norm(x, lp["norm"])
+        p = lp["mixer"]
+        zxbcdt = jnp.einsum("bsd,de->bse", xn, p["in_proj"])
+        z, xi, Bm, Cm, dtr = _split_proj(zxbcdt, cfg)
+        xi, conv_state = _causal_conv(xi, p["conv_w"])
+        H, P = cfg.ssm_heads, cfg.ssm_headdim
+        xh = xi.reshape(Bsz, S, H, P).astype(jnp.float32)
+        dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        y, h_fin = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                               Cm.astype(jnp.float32), cfg, ctx)
+        y = y + xh * p["D_skip"][:, None]
+        y = y.reshape(Bsz, S, cfg.d_inner).astype(x.dtype) * jax.nn.silu(z)
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+        return x + ctx.shard(out, "dp", None, None), (h_fin, conv_state)
+
+    h, (hs, convs) = jax.lax.scan(body, h, params["layers"],
+                                  unroll=L.UNROLL_FOR_COSTING)
+    hfin = L.rms_norm(h, params["final_norm"])
+    logits = L.lm_logits(hfin[:, -1:], params, ctx)
+    state = {"h": hs, "conv": convs, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, state
+
+
+def decode_step(params, state, tokens, cfg: ModelConfig, ctx: DistContext,
+                spec=None):
+    x = L.embed_tokens(tokens, params, ctx)
+    x = ctx.shard(x, "dp", None, None)
+
+    def body(x, xs):
+        lp, hs, cs = xs
+        out, new = mixer_decode(L.rms_norm(x, lp["norm"]), lp["mixer"],
+                                {"h": hs, "conv": cs}, cfg, ctx)
+        return x + out, (new["h"], new["conv"])
+
+    x, (hs, convs) = jax.lax.scan(body, x,
+                                  (params["layers"], state["h"], state["conv"]),
+                                  unroll=L.UNROLL_FOR_COSTING)
+    h = L.rms_norm(x, params["final_norm"])
+    logits = L.lm_logits(h, params, ctx)
+    return logits, {"h": hs, "conv": convs, "pos": state["pos"] + 1}

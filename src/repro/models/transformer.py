@@ -1,0 +1,395 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-backbone).
+
+- Layers are stacked along a leading L dim and executed with ``lax.scan``
+  (keeps HLO size O(1) in depth — essential for 94-layer dry-run compiles).
+- Training uses chunked attention + chunked vocab-sharded loss, with
+  per-layer remat when ``cfg.remat``.
+- Serving uses a KV cache: linear for full-attention decode, ring-buffer
+  of ``sliding_window`` slots for the sub-quadratic long-context variant.
+- VLM (internvl2): the stub vision frontend supplies patch embeddings
+  (B, n_patches, vit_dim); a learned projector maps them to d_model and
+  they are prepended to the token embeddings (prefix is loss-masked).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.partition import DistContext
+
+PyTree = Any
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def interleaved(cfg: ModelConfig) -> bool:
+    """llama4-style: dense and MoE layers alternate (moe_every=2)."""
+    return bool(cfg.n_experts) and cfg.moe_every > 1
+
+
+def init_layer(rng, cfg: ModelConfig, *, moe: Optional[bool] = None) -> PyTree:
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 2)
+    use_moe = bool(cfg.n_experts) if moe is None else moe
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attention(ks[0], cfg, dt),
+        "mlp_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if use_moe:
+        p["moe"] = L.init_moe(ks[1], cfg, dt)
+    else:
+        d_ff = cfg.d_ff_dense or cfg.d_ff
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, d_ff, dt)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    k_embed, k_layers, k_proj = jax.random.split(rng, 3)
+    if interleaved(cfg):
+        n_pairs = cfg.n_layers // 2
+        kd, km = jax.random.split(k_layers)
+        layers = {
+            "dense": jax.vmap(lambda k: init_layer(k, cfg, moe=False))(
+                jax.random.split(kd, n_pairs)),
+            "moe": jax.vmap(lambda k: init_layer(k, cfg, moe=True))(
+                jax.random.split(km, n_pairs)),
+        }
+    else:
+        layers = jax.vmap(lambda k: init_layer(k, cfg))(
+            jax.random.split(k_layers, cfg.n_layers))
+    p = {
+        **L.init_embed(k_embed, cfg, dt),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.family == "vlm":
+        p["projector"] = {"proj": L.dense_init(k_proj, (cfg.vit_dim, cfg.d_model),
+                                               cfg.vit_dim, dt)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill share the layer body)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(x, lp, cfg: ModelConfig, ctx: DistContext, positions, *,
+               window: int, q_chunk: int, kv_chunk: int):
+    h = L.attention_block(L.rms_norm(x, lp["attn_norm"]), lp["attn"], cfg, ctx,
+                          positions=positions, causal=True, window=window,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk)
+    x = x + h
+    hn = L.rms_norm(x, lp["mlp_norm"])
+    if "moe" in lp:
+        h2, (lb, zl) = L.moe_block(hn, lp["moe"], cfg, ctx)
+    else:
+        h2, lb, zl = L.mlp_block(hn, lp["mlp"], ctx), 0.0, 0.0
+    return x + h2, (jnp.float32(lb), jnp.float32(zl))
+
+
+def _stack_fwd(h, params, cfg: ModelConfig, ctx: DistContext, positions, *,
+               window: int, q_chunk=1024, kv_chunk=1024):
+    def layer_call(x, lp):
+        x, aux = _layer_fwd(x, lp, cfg, ctx, positions, window=window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+        # sequence-parallel residual stream between layers: the saved
+        # activation (remat carry) is S-sharded over the model axis —
+        # Megatron SP adapted to XLA SPMD (all-gather re-forms S inside
+        # the next layer's attention; reduce-scatter closes it).
+        return ctx.shard(x, "dp", ctx.tp, None), aux
+
+    fn = layer_call
+    if cfg.remat:
+        fn = jax.checkpoint(layer_call,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+
+    if interleaved(cfg):
+        def body(carry, pair):
+            x, lb, zl = carry
+            x, (l1, l2) = fn(x, pair["dense"])
+            x, (l3, l4) = fn(x, pair["moe"])
+            return (x, lb + l1 + l3, zl + l2 + l4), None
+    else:
+        def body(carry, lp):
+            x, lb, zl = carry
+            x, (l1, l2) = fn(x, lp)
+            return (x, lb + l1, zl + l2), None
+
+    (h, lb, zl), _ = jax.lax.scan(body, (h, jnp.float32(0), jnp.float32(0)),
+                                  params["layers"],
+                                  unroll=L.UNROLL_FOR_COSTING)
+    return L.rms_norm(h, params["final_norm"]), lb, zl
+
+
+def _embed_batch(params, batch, cfg: ModelConfig, ctx: DistContext):
+    """Token (+ optional VLM patch-prefix) embeddings -> (B, S_total, D)."""
+    tok = L.embed_tokens(batch["tokens"], params, ctx)
+    if cfg.family == "vlm" and "patches" in batch:
+        prefix = jnp.einsum("bpv,vd->bpd",
+                            batch["patches"].astype(_dtype(cfg)),
+                            params["projector"]["proj"])
+        tok = jnp.concatenate([prefix, tok], axis=1)
+    return ctx.shard(tok, "dp", None, None)
+
+
+def train_loss(params, batch, cfg: ModelConfig, ctx: DistContext,
+               *, window_override: Optional[int] = None):
+    h = _embed_batch(params, batch, cfg, ctx)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)
+    # training defaults to full causal attention; the sliding-window variant
+    # (the long_500k sub-quadratic opt-in) is selected via window_override.
+    window = 0 if window_override is None else window_override
+    h, lb, zl = _stack_fwd(h, params, cfg, ctx, positions, window=window,
+                           q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    n_prefix = h.shape[1] - labels.shape[1]
+    if n_prefix:  # VLM: no loss on the image prefix
+        h = h[:, n_prefix:]
+    loss = L.lm_loss_chunked(h, params, labels, mask, cfg, ctx)
+    if cfg.n_experts:
+        loss = loss + 0.01 * lb / cfg.n_layers + 0.001 * zl / cfg.n_layers
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CacheSpec:
+    cache_len: int      # slots (== window for ring-buffer archs)
+    ring: bool
+
+
+def cache_spec(cfg: ModelConfig, seq_len: int, *, use_window: bool) -> CacheSpec:
+    if use_window and cfg.sliding_window and seq_len > cfg.sliding_window:
+        return CacheSpec(cache_len=cfg.sliding_window, ring=True)
+    return CacheSpec(cache_len=seq_len, ring=False)
+
+
+def init_cache(params_or_none, cfg: ModelConfig, batch: int, spec: CacheSpec,
+               ctx: DistContext) -> PyTree:
+    dt = jnp.int8 if cfg.kv_quant else _dtype(cfg)
+    Hk, Dh, Ln = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    shape = (Ln, batch, spec.cache_len, Hk, Dh)
+    hspec = (None, "dp", None, ctx.tp, None)
+    cache = {
+        "k": ctx.shard(jnp.zeros(shape, dt), *hspec),
+        "v": ctx.shard(jnp.zeros(shape, dt), *hspec),
+        "kpos": jnp.full((spec.cache_len,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.kv_quant:
+        sshape = (Ln, batch, spec.cache_len, Hk)
+        cache["k_scale"] = ctx.shard(jnp.zeros(sshape, jnp.float32),
+                                     None, "dp", None, ctx.tp)
+        cache["v_scale"] = ctx.shard(jnp.zeros(sshape, jnp.float32),
+                                     None, "dp", None, ctx.tp)
+    return cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: DistContext,
+                spec: CacheSpec):
+    """One decode step. tokens: (B, 1) -> logits (B, 1, V), updated cache."""
+    x = L.embed_tokens(tokens, params, ctx)
+    x = ctx.shard(x, "dp", None, None)
+    pos = cache["pos"]
+    positions = pos[None] + jnp.zeros((1,), jnp.int32)
+    slot = (pos % spec.cache_len) if spec.ring else pos
+    kpos = cache["kpos"].at[slot].set(pos)
+    window = cfg.sliding_window if spec.ring else 0
+    kv_chunk = min(cfg.attn_chunk, spec.cache_len)
+
+    def one_layer(x, lp, kc, vc, ksc=None, vsc=None):
+        xn = L.rms_norm(x, lp["attn_norm"])
+        q, k, v = L.qkv_project(xn, lp["attn"], cfg, ctx, positions)
+        if cfg.kv_quant:
+            # §Perf C: int8 cache — quantize the new token, stream the
+            # cache in int8 (halves the decode memory term)
+            k8, ks_new = L.quantize_kv(k)
+            v8, vs_new = L.quantize_kv(v)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k8, slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v8, slot, axis=1)
+            ksc = jax.lax.dynamic_update_slice_in_dim(ksc, ks_new, slot, axis=1)
+            vsc = jax.lax.dynamic_update_slice_in_dim(vsc, vs_new, slot, axis=1)
+            o = L.flash_attention_kvq(q, kc, vc, ksc, vsc, positions, kpos,
+                                      window=window, kv_chunk=kv_chunk,
+                                      ctx=ctx)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                                     slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                                     slot, axis=1)
+            o = L.flash_attention(q, kc, vc, positions, kpos, causal=True,
+                                  window=window, q_chunk=1, kv_chunk=kv_chunk,
+                                  ctx=ctx)
+        h = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        x = x + ctx.shard(h, "dp", None, None)
+        hn = L.rms_norm(x, lp["mlp_norm"])
+        if "moe" in lp:
+            h2, _ = L.moe_block(hn, lp["moe"], cfg, ctx)
+        else:
+            h2 = L.mlp_block(hn, lp["mlp"], ctx)
+        if ksc is not None:
+            return x + h2, kc, vc, ksc, vsc
+        return x + h2, kc, vc
+
+    quant = cfg.kv_quant
+    if interleaved(cfg):
+        n_pairs = cfg.n_layers // 2
+
+        def pairify(a):
+            return a.reshape((n_pairs, 2) + a.shape[1:])
+
+        if quant:
+            def body(x, xs):
+                pair, kcs, vcs, kss, vss = xs
+                x, k0, v0, s0, t0 = one_layer(x, pair["dense"], kcs[0],
+                                              vcs[0], kss[0], vss[0])
+                x, k1, v1, s1, t1 = one_layer(x, pair["moe"], kcs[1],
+                                              vcs[1], kss[1], vss[1])
+                return x, (jnp.stack([k0, k1]), jnp.stack([v0, v1]),
+                           jnp.stack([s0, s1]), jnp.stack([t0, t1]))
+
+            x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+                body, x, (params["layers"], pairify(cache["k"]),
+                          pairify(cache["v"]), pairify(cache["k_scale"]),
+                          pairify(cache["v_scale"])),
+                unroll=L.UNROLL_FOR_COSTING)
+            k_new = k_new.reshape(cache["k"].shape)
+            v_new = v_new.reshape(cache["v"].shape)
+            ks_new = ks_new.reshape(cache["k_scale"].shape)
+            vs_new = vs_new.reshape(cache["v_scale"].shape)
+        else:
+            def body(x, xs):
+                pair, kcs, vcs = xs
+                x, k0, v0 = one_layer(x, pair["dense"], kcs[0], vcs[0])
+                x, k1, v1 = one_layer(x, pair["moe"], kcs[1], vcs[1])
+                return x, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["layers"], pairify(cache["k"]),
+                          pairify(cache["v"])),
+                unroll=L.UNROLL_FOR_COSTING)
+            k_new = k_new.reshape(cache["k"].shape)
+            v_new = v_new.reshape(cache["v"].shape)
+    else:
+        if quant:
+            def body(x, xs):
+                lp, kc, vc, ks, vs = xs
+                x, kc, vc, ks, vs = one_layer(x, lp, kc, vc, ks, vs)
+                return x, (kc, vc, ks, vs)
+
+            x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"],
+                          cache["k_scale"], cache["v_scale"]),
+                unroll=L.UNROLL_FOR_COSTING)
+        else:
+            def body(x, xs):
+                lp, kc, vc = xs
+                x, kc, vc = one_layer(x, lp, kc, vc)
+                return x, (kc, vc)
+
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]),
+                unroll=L.UNROLL_FOR_COSTING)
+    h = L.rms_norm(x, params["final_norm"])
+    logits = L.lm_logits(h, params, ctx)
+    new_cache = {"k": k_new, "v": v_new, "kpos": kpos, "pos": pos + 1}
+    if quant:
+        new_cache["k_scale"] = ks_new
+        new_cache["v_scale"] = vs_new
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx: DistContext,
+            spec: CacheSpec):
+    """Prefill over a full prompt; returns (logits_last, cache).
+
+    For simplicity the production prefill materializes the cache by running
+    the stacked forward and recomputing K/V per layer (ys of the scan).
+    """
+    h = _embed_batch(params, batch, cfg, ctx)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)
+    window = cfg.sliding_window if (cfg.sliding_window and spec.ring) else 0
+
+    def one_layer(x, lp):
+        xn = L.rms_norm(x, lp["attn_norm"])
+        q, k, v = L.qkv_project(xn, lp["attn"], cfg, ctx, positions)
+        if cfg.triangle_prefill and window == 0:
+            # §Perf A: causal prefill skips the masked-out upper-triangle
+            # kv tiles entirely (~2× fewer attention FLOPs at long S)
+            o = L.flash_attention_triangle(
+                q, k, v, positions, positions,
+                q_chunk=min(cfg.attn_chunk, S),
+                kv_chunk=min(cfg.attn_chunk, S), ctx=ctx)
+        else:
+            o = L.flash_attention(q, k, v, positions, positions, causal=True,
+                                  window=window,
+                                  q_chunk=min(cfg.attn_chunk, S),
+                                  kv_chunk=min(cfg.attn_chunk, S), ctx=ctx)
+        a = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        x = x + ctx.shard(a, "dp", None, None)
+        hn = L.rms_norm(x, lp["mlp_norm"])
+        if "moe" in lp:
+            h2, _ = L.moe_block(hn, lp["moe"], cfg, ctx)
+        else:
+            h2 = L.mlp_block(hn, lp["mlp"], ctx)
+        if spec.ring:
+            # place the last `cache_len` positions at their ring slots so
+            # subsequent decode writes (slot = pos % cache_len) line up
+            W = spec.cache_len
+            kept_pos = jnp.arange(S - W, S)
+            slots = kept_pos % W
+            k_keep = jnp.zeros((k.shape[0], W) + k.shape[2:], _dtype(cfg))
+            v_keep = jnp.zeros_like(k_keep)
+            k_keep = k_keep.at[:, slots].set(k[:, -W:].astype(_dtype(cfg)))
+            v_keep = v_keep.at[:, slots].set(v[:, -W:].astype(_dtype(cfg)))
+        else:
+            k_keep, v_keep = k.astype(_dtype(cfg)), v.astype(_dtype(cfg))
+        return x + h2, (k_keep, v_keep)
+
+    if interleaved(cfg):
+        def body(x, pair):
+            x, (k0, v0) = one_layer(x, pair["dense"])
+            x, (k1, v1) = one_layer(x, pair["moe"])
+            return x, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+
+        x, (ks, vs) = jax.lax.scan(body, h, params["layers"],
+                                   unroll=L.UNROLL_FOR_COSTING)
+        ks = ks.reshape((cfg.n_layers,) + ks.shape[2:])
+        vs = vs.reshape((cfg.n_layers,) + vs.shape[2:])
+    else:
+        def body(x, lp):
+            return one_layer(x, lp)
+
+        x, (ks, vs) = jax.lax.scan(body, h, params["layers"])
+    hfin = L.rms_norm(x, params["final_norm"])
+    logits = L.lm_logits(hfin[:, -1:], params, ctx)
+    if not spec.ring and spec.cache_len > S:
+        # decode slack: room for subsequently generated tokens
+        pad = spec.cache_len - S
+        zk = jnp.zeros(ks.shape[:2] + (pad,) + ks.shape[3:], ks.dtype)
+        ks = jnp.concatenate([ks, zk], axis=2)
+        vs = jnp.concatenate([vs, zk], axis=2)
+    kept = min(spec.cache_len, S)
+    kpos = jnp.full((spec.cache_len,), -1, jnp.int32)
+    kept_positions = jnp.arange(S - kept, S)
+    kpos = kpos.at[kept_positions % spec.cache_len].set(kept_positions)
+    cache = {"k": ks, "v": vs, "kpos": kpos,
+             "pos": jnp.asarray(S, jnp.int32)}
+    if cfg.kv_quant:
+        cache["k"], cache["k_scale"] = L.quantize_kv(ks)
+        cache["v"], cache["v_scale"] = L.quantize_kv(vs)
+    return logits, cache

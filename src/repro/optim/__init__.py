@@ -1,0 +1,4 @@
+"""Optimizers + classic training algorithms (SGD/Adam/ALS/Gibbs)."""
+from repro.optim.optimizers import sgd, momentum, adam, adamw, OptState
+
+__all__ = ["sgd", "momentum", "adam", "adamw", "OptState"]

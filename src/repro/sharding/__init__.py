@@ -1,0 +1,7 @@
+"""Mesh-aware sharding: DistContext, per-arch partition specs, failure domains."""
+from repro.sharding.partition import (DistContext, single_device_ctx,
+                                      make_dist_ctx, param_partition_specs,
+                                      blocks_on_failed_devices)
+
+__all__ = ["DistContext", "single_device_ctx", "make_dist_ctx",
+           "param_partition_specs", "blocks_on_failed_devices"]

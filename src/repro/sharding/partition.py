@@ -1,0 +1,269 @@
+"""Distribution context + parameter partition specs.
+
+``DistContext`` is threaded through every model forward. It carries the mesh
+and the logical→mesh axis mapping, and degrades gracefully to a no-op on a
+single device (smoke tests) so model code is written once:
+
+- ``ctx.shard(x, *axes)``      — with_sharding_constraint, or identity.
+- ``ctx.dp`` / ``ctx.tp``      — the batch (data-parallel) mesh axes and the
+                                 tensor/model-parallel axis name.
+- ``ctx.moe_shard_map(fn,...)``— helper to run the expert-parallel MoE body
+                                 under shard_map over the model axis.
+
+Parameter partition specs (FSDP + TP hybrid, MaxText-style):
+
+- 2-D weights (d_in, d_out): TP on the "wide" axis, FSDP (data) on the other.
+- embeddings (V, D): vocab on TP, D on data.
+- expert weights (E, d_in, d_out): experts on TP, d_in on data (FSDP).
+- biases / norms / small vectors: replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Optional[Mesh] = None
+    dp: tuple[str, ...] = ("data",)   # batch axes (("pod","data") multi-pod)
+    tp: Optional[str] = "model"
+    batch_shardable: bool = True      # False for global batch < |dp| (long_500k)
+    expert_fsdp: bool = True          # False: expert weights expert-parallel only
+
+    @property
+    def dp_spec(self):
+        """Batch-dim spec component (None when batch cannot be sharded)."""
+        if not self.batch_shardable or not self.dp:
+            return None
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+    @property
+    def raw_dp_spec(self):
+        """Batch-axes spec regardless of batch_shardable (for sharding a
+        long sequence/cache dim when the batch itself cannot be split)."""
+        if not self.dp:
+            return None
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp is None:
+            return 1
+        return self.mesh.shape[self.tp]
+
+    def shard(self, x: jnp.ndarray, *axes) -> jnp.ndarray:
+        """with_sharding_constraint(x, P(*axes)); no-op without a mesh.
+
+        ``axes`` entries: None, an axis name, a tuple of axis names, or the
+        sentinel "dp" which expands to the batch axes (or None). Axis
+        assignments that don't divide the dim are dropped (e.g. 12 heads
+        over model=16)."""
+        if self.mesh is None:
+            return x
+        sizes = dict(self.mesh.shape)
+        resolved = []
+        for dim, a in zip(x.shape, axes):
+            a = self.dp_spec if a == "dp" else a
+            if a is None:
+                resolved.append(None)
+                continue
+            group = a if isinstance(a, tuple) else (a,)
+            total = 1
+            for ax in group:
+                total *= sizes[ax]
+            resolved.append(a if dim % total == 0 else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*resolved)))
+
+    def psum_tp(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.mesh is None or self.tp is None:
+            return x
+        return jax.lax.psum(x, self.tp)
+
+
+def single_device_ctx() -> DistContext:
+    return DistContext(mesh=None, dp=(), tp=None)
+
+
+def make_dist_ctx(mesh: Mesh, batch_shardable: bool = True) -> DistContext:
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    tp = "model" if "model" in names else None
+    return DistContext(mesh=mesh, dp=dp, tp=tp, batch_shardable=batch_shardable)
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs
+# ---------------------------------------------------------------------------
+
+def _spec_for_leaf(name: str, shape: tuple[int, ...], ctx: DistContext) -> P:
+    """FSDP+TP spec by leaf-name convention and rank.
+
+    Conventions (see models/*): leaves are named through dict keys; the
+    trailing key determines the role. Layer-stacked leaves have a leading L
+    dim which is never sharded.
+    """
+    tp, dp = ctx.tp, ("data",) if ctx.mesh is not None and "data" in ctx.mesh.axis_names else ()
+    d = dp[0] if dp else None
+    # strip leading layer-stack dim from consideration
+    key = name.rsplit("'", 2)[-2] if "'" in name else name
+
+    def rank_tail(n):  # shape without the layer-stack leading dim
+        return shape[-n:]
+
+    if tp is None:
+        return P()
+
+    def divides(dim: int) -> bool:
+        return dim % ctx.tp_size == 0
+
+    if key in ("embed", "lm_head"):           # (V, D)
+        return P(*([None] * (len(shape) - 2)), tp, d)
+    if key in ("w_gate_experts", "w_up_experts"):   # (L, E, D, F)
+        # §Perf B2: re-homed experts skip the FSDP shard (no per-layer
+        # all-gather of expert weights) at the cost of E/tp experts
+        # resident per device
+        return P(None, tp, d if ctx.expert_fsdp else None, None)
+    if key in ("w_down_experts",):                  # (L, E, F, D)
+        return P(None, tp, None, d if ctx.expert_fsdp else None)
+    if key in ("wq", "wk", "wv"):             # (L, D, H, Dh) — heads on tp,
+        if divides(shape[-2]):                # falling back to head_dim when
+            return P(None, d, tp, None)       # the head count doesn't divide
+        return P(None, d, None, tp)
+    if key in ("wo",):                        # (L, H, Dh, D)
+        if divides(shape[-3]):
+            return P(None, tp, None, d)
+        return P(None, None, tp, d)
+    if key in ("w_gate", "w_up"):             # (L, D, F)
+        return P(None, d, tp)
+    if key in ("w_down",):                    # (L, F, D)
+        return P(None, tp, d)
+    if key in ("in_proj", "out_proj", "proj", "router"):  # generic 2-D (+L)
+        if len(shape) == 3:
+            return P(None, d, tp)
+        if len(shape) == 2:
+            return P(d, tp)
+        return P()
+    # norms, biases, conv kernels, dt params, small tensors: replicated
+    return P()
+
+
+def _fit_spec(shape: tuple[int, ...], spec: P, ctx: DistContext) -> P:
+    """Drop axis assignments that do not divide the corresponding dim.
+
+    E.g. GQA with 2 KV heads cannot shard the head dim over model=16 —
+    that dim falls back to replicated (FSDP still applies elsewhere).
+    """
+    if ctx.mesh is None:
+        return P()
+    sizes = dict(ctx.mesh.shape)
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        out.append(entry if dim % total == 0 else None)
+    return P(*out)
+
+
+def param_partition_specs(params_shape: PyTree, ctx: DistContext) -> PyTree:
+    """PartitionSpec pytree for a params pytree (or its eval_shape)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        spec = _spec_for_leaf(name, tuple(leaf.shape), ctx)
+        specs.append(_fit_spec(tuple(leaf.shape), spec, ctx))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_shardings(params_shape: PyTree, ctx: DistContext) -> PyTree:
+    specs = param_partition_specs(params_shape, ctx)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(ctx.mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def _state_spec_for_leaf(name: str, shape: tuple[int, ...], ctx: DistContext) -> P:
+    """Serving-state (KV cache / SSM state) specs by leaf-name convention."""
+    if ctx.mesh is None or ctx.tp is None:
+        return P()
+    tp = ctx.tp
+    dp = ctx.dp_spec           # None when batch unshardable (long_500k B=1)
+    seq_dp = None if ctx.batch_shardable else ctx.raw_dp_spec
+    key = name.rsplit("'", 2)[-2] if "'" in name else name
+    if key in ("k", "v", "cross_k", "cross_v") and len(shape) == 5:
+        # (L|nseg, B, S, Hk, Dh): batch on dp, or cache length on dp for B=1;
+        # kv heads on tp, falling back to head_dim when Hk doesn't divide
+        if shape[-2] % ctx.tp_size == 0:
+            return P(None, dp, seq_dp, tp, None)
+        return P(None, dp, seq_dp, None, tp)
+    if key in ("k_scale", "v_scale") and len(shape) == 4:
+        # (L, B, S, Hk) int8-cache dequant scales
+        if shape[-1] % ctx.tp_size == 0:
+            return P(None, dp, seq_dp, tp)
+        return P(None, dp, seq_dp, None)
+    if key == "h" and len(shape) == 5:      # (L, B, H, P, N): SSM heads on tp
+        return P(None, dp, tp, None, None)
+    if key == "conv" and len(shape) == 4:   # (L, B, K, DI): channels on tp
+        return P(None, dp, None, tp)
+    return P()                              # kpos / pos / scalars: replicated
+
+
+def state_partition_specs(state_shape: PyTree, ctx: DistContext) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shape)
+    specs = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        spec = _state_spec_for_leaf(name, tuple(leaf.shape), ctx)
+        specs.append(_fit_spec(tuple(leaf.shape), spec, ctx))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_partition_specs(batch_shape: PyTree, ctx: DistContext) -> PyTree:
+    """Input batch specs: leading batch dim over the dp axes."""
+    return jax.tree_util.tree_map(
+        lambda x: P(ctx.dp_spec, *([None] * (len(x.shape) - 1))), batch_shape)
+
+
+# ---------------------------------------------------------------------------
+# Failure domains: mesh devices -> parameter blocks
+# ---------------------------------------------------------------------------
+
+def blocks_on_failed_devices(partition, params_shape: PyTree, ctx: DistContext,
+                             failed_device_fraction: float,
+                             rng: np.random.Generator) -> np.ndarray:
+    """Topology-aware failure: choose a random contiguous slice of mesh
+    devices (a "host"), mark every block whose rows are homed there.
+
+    With FSDP sharding each leaf's leading rows are split over the data
+    axis; a failed data-slice loses the corresponding row ranges. This is
+    the beyond-paper topology-aware failure model; the uniform-random model
+    of Thm 4.2 is in :func:`repro.core.recovery.sample_failure_mask`.
+    """
+    n_data = ctx.mesh.shape.get("data", 1) if ctx.mesh is not None else 1
+    n_fail = max(1, round(failed_device_fraction * n_data))
+    start = int(rng.integers(0, n_data))
+    failed = {(start + i) % n_data for i in range(n_fail)}
+    mask = np.zeros((partition.total_blocks,), bool)
+    for leaf in partition.leaves:
+        # rows of this leaf are split into n_data equal spans (FSDP homes)
+        span = max(1, leaf.rows // n_data)
+        for b in range(leaf.n_blocks):
+            row = min(b * partition.block_rows, leaf.rows - 1)
+            home = min(row // span, n_data - 1)
+            if home in failed:
+                mask[leaf.offset + b] = True
+    return mask

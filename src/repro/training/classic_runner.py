@@ -1,0 +1,134 @@
+"""Experiment runner for the classic iterative-convergent models.
+
+Drives the paper's §5 experiments:
+
+- ``run_clean``              — unperturbed trajectory (the κ(x, ε) baseline).
+- ``run_with_perturbation``  — inject one synthetic perturbation at iteration
+                               T (random / adversarial / reset): Figures 3/5/6.
+- ``run_with_failure``       — full SCAR lifecycle: periodic (partial)
+                               checkpoints via FTController, a failure of a
+                               fraction p of parameter blocks at a sampled
+                               iteration, recovery (full or partial), then
+                               continue to convergence: Figures 7/8.
+
+All return loss trajectories + the empirical iteration cost
+ι = κ(y, ε) − κ(x, ε) measured exactly as the paper does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.controller import FTController
+from repro.core.iteration_cost import empirical_iteration_cost, iterations_to_eps
+from repro.core.perturb import (adversarial_perturbation, random_perturbation,
+                                reset_perturbation)
+from repro.core.policy import CheckpointPolicy
+from repro.core.blocks import partition_pytree, tree_sq_norm
+from repro.models.classic import IterativeModel
+
+PyTree = Any
+
+
+def _keys(seed: int):
+    base = jax.random.PRNGKey(seed)
+
+    def key(i: int):
+        return jax.random.fold_in(base, i)
+    return key
+
+
+def iterations_to_converge(model: IterativeModel, max_iters: int = 400,
+                           seed: int = 0) -> int:
+    traj = run_clean(model, max_iters, seed)["losses"]
+    return iterations_to_eps(traj, model.eps)
+
+
+def run_clean(model: IterativeModel, max_iters: int, seed: int = 0,
+              stop_at_eps: bool = False) -> dict:
+    key = _keys(seed)
+    p = model.init(jax.random.PRNGKey(1))
+    losses = []
+    for i in range(1, max_iters + 1):
+        p = model.step(p, key(i), i)
+        losses.append(float(model.loss(p)))
+        if stop_at_eps and losses[-1] < model.eps:
+            break
+    return {"losses": losses, "params": p}
+
+
+def run_with_perturbation(model: IterativeModel, *, kind: str,
+                          at_iter: int, size: Optional[float] = None,
+                          fraction: Optional[float] = None,
+                          max_iters: int = 400, seed: int = 0,
+                          clean_losses: Optional[list] = None) -> dict:
+    """One perturbation at ``at_iter`` (types of §5.2), run to max_iters.
+
+    kind: "random" (needs size), "adversarial" (needs size),
+    "reset" (needs fraction — reset random blocks to x^(0)).
+    """
+    key = _keys(seed)
+    p0 = model.init(jax.random.PRNGKey(1))
+    partition = partition_pytree(p0, model.block_rows,
+                                 colocate=model.colocate)
+    p = p0
+    losses = []
+    delta_norm = 0.0
+    for i in range(1, max_iters + 1):
+        if i == at_iter:
+            prng = jax.random.fold_in(jax.random.PRNGKey(seed + 77), i)
+            if kind == "random":
+                p, dn = random_perturbation(prng, p, size)
+            elif kind == "adversarial":
+                p, dn = adversarial_perturbation(p, model.x_star(), size)
+            elif kind == "reset":
+                p, dn = reset_perturbation(prng, p, p0, fraction, partition)
+            else:
+                raise ValueError(kind)
+            delta_norm = float(dn)
+        p = model.step(p, key(i), i)
+        losses.append(float(model.loss(p)))
+    if clean_losses is None:
+        clean_losses = run_clean(model, max_iters, seed)["losses"]
+    cost = empirical_iteration_cost(losses, clean_losses, model.eps)
+    return {"losses": losses, "delta_norm": delta_norm,
+            "iteration_cost": cost,
+            "kappa_perturbed": iterations_to_eps(losses, model.eps),
+            "kappa_clean": iterations_to_eps(clean_losses, model.eps)}
+
+
+def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
+                     fail_iter: int, fail_fraction: float,
+                     max_iters: int = 400, seed: int = 0,
+                     clean_losses: Optional[list] = None,
+                     store=None) -> dict:
+    """Full SCAR lifecycle on one classic model (Figures 7/8).
+
+    The failure destroys ``fail_fraction`` of parameter blocks (uniformly at
+    random, the paper's model); recovery follows ``policy.recovery`` from
+    the running checkpoint maintained under ``policy``.
+    """
+    key = _keys(seed)
+    p = model.init(jax.random.PRNGKey(1))
+    ctl = FTController(p, policy, norm_aux=model.norm_aux, store=store,
+                       rng=jax.random.PRNGKey(seed + 13),
+                       colocate=model.colocate)
+    losses = []
+    recovery_info = {}
+    for i in range(1, max_iters + 1):
+        p = model.step(p, key(i), i)
+        ctl.maybe_checkpoint(i, p)
+        if i == fail_iter:
+            lost = ctl.sample_failure(fail_fraction)
+            p, recovery_info = ctl.on_failure(p, lost)
+        losses.append(float(model.loss(p)))
+    if clean_losses is None:
+        clean_losses = run_clean(model, max_iters, seed)["losses"]
+    cost = empirical_iteration_cost(losses, clean_losses, model.eps)
+    return {"losses": losses, "iteration_cost": cost,
+            "recovery": recovery_info, "controller_stats": ctl.stats,
+            "kappa_perturbed": iterations_to_eps(losses, model.eps),
+            "kappa_clean": iterations_to_eps(clean_losses, model.eps)}

@@ -1,0 +1,50 @@
+"""Batched serving driver: prefill a batch of prompts, then decode greedily.
+
+The decode loop is host-driven (one jitted ``decode_step`` per token) —
+the production pattern for continuous batching; cache state stays on
+device across steps.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.sharding.partition import DistContext
+
+PyTree = Any
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, ctx: DistContext, params: PyTree):
+        self.cfg, self.ctx = cfg, ctx
+        self.ops = get_model(cfg)
+        self.params = params
+        self._prefill = jax.jit(
+            lambda p, b: self.ops.prefill(p, b, cfg, ctx))
+        self._decode = jax.jit(
+            lambda p, c, t: self.ops.decode_step(p, c, t, cfg, ctx),
+            donate_argnums=(1,))
+
+    def generate(self, batch: dict, n_new: int,
+                 temperature: float = 0.0,
+                 rng: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Returns (B, n_new) generated token ids (greedy when T=0)."""
+        logits, cache = self._prefill(self.params, batch)
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+        for i in range(n_new - 1):
+            logits, cache = self._decode(self.params, cache, tok)
+            if temperature > 0:
+                rng, sub = jax.random.split(rng)
+                tok = jax.random.categorical(
+                    sub, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
+            else:
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,60 @@
+"""Shared train-step builder (used by TrainLoop and launch/dryrun).
+
+Implements microbatched gradient accumulation (``cfg.microbatch > 1``):
+the global batch is split into MB microbatches processed by a ``lax.scan``
+with an fp32 gradient accumulator sharded like the parameters. This is the
+standard memory lever for the largest dense architectures — per-step
+transient activation memory scales 1/MB while keeping the same global
+batch semantics.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.api import ModelOps
+from repro.optim.optimizers import Optimizer
+from repro.sharding.partition import DistContext
+from repro.training.train_state import TrainState
+
+PyTree = Any
+
+
+def make_train_step(ops: ModelOps, cfg: ModelConfig, ctx: DistContext,
+                    optimizer: Optimizer):
+    loss_and_grad = jax.value_and_grad(ops.train_loss)
+
+    def train_step(state: TrainState, batch: PyTree):
+        mb = max(cfg.microbatch, 1)
+        if mb == 1:
+            loss, grads = loss_and_grad(state.params, batch, cfg, ctx)
+        else:
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + tuple(x.shape[1:]))
+
+            mbatch = jax.tree_util.tree_map(split, batch)
+            acc_dtype = jnp.dtype(cfg.opt_moment_dtype)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), state.params)
+
+            def body(carry, bx):
+                loss_sum, gacc = carry
+                l, g = loss_and_grad(state.params, bx, cfg, ctx)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, x: (a.astype(jnp.float32)
+                                  + x.astype(jnp.float32)).astype(a.dtype),
+                    gacc, g)
+                return (loss_sum + l, gacc), None
+
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), g0), mbatch)
+            loss = loss / mb
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+        params, opt_state = optimizer.update(grads, state.opt_state,
+                                             state.params)
+        return TrainState(params, opt_state, state.step + 1), loss
+
+    return train_step

@@ -1,0 +1,118 @@
+"""SPMD LM trainer with SCAR fault tolerance as a first-class feature.
+
+``TrainLoop`` owns:
+
+- the jitted ``train_step`` (value_and_grad + optimizer update), with
+  params/opt-state sharded per :mod:`repro.sharding.partition` when a mesh
+  is present;
+- an :class:`repro.core.controller.FTController` over the *parameter*
+  PyTree (optimizer moments are recoverable state too — SCAR checkpoints
+  params; Adam moments after a partial restore are simply kept, which is
+  itself a perturbation the theory covers; see DESIGN.md);
+- optional fault injection (iteration sampled from a geometric
+  distribution, as in the paper's §5.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import FTController
+from repro.core.policy import CheckpointPolicy
+from repro.models import get_model
+from repro.optim.optimizers import Optimizer, adamw
+from repro.sharding.partition import DistContext, named_shardings
+from repro.training.train_state import TrainState
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    policy: Optional[CheckpointPolicy] = None
+    fail_prob: float = 0.0          # per-iteration geometric failure prob
+    fail_fraction: float = 0.5      # fraction of blocks lost per failure
+    log_every: int = 10
+    seed: int = 0
+
+
+class TrainLoop:
+    def __init__(self, cfg: ModelConfig, ctx: DistContext,
+                 optimizer: Optional[Optimizer] = None,
+                 loop_cfg: Optional[TrainLoopConfig] = None,
+                 store=None):
+        self.cfg = cfg
+        self.ctx = ctx
+        self.ops = get_model(cfg)
+        self.optimizer = optimizer or adamw(3e-4)
+        self.loop_cfg = loop_cfg or TrainLoopConfig()
+        self._store = store
+        self._rng = np.random.default_rng(self.loop_cfg.seed)
+        self.controller: Optional[FTController] = None
+        self.metrics: list[dict] = []
+
+        from repro.training.step import make_train_step
+        self._train_step = jax.jit(
+            make_train_step(self.ops, cfg, ctx, self.optimizer),
+            donate_argnums=(0,))
+
+    # -- initialization ------------------------------------------------------
+
+    def init_state(self, rng: Optional[jax.Array] = None) -> TrainState:
+        rng = rng if rng is not None else jax.random.PRNGKey(self.loop_cfg.seed)
+        if self.ctx.mesh is not None:
+            p_shape = jax.eval_shape(self.ops.init_params, rng, self.cfg)
+            shardings = named_shardings(p_shape, self.ctx)
+            params = jax.jit(self.ops.init_params, static_argnums=(1,),
+                             out_shardings=shardings)(rng, self.cfg)
+        else:
+            params = self.ops.init_params(rng, self.cfg)
+        state = TrainState.create(params, self.optimizer)
+        if self.loop_cfg.policy is not None:
+            self.controller = FTController(params, self.loop_cfg.policy,
+                                           store=self._store)
+        return state
+
+    # -- run loop -------------------------------------------------------------
+
+    def run(self, state: TrainState, batches, n_steps: int,
+            on_step: Optional[Callable[[int, float], None]] = None,
+            ) -> TrainState:
+        it = iter(batches)
+        for i in range(1, n_steps + 1):
+            t0 = time.perf_counter()
+            state, loss = self._train_step(state, next(it))
+            loss = float(loss)
+            dt = time.perf_counter() - t0
+            rec = {"step": int(state.step), "loss": loss, "seconds": dt}
+
+            if self.controller is not None:
+                if self.controller.maybe_checkpoint(int(state.step),
+                                                    state.params):
+                    rec["checkpointed"] = True
+                if (self.loop_cfg.fail_prob > 0
+                        and self._rng.random() < self.loop_cfg.fail_prob):
+                    lost = self.controller.sample_failure(
+                        self.loop_cfg.fail_fraction)
+                    new_params, info = self.controller.on_failure(
+                        state.params, lost)
+                    state = TrainState(new_params, state.opt_state, state.step)
+                    rec["failure"] = info
+            self.metrics.append(rec)
+            if on_step is not None:
+                on_step(i, loss)
+        return state
+
+    def inject_failure(self, state: TrainState,
+                       fraction: float) -> tuple[TrainState, dict]:
+        """Explicit failure injection (for experiments/examples)."""
+        assert self.controller is not None, "enable a CheckpointPolicy first"
+        lost = self.controller.sample_failure(fraction)
+        new_params, info = self.controller.on_failure(state.params, lost)
+        return TrainState(new_params, state.opt_state, state.step), info

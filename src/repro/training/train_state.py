@@ -1,0 +1,27 @@
+"""Train state container for the SPMD LM trainer."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import OptState
+
+PyTree = Any
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["params", "opt_state", "step"], meta_fields=[])
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt_state: OptState
+    step: jnp.ndarray
+
+    @classmethod
+    def create(cls, params: PyTree, optimizer) -> "TrainState":
+        return cls(params=params, opt_state=optimizer.init(params),
+                   step=jnp.zeros((), jnp.int32))

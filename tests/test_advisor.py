@@ -1,0 +1,48 @@
+"""Predictive checkpoint advisor (paper §7 future work, implemented)."""
+import pytest
+
+from repro.core.advisor import (RunObservations, advise,
+                                expected_iteration_cost, expected_overhead)
+
+
+def _obs(**kw):
+    base = dict(drift_per_iter=0.05, x0_err=10.0, c=0.95, t_iter=1.0,
+                t_dump_full=0.2, failure_rate=0.001, loss_fraction=0.5,
+                current_iter=100)
+    base.update(kw)
+    return RunObservations(**base)
+
+
+def test_cost_monotone_in_interval():
+    obs = _obs()
+    costs = [expected_iteration_cost(obs, 1.0, C) for C in (4, 16, 64)]
+    assert costs[0] <= costs[1] <= costs[2]
+
+
+def test_cost_monotone_in_loss_fraction():
+    a = expected_iteration_cost(_obs(loss_fraction=0.25), 1.0, 8)
+    b = expected_iteration_cost(_obs(loss_fraction=1.0), 1.0, 8)
+    assert a <= b
+
+
+def test_high_failure_rate_prefers_frequent_small_checkpoints():
+    hot, _ = advise(_obs(failure_rate=0.05))
+    cold, _ = advise(_obs(failure_rate=1e-6))
+    # frequent failures -> smaller fraction saved more often (or at least
+    # not a longer effective interval than the cold policy)
+    assert hot.partial_interval <= cold.partial_interval
+
+
+def test_zero_failures_prefers_cheapest_dumps():
+    pol, rep = advise(_obs(failure_rate=0.0))
+    # with no failures the advisor should pick the lowest amortized dump
+    assert rep["expected_overhead_s"] == pytest.approx(
+        min(rep["table"].values()))
+
+
+def test_advise_returns_valid_policy():
+    pol, rep = advise(_obs())
+    assert 0 < pol.fraction <= 1.0
+    assert pol.full_interval >= 1
+    assert rep["chosen"] in {(r, C) for r in (1.0, 0.5, 0.25, 0.125, 0.0625)
+                             for C in (4, 8, 16, 32, 64)}

@@ -1,0 +1,151 @@
+"""Block partition, running checkpoint and selection strategies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blocks import (block_scores, expand_block_mask,
+                               leaf_block_view, masked_sq_norm,
+                               partition_pytree, select_blocks, tree_sq_norm)
+from repro.core.checkpoint import (full_save, init_running_checkpoint,
+                                   save_step)
+from repro.core.norms import get_norm
+from repro.core.policy import CheckpointPolicy, SelectionStrategy
+
+
+@pytest.fixture
+def params():
+    return {"w": jnp.arange(200.0, dtype=jnp.float32).reshape(50, 4),
+            "b": jnp.ones((5,), jnp.float32),
+            "scalar": jnp.float32(3.0)}
+
+
+def test_partition_covers_everything(params):
+    part = partition_pytree(params, block_rows=16)
+    # every leaf gets ceil(rows/block_rows) blocks
+    per_leaf = {l.name: l.n_blocks for l in part.leaves}
+    assert per_leaf["['w']"] == 4     # ceil(50/16)
+    assert per_leaf["['b']"] == 1
+    assert per_leaf["['scalar']"] == 1
+    assert part.total_blocks == 6
+    assert part.total_params == 206
+
+
+def test_leaf_block_view_pads_with_zeros(params):
+    v = leaf_block_view(params["w"], 16)
+    assert v.shape == (4, 64)
+    # last block has 50-48=2 rows of data then zeros
+    assert float(jnp.sum(v[3, 8:])) == 0.0
+
+
+def test_select_blocks_semantics(params):
+    part = partition_pytree(params, block_rows=16)
+    other = jax.tree_util.tree_map(lambda x: x * 0 - 1.0, params)
+    mask = jnp.zeros((part.total_blocks,), bool).at[1].set(True)  # scalar? order
+    out = select_blocks(params, other, mask, part)
+    leaves_in = jax.tree_util.tree_leaves(params)
+    leaves_out = jax.tree_util.tree_leaves(out)
+    # exactly the rows of the masked block changed
+    changed = sum(int(jnp.sum(a != b)) for a, b in zip(leaves_in, leaves_out))
+    assert changed > 0
+
+
+def test_masked_norm_matches_dense(params):
+    part = partition_pytree(params, block_rows=16)
+    other = jax.tree_util.tree_map(lambda x: x + 2.0, params)
+    full_mask = jnp.ones((part.total_blocks,), bool)
+    assert float(masked_sq_norm(params, other, full_mask, part)) == \
+        pytest.approx(float(tree_sq_norm(params, other)), rel=1e-6)
+
+
+def test_priority_selects_most_drifted(params):
+    pol = CheckpointPolicy(fraction=0.2, full_interval=10,
+                           strategy=SelectionStrategy.PRIORITY)
+    part = partition_pytree(params, pol.block_rows)
+    ckpt = init_running_checkpoint(params, part)
+    # drift only rows 0..15 of w (block 0 of w)
+    drifted = {**params, "w": params["w"].at[:16].add(100.0)}
+    norm = get_norm("l2")
+    new_ckpt, mask = save_step(ckpt, drifted, jnp.int32(3), policy=pol,
+                               partition=part, norm_fn=norm)
+    k = part.blocks_for_k(0.2)
+    assert int(mask.sum()) == k
+    # the w block 0 must be selected; find w leaf offset
+    w_leaf = [l for l in part.leaves if l.name == "['w']"][0]
+    assert bool(mask[w_leaf.offset])
+    # checkpoint now holds the drifted values for that block
+    assert float(new_ckpt.values["w"][0, 0]) == pytest.approx(100.0)
+    assert int(new_ckpt.saved_iter[w_leaf.offset]) == 3
+
+
+def test_round_robin_cycles(params):
+    pol = CheckpointPolicy(fraction=0.34, full_interval=3,
+                           strategy=SelectionStrategy.ROUND_ROBIN)
+    part = partition_pytree(params, pol.block_rows)
+    ckpt = init_running_checkpoint(params, part)
+    seen = set()
+    norm = get_norm("l2")
+    for step in range(1, 5):
+        ckpt, mask = save_step(ckpt, params, jnp.int32(step), policy=pol,
+                               partition=part, norm_fn=norm)
+        seen |= set(np.nonzero(np.asarray(mask))[0].tolist())
+    assert seen == set(range(part.total_blocks))   # full coverage
+
+
+def test_random_needs_rng(params):
+    pol = CheckpointPolicy(fraction=0.5, full_interval=2,
+                           strategy=SelectionStrategy.RANDOM)
+    part = partition_pytree(params, pol.block_rows)
+    ckpt = init_running_checkpoint(params, part)
+    with pytest.raises(ValueError):
+        save_step(ckpt, params, jnp.int32(1), policy=pol, partition=part,
+                  norm_fn=get_norm("l2"))
+    _, mask = save_step(ckpt, params, jnp.int32(1), policy=pol,
+                        partition=part, norm_fn=get_norm("l2"),
+                        rng=jax.random.PRNGKey(0))
+    assert int(mask.sum()) == part.blocks_for_k(0.5)
+
+
+def test_full_save(params):
+    part = partition_pytree(params, 16)
+    ckpt = init_running_checkpoint(params, part)
+    p2 = jax.tree_util.tree_map(lambda x: x + 1, params)
+    ckpt2 = full_save(ckpt, p2, jnp.int32(7))
+    assert float(tree_sq_norm(ckpt2.values, p2)) == 0.0
+    assert int(ckpt2.saved_iter[0]) == 7
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        CheckpointPolicy(fraction=0.0)
+    with pytest.raises(ValueError):
+        CheckpointPolicy(fraction=1.5)
+    assert CheckpointPolicy.scar().partial_interval == 1
+    assert CheckpointPolicy.traditional(8).full_interval == 8
+
+
+def test_colocated_partition_shares_blocks():
+    """PS reality: optimizer moments fail/recover WITH their parameters."""
+    import numpy as np
+    from repro.core.blocks import (block_scores, masked_sq_norm,
+                                   select_blocks, tree_sq_norm)
+    from repro.core.norms import get_norm
+    tree = {"net": {"w": jnp.ones((16, 3)), "b": jnp.ones((4,))},
+            "mu": {"w": jnp.zeros((16, 3)), "b": jnp.zeros((4,))},
+            "nu": {"w": jnp.zeros((16, 3)), "b": jnp.zeros((4,))},
+            "t": jnp.zeros((), jnp.int32)}
+    part = partition_pytree(tree, 8, colocate=("net", "mu", "nu"))
+    assert part.total_blocks == 4           # b-group, 2 w-group blocks, t
+    other = jax.tree_util.tree_map(lambda x: x + 1, tree)
+    mask = jnp.zeros((4,), bool).at[1].set(True)   # first w-group block
+    out = select_blocks(tree, other, mask, part)
+    # the same rows flip in net.w AND mu.w AND nu.w — never mixed state
+    for g in ("net", "mu", "nu"):
+        assert float(out[g]["w"][0, 0]) == float(other[g]["w"][0, 0])
+        assert float(out[g]["w"][15, 0]) == float(tree[g]["w"][15, 0])
+        assert float(out[g]["b"][0]) == float(tree[g]["b"][0])
+    # scores accumulate per group; full-mask norm is exact
+    full = jnp.ones((4,), bool)
+    np.testing.assert_allclose(
+        float(masked_sq_norm(tree, other, full, part)),
+        float(tree_sq_norm(tree, other)), rtol=1e-6)

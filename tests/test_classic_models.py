@@ -1,0 +1,82 @@
+"""The paper's experiment models: convergence + runner mechanics."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.policy import CheckpointPolicy
+from repro.models.classic import make_model
+from repro.training import (run_clean, run_with_failure,
+                            run_with_perturbation)
+
+# small-but-faithful configs so the whole file runs in ~2 min on CPU
+SMALL = {
+    "qp": {},
+    "mlr": dict(n=600, dim=64, n_classes=5, batch=200),
+    "mf": dict(m=120, n=180, rank=4),
+    "lda": dict(n_docs=60, vocab=120, n_topics=5, doc_len_mean=40),
+}
+
+
+@pytest.mark.parametrize("name", list(SMALL))
+def test_converges_to_eps(name):
+    model = make_model(name, **SMALL[name])
+    res = run_clean(model, max_iters=150, seed=0)
+    assert min(res["losses"]) < model.eps
+
+
+@pytest.mark.parametrize("name", ["qp", "mlr"])
+def test_random_perturbation_costs_iterations(name):
+    model = make_model(name, **SMALL[name])
+    clean = run_clean(model, 200, seed=0)["losses"]
+    res = run_with_perturbation(model, kind="random", at_iter=30, size=5.0,
+                                max_iters=200, seed=0, clean_losses=clean)
+    assert res["delta_norm"] == pytest.approx(5.0, rel=1e-4)
+    assert res["kappa_perturbed"] <= 200
+
+
+def test_adversarial_worse_than_random_qp():
+    """Paper Fig. 5: adversarial perturbations cost at least as much."""
+    model = make_model("qp")
+    clean = run_clean(model, 400, seed=0)["losses"]
+    costs = {}
+    for kind in ("random", "adversarial"):
+        cs = []
+        for seed in range(5):
+            r = run_with_perturbation(model, kind=kind, at_iter=30, size=2.0,
+                                      max_iters=400, seed=seed,
+                                      clean_losses=clean)
+            cs.append(r["iteration_cost"])
+        costs[kind] = np.mean(cs)
+    assert costs["adversarial"] >= costs["random"] - 1.0
+
+
+def test_reset_perturbation_scales_with_fraction():
+    model = make_model("mlr", **SMALL["mlr"])
+    clean = run_clean(model, 150, seed=0)["losses"]
+    small = run_with_perturbation(model, kind="reset", at_iter=30,
+                                  fraction=0.1, max_iters=150, seed=0,
+                                  clean_losses=clean)
+    large = run_with_perturbation(model, kind="reset", at_iter=30,
+                                  fraction=0.9, max_iters=150, seed=0,
+                                  clean_losses=clean)
+    assert small["delta_norm"] <= large["delta_norm"]
+
+
+def test_run_with_failure_records_recovery():
+    model = make_model("mlr", **SMALL["mlr"])
+    res = run_with_failure(model, CheckpointPolicy.scar(0.5, 4),
+                           fail_iter=20, fail_fraction=0.5, max_iters=100,
+                           seed=1)
+    assert res["recovery"]["partial_sq"] <= res["recovery"]["full_sq"]
+    assert res["controller_stats"]["saves"] > 0
+    assert np.isfinite(res["losses"]).all()
+
+
+def test_lda_scaled_tv_norm_available():
+    model = make_model("lda", **SMALL["lda"])
+    assert model.norm_aux is not None
+    res = run_with_failure(
+        model,
+        CheckpointPolicy.scar(0.25, 8, norm="scaled_tv"),
+        fail_iter=20, fail_fraction=0.5, max_iters=60, seed=0)
+    assert np.isfinite(res["losses"]).all()

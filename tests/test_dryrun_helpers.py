@@ -1,0 +1,57 @@
+"""HLO collective-bytes accounting + dry-run applicability rules."""
+from repro.configs import get_config
+from repro.launch.dryrun import (_shapes_bytes, applicable, collective_stats,
+                                 SHAPES)
+
+HLO = """
+HloModule jit_train_step
+
+%fused (a: f32[8,128]) -> f32[8,128] {
+  ROOT %x = f32[8,128] add(%a, %a)
+}
+
+ENTRY %main {
+  %ag = bf16[256,4096] all-gather(%p0), replica_groups={...}, dimensions={0}
+  %ar = f32[1024] all-reduce(%p1), to_apply=%sum
+  %rs = bf16[16,128] reduce-scatter(%p2), dimensions={0}
+  %a2a = f32[64,64] all-to-all(%p3), dimensions={1}
+  %cp = u32[32] collective-permute(%p4), source_target_pairs={{0,1}}
+  %notacoll = f32[999,999] dot(%p5, %p6)
+  ROOT %out = (f32[1]) tuple(%r)
+}
+"""
+
+
+def test_shapes_bytes():
+    assert _shapes_bytes("f32[10,10]") == 400
+    assert _shapes_bytes("bf16[8]") == 16
+    assert _shapes_bytes("(f32[2], s32[3])") == 8 + 12
+    assert _shapes_bytes("pred[7]") == 7
+    assert _shapes_bytes("token[]") == 0
+
+
+def test_collective_stats_counts_and_bytes():
+    st = collective_stats(HLO)
+    assert st["all-gather"]["count"] == 1
+    assert st["all-gather"]["bytes"] == 256 * 4096 * 2
+    assert st["all-reduce"]["bytes"] == 1024 * 4
+    assert st["reduce-scatter"]["count"] == 1
+    assert st["all-to-all"]["bytes"] == 64 * 64 * 4
+    assert st["collective-permute"]["bytes"] == 32 * 4
+    # the dot is not counted
+    assert st["total_bytes"] == (256 * 4096 * 2 + 4096 + 16 * 128 * 2
+                                 + 64 * 64 * 4 + 128)
+
+
+def test_applicability_rules():
+    whisper = get_config("whisper-medium")
+    ok, why = applicable(whisper, "long_500k")
+    assert not ok and "enc-dec" in why
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        assert applicable(whisper, shape)[0]
+    # every non-audio arch runs all four shapes (dense via sliding window)
+    for name in ("granite-8b", "mamba2-370m", "zamba2-1.2b",
+                 "qwen3-moe-235b-a22b"):
+        cfg = get_config(name)
+        for shape in SHAPES:
+            assert applicable(cfg, shape)[0], (name, shape)

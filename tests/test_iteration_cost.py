@@ -1,0 +1,102 @@
+"""Theory layer: Theorem 3.2 / Appendix B bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.iteration_cost import (delta_T, discounted_delta,
+                                       empirical_iteration_cost,
+                                       estimate_contraction,
+                                       infinite_perturbation_bound,
+                                       irreducible_error,
+                                       iteration_cost_bound,
+                                       iterations_to_eps,
+                                       sgd_iteration_bound,
+                                       single_perturbation_bound)
+
+
+def test_delta_T_single_perturbation():
+    # one perturbation of norm 2 at iter 3, c=0.5 -> Δ = c^{-3}·2 = 16
+    deltas = np.array([0, 0, 0, 2.0])
+    assert float(delta_T(deltas, 0.5)) == pytest.approx(16.0)
+
+
+def test_delta_T_matches_discounted():
+    deltas = np.array([1.0, 0.5, 0.0, 2.0])
+    c = 0.8
+    T = len(deltas) - 1
+    assert float(discounted_delta(deltas, c, T)) == pytest.approx(
+        float(delta_T(deltas, c)) * c ** T, rel=1e-5)
+
+
+def test_bound_zero_perturbation_is_zero():
+    assert float(iteration_cost_bound(np.zeros(5), 0.9, 10.0)) == pytest.approx(0.0)
+
+
+def test_bound_monotone_in_delta():
+    prev = 0.0
+    for size in [0.1, 1.0, 10.0, 100.0]:
+        b = single_perturbation_bound(size, 0.9, T=10, x0_err=5.0)
+        assert b > prev
+        prev = b
+
+
+def test_bound_grows_with_T():
+    # later perturbations are costlier (discounted by c^{-T})
+    b1 = single_perturbation_bound(1.0, 0.9, T=5, x0_err=5.0)
+    b2 = single_perturbation_bound(1.0, 0.9, T=50, x0_err=5.0)
+    assert b2 > b1
+
+
+def test_bound_tight_on_linear_contraction():
+    """Synthetic exactly-linear iteration: bound should match measured cost
+    (the paper's tightness claim for adversarial perturbations)."""
+    c, x0 = 0.9, 10.0
+    eps = 1e-3
+    T, size = 40, 5.0
+
+    def run(perturb):
+        x, errs = x0, []
+        for k in range(1, 400):
+            if perturb and k == T:
+                x += size          # adversarial: directly away from 0
+            x = c * x
+            errs.append(abs(x))
+        return errs
+
+    clean, pert = run(False), run(True)
+    measured = empirical_iteration_cost(pert, clean, eps)
+    bound = single_perturbation_bound(size, c, T=T, x0_err=x0)
+    assert measured <= bound + 1.0
+    # tight within a couple of iterations (integer effects)
+    assert bound - measured < 3.0
+
+
+def test_estimate_contraction_exact_geometric():
+    errs = [5.0 * 0.85 ** k for k in range(50)]
+    assert estimate_contraction(errs) == pytest.approx(0.85, rel=1e-3)
+
+
+def test_iterations_to_eps():
+    errs = [10, 5, 2, 1, 0.5, 0.2]
+    assert iterations_to_eps(errs, 0.6) == 4
+    assert iterations_to_eps(errs, 0.01) == len(errs)
+
+
+def test_infinite_perturbation_irreducible():
+    # Appendix B.1: below the irreducible error the bound is infinite
+    c, D = 0.9, 0.5
+    irr = irreducible_error(D, c)
+    assert irr == pytest.approx(4.5)
+    assert infinite_perturbation_bound(D, c, x0_err=100.0, eps=irr * 0.9) == float("inf")
+    finite = infinite_perturbation_bound(D, c, x0_err=100.0, eps=irr * 2)
+    assert np.isfinite(finite) and finite > 0
+
+
+def test_sgd_bound_reasonable():
+    # no perturbations: must still converge in finite iterations
+    k0 = sgd_iteration_bound(np.zeros(1), alpha0=1.0, G=1.0,
+                             x0_err=10.0, eps=0.5)
+    k1 = sgd_iteration_bound(np.array([5.0]), alpha0=1.0, G=1.0,
+                             x0_err=10.0, eps=0.5)
+    assert 0 < k0 <= k1 < 1_000_000

@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture is instantiated as a REDUCED variant
+(2 layers, d_model ≤ 512, ≤ 4 experts) and runs one forward/train step on
+CPU, asserting output shapes and absence of NaNs. The FULL configs are
+exercised only via the dry-run (launch/dryrun.py, ShapeDtypeStructs).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.data import lm_batch
+from repro.models import get_model
+from repro.sharding import single_device_ctx
+
+ARCHS = list_configs()
+B, S = 2, 64
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return single_device_ctx()
+
+
+def _setup(name):
+    cfg = get_config(name, reduced=True)
+    ops = get_model(cfg)
+    params = ops.init_params(jax.random.PRNGKey(0), cfg)
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, B, S)
+    return cfg, ops, params, batch
+
+
+def test_all_ten_assigned_archs_registered():
+    expected = {"internvl2-76b", "zamba2-1.2b", "granite-8b",
+                "command-r-plus-104b", "qwen3-moe-235b-a22b", "mamba2-370m",
+                "llama4-maverick-400b-a17b", "qwen2-1.5b", "yi-9b",
+                "whisper-medium"}
+    assert expected == set(ARCHS)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_full_config_matches_assignment(name):
+    cfg = get_config(name)
+    full = {
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+    }[name]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab) == full
+    assert cfg.source  # every config cites its source
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_reduced_constraints(name):
+    cfg = get_config(name, reduced=True)
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_smoke(name, ctx):
+    cfg, ops, params, batch = _setup(name)
+    loss, grads = jax.value_and_grad(ops.train_loss)(params, batch, cfg, ctx)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_decode_smoke(name, ctx):
+    cfg, ops, params, batch = _setup(name)
+    logits, cache = ops.prefill(params, batch, cfg, ctx)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits2, cache2 = ops.decode_step(params, cache, tok, cfg, ctx)
+    assert logits2.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_fresh_cache_decode(name, ctx):
+    cfg, ops, params, _ = _setup(name)
+    cache = ops.init_cache(cfg, B, S, ctx)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, _ = ops.decode_step(params, cache, tok, cfg, ctx)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_decode_matches_prefill_dense(ctx):
+    """Teacher-forcing consistency: token-by-token decode logits equal a
+    fresh prefill's last-position logits (dense family)."""
+    cfg = get_config("yi-9b", reduced=True)
+    ops = get_model(cfg)
+    params = ops.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 9), 0, cfg.vocab)
+    # prefill on first 8 tokens
+    logits_p, cache = ops.prefill(
+        params, {"tokens": toks[:, :8]}, cfg, ctx)
+    # decode the 9th
+    logits_d, _ = ops.decode_step(params, cache, toks[:, 8:9], cfg, ctx)
+    # reference: prefill of all 9
+    logits_f, _ = ops.prefill(params, {"tokens": toks}, cfg, ctx)
+    np.testing.assert_allclose(np.asarray(logits_d[:, -1]),
+                               np.asarray(logits_f[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_prefill_ssm(ctx):
+    cfg = get_config("mamba2-370m", reduced=True)
+    ops = get_model(cfg)
+    params = ops.init_params(jax.random.PRNGKey(0), cfg)
+    # seq length must be a multiple of the ssd chunk for prefill
+    Sq = cfg.ssm_chunk * 2
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, Sq + 1), 0, cfg.vocab)
+    logits_p, state = ops.prefill(params, {"tokens": toks[:, :Sq]}, cfg, ctx)
+    logits_d, _ = ops.decode_step(params, state, toks[:, Sq:], cfg, ctx)
+    logits_f, _ = ops.prefill(
+        params, {"tokens": jnp.pad(toks, ((0, 0), (0, cfg.ssm_chunk - 1)))},
+        cfg, ctx)
+    # compare against a direct step-by-step reference instead: decode all
+    state2 = ops.init_cache(cfg, 1, Sq, ctx)
+    for t in range(Sq + 1):
+        logits_s, state2 = ops.decode_step(params, state2, toks[:, t:t + 1],
+                                           cfg, ctx)
+    np.testing.assert_allclose(np.asarray(logits_d[:, -1]),
+                               np.asarray(logits_s[:, -1]),
+                               rtol=2e-3, atol=2e-3)

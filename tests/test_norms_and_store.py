@@ -1,0 +1,66 @@
+"""Norm plugins + the persistent sharded checkpoint store."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint_io import ShardedCheckpointStore
+from repro.core.blocks import LeafMeta, block_scores, partition_pytree
+from repro.core.norms import get_norm
+
+
+def test_l2_norm():
+    a = jnp.asarray([[1.0, 2.0], [0.0, 0.0]])
+    b = jnp.zeros((2, 2))
+    leaf = LeafMeta("x", (2, 2), jnp.float32, 2, 2, 2, 0)
+    got = get_norm("l2")(a, b, leaf)
+    np.testing.assert_allclose(got, [5.0, 0.0])
+
+
+def test_scaled_tv_norm_weights():
+    # two "documents" (rows) that are distributions over 4 topics
+    rows = jnp.asarray([[0.5, 0.5, 0.0, 0.0],
+                        [0.25, 0.25, 0.25, 0.25]])
+    prev = jnp.asarray([[1.0, 0.0, 0.0, 0.0],
+                        [0.25, 0.25, 0.25, 0.25]])
+    weights = np.asarray([10.0, 3.0], np.float32)
+    params = {"theta": rows}
+    ck = {"theta": prev}
+    part = partition_pytree(params, block_rows=1)
+    norm = get_norm("scaled_tv", aux={"['theta']": weights}, block_rows=1)
+    scores = block_scores(params, ck, part, norm)
+    # TV(row0) = 0.5 -> 5.0 weighted; TV(row1) = 0
+    np.testing.assert_allclose(scores, [5.0, 0.0], rtol=1e-6)
+
+
+def test_unknown_norm_raises():
+    with pytest.raises(KeyError):
+        get_norm("nope")
+
+
+def test_store_roundtrip_partial_writes():
+    params = {"w": jnp.arange(60.0, dtype=jnp.float32).reshape(20, 3),
+              "b": jnp.ones((4,), jnp.float32)}
+    part = partition_pytree(params, block_rows=8)
+    with tempfile.TemporaryDirectory() as d:
+        store = ShardedCheckpointStore(d)
+        store.init(params, part)
+        # overwrite one block with new values
+        newp = jax.tree_util.tree_map(lambda x: x * 10, params)
+        mask = np.zeros((part.total_blocks,), bool)
+        w_leaf = [l for l in part.leaves if l.name == "['w']"][0]
+        mask[w_leaf.offset + 1] = True   # rows 8..15 of w
+        store.write_blocks(mask, newp, step=5, background=True)
+        store.flush()
+        back = store.read_all()
+        w = np.asarray(back["w"])
+        np.testing.assert_array_equal(w[:8], np.asarray(params["w"])[:8])
+        np.testing.assert_array_equal(w[8:16], np.asarray(newp["w"])[8:16])
+        np.testing.assert_array_equal(np.asarray(back["b"]),
+                                      np.asarray(params["b"]))
+        iters = store.saved_iters()
+        assert iters[w_leaf.offset + 1] == 5
+        assert iters[w_leaf.offset] == 0

@@ -1,0 +1,87 @@
+"""Beyond-paper §Perf variants: correctness vs the paper-faithful baseline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import lm_batch
+from repro.models import get_model
+from repro.models.layers import quantize_kv
+from repro.sharding import single_device_ctx
+
+CTX = single_device_ctx()
+
+
+@pytest.mark.parametrize("name", ["yi-9b", "qwen3-moe-235b-a22b",
+                                  "llama4-maverick-400b-a17b"])
+def test_triangle_prefill_matches_baseline(name):
+    base = get_config(name, reduced=True)
+    ops = get_model(base)
+    params = ops.init_params(jax.random.PRNGKey(0), base)
+    batch = lm_batch(jax.random.PRNGKey(1), base, 2, 64)
+    cfgt = dataclasses.replace(base, triangle_prefill=True)
+    lp_b, _ = ops.prefill(params, batch, base, CTX)
+    lp_t, _ = get_model(cfgt).prefill(params, batch, cfgt, CTX)
+    np.testing.assert_allclose(np.asarray(lp_b, np.float32),
+                               np.asarray(lp_t, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("name", ["yi-9b", "llama4-maverick-400b-a17b"])
+def test_kv_quant_decode_close_to_baseline(name):
+    base = get_config(name, reduced=True)
+    ops = get_model(base)
+    params = ops.init_params(jax.random.PRNGKey(0), base)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    c_b = ops.init_cache(base, 2, 64, CTX)
+    l_b, c_b = ops.decode_step(params, c_b, tok, base, CTX)
+    l_b2, _ = ops.decode_step(params, c_b, tok + 1, base, CTX)
+
+    cfgq = dataclasses.replace(base, kv_quant=True)
+    opsq = get_model(cfgq)
+    c_q = opsq.init_cache(cfgq, 2, 64, CTX)
+    assert c_q["k"].dtype == jnp.int8
+    l_q, c_q = opsq.decode_step(params, c_q, tok, cfgq, CTX)
+    l_q2, _ = opsq.decode_step(params, c_q, tok + 1, cfgq, CTX)
+    p_b = jax.nn.softmax(l_b2[:, -1].astype(jnp.float32))
+    p_q = jax.nn.softmax(l_q2[:, -1].astype(jnp.float32))
+    assert float(jnp.max(jnp.abs(p_b - p_q))) < 0.05
+
+
+def test_kv_quant_prefill_then_decode():
+    cfgq = dataclasses.replace(get_config("granite-8b", reduced=True),
+                               kv_quant=True)
+    ops = get_model(cfgq)
+    params = ops.init_params(jax.random.PRNGKey(0), cfgq)
+    batch = lm_batch(jax.random.PRNGKey(1), cfgq, 2, 32)
+    logits, cache = ops.prefill(params, batch, cfgq, CTX)
+    assert cache["k"].dtype == jnp.int8
+    l2, _ = ops.decode_step(params, cache, jnp.zeros((2, 1), jnp.int32),
+                            cfgq, CTX)
+    assert np.isfinite(np.asarray(l2, np.float32)).all()
+
+
+def test_quantize_kv_roundtrip_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 16, 4, 32)), jnp.float32)
+    q, scale = quantize_kv(x)
+    assert q.dtype == jnp.int8
+    back = q.astype(jnp.float32) * scale[..., None]
+    # int8 with per-(token, head) scales: ~1% relative error
+    rel = float(jnp.max(jnp.abs(back - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.01
+
+
+def test_moe_reduce_scatter_single_device_noop():
+    """Without a mesh the flag must not change results."""
+    base = get_config("qwen3-moe-235b-a22b", reduced=True)
+    cfgr = dataclasses.replace(base, moe_reduce_scatter=True)
+    ops = get_model(base)
+    params = ops.init_params(jax.random.PRNGKey(0), base)
+    batch = lm_batch(jax.random.PRNGKey(1), base, 2, 64)
+    l1 = ops.train_loss(params, batch, base, CTX)
+    l2 = get_model(cfgr).train_loss(params, batch, cfgr, CTX)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-6)

@@ -1,0 +1,99 @@
+"""Hypothesis property tests on SCAR's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocks import (masked_sq_norm, partition_pytree,
+                               select_blocks, tree_sq_norm)
+from repro.core.checkpoint import init_running_checkpoint
+from repro.core.iteration_cost import (delta_T, iteration_cost_bound,
+                                       single_perturbation_bound)
+from repro.core.recovery import perturbation_norms, sample_failure_mask
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _tree(seed, rows, width):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(rows, width)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(max(1, rows // 7),)), jnp.float32)}
+
+
+@given(seed=st.integers(0, 2**16), rows=st.integers(4, 120),
+       width=st.integers(1, 9), block_rows=st.integers(1, 32),
+       frac=st.floats(0.05, 1.0))
+@settings(**SETTINGS)
+def test_theorem_4_1_holds_for_arbitrary_trees(seed, rows, width, block_rows,
+                                               frac):
+    """||δ'|| ≤ ||δ|| for every tree shape, blocking, and failure mask."""
+    params = _tree(seed, rows, width)
+    part = partition_pytree(params, block_rows)
+    ckpt = init_running_checkpoint(params, part)
+    live = jax.tree_util.tree_map(lambda x: x * 1.3 + 0.1, params)
+    mask = sample_failure_mask(jax.random.PRNGKey(seed), part, frac)
+    info = perturbation_norms(live, ckpt, mask, part)
+    assert float(info["partial_sq"]) <= float(info["full_sq"]) * (1 + 1e-5) + 1e-5
+
+
+@given(seed=st.integers(0, 2**16), rows=st.integers(4, 80),
+       block_rows=st.integers(1, 16))
+@settings(**SETTINGS)
+def test_select_blocks_partition_of_unity(seed, rows, block_rows):
+    """select(a,b,m) + select(b,a,m) == a + b elementwise."""
+    a = _tree(seed, rows, 3)
+    b = jax.tree_util.tree_map(lambda x: x * -0.5 + 2.0, a)
+    part = partition_pytree(a, block_rows)
+    mask = sample_failure_mask(jax.random.PRNGKey(seed + 1), part, 0.5)
+    s1 = select_blocks(a, b, mask, part)
+    s2 = select_blocks(b, a, mask, part)
+    tot1 = jax.tree_util.tree_map(lambda x, y: x + y, s1, s2)
+    tot2 = jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+    for x, y in zip(jax.tree_util.tree_leaves(tot1),
+                    jax.tree_util.tree_leaves(tot2)):
+        np.testing.assert_allclose(x, y, rtol=1e-6)
+
+
+@given(seed=st.integers(0, 2**16), rows=st.integers(4, 80),
+       block_rows=st.integers(1, 16))
+@settings(**SETTINGS)
+def test_full_mask_equals_tree_norm(seed, rows, block_rows):
+    a = _tree(seed, rows, 4)
+    b = jax.tree_util.tree_map(lambda x: x + 1.7, a)
+    part = partition_pytree(a, block_rows)
+    full = jnp.ones((part.total_blocks,), bool)
+    np.testing.assert_allclose(float(masked_sq_norm(a, b, full, part)),
+                               float(tree_sq_norm(a, b)), rtol=1e-5)
+
+
+@given(c=st.floats(0.05, 0.95), x0=st.floats(0.5, 100.0),
+       sizes=st.lists(st.floats(0.0, 50.0), min_size=1, max_size=8))
+@settings(**SETTINGS)
+def test_bound_nonnegative_and_monotone(c, x0, sizes):
+    deltas = np.asarray(sizes)
+    b = float(iteration_cost_bound(deltas, c, x0))
+    assert b >= -1e-9
+    b2 = float(iteration_cost_bound(deltas * 2, c, x0))
+    assert b2 >= b - 1e-9
+
+
+@given(c=st.floats(0.1, 0.9), size=st.floats(0.01, 10.0),
+       T=st.integers(1, 30), x0=st.floats(0.5, 50.0))
+@settings(**SETTINGS)
+def test_single_perturbation_consistent_with_general(c, size, T, x0):
+    deltas = np.zeros(T + 1)
+    deltas[T] = size
+    general = float(iteration_cost_bound(deltas, c, x0))
+    special = single_perturbation_bound(size, c, T, x0)
+    np.testing.assert_allclose(general, special, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 2**16), frac=st.floats(0.01, 1.0),
+       rows=st.integers(8, 100))
+@settings(**SETTINGS)
+def test_failure_mask_size(seed, frac, rows):
+    params = _tree(seed, rows, 2)
+    part = partition_pytree(params, 8)
+    mask = sample_failure_mask(jax.random.PRNGKey(seed), part, frac)
+    expected = max(1, round(frac * part.total_blocks))
+    assert int(mask.sum()) == min(expected, part.total_blocks)

@@ -1,0 +1,75 @@
+"""Recovery semantics + Theorems 4.1 / 4.2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blocks import partition_pytree, tree_sq_norm
+from repro.core.checkpoint import init_running_checkpoint
+from repro.core.policy import RecoveryMode
+from repro.core.recovery import (apply_failure_and_recover,
+                                 perturbation_norms, recover,
+                                 sample_failure_mask)
+
+
+def _setup(seed=0, rows=96, width=3, block_rows=8):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(rows, width)), jnp.float32)}
+    part = partition_pytree(params, block_rows)
+    ckpt = init_running_checkpoint(params, part)
+    live = jax.tree_util.tree_map(
+        lambda x: x + jnp.asarray(rng.normal(size=x.shape), jnp.float32), params)
+    return params, part, ckpt, live
+
+
+def test_theorem_4_1_partial_leq_full():
+    params, part, ckpt, live = _setup()
+    for seed in range(20):
+        mask = sample_failure_mask(jax.random.PRNGKey(seed), part, 0.5)
+        info = perturbation_norms(live, ckpt, mask, part)
+        assert float(info["partial_sq"]) <= float(info["full_sq"]) * (1 + 1e-5) + 1e-6
+
+
+def test_theorem_4_2_expectation():
+    """E||δ'||² = p||δ||² for uniformly-random block loss."""
+    params, part, ckpt, live = _setup(rows=512, block_rows=8)
+    full = float(tree_sq_norm(ckpt.values, live))
+    for p in (0.25, 0.5, 0.75):
+        sqs = []
+        for seed in range(200):
+            mask = sample_failure_mask(jax.random.PRNGKey(seed), part, p)
+            info = perturbation_norms(live, ckpt, mask, part)
+            sqs.append(float(info["partial_sq"]))
+        ratio = np.mean(sqs) / full
+        assert ratio == pytest.approx(p, rel=0.15)
+
+
+def test_partial_recovery_only_touches_lost_blocks():
+    params, part, ckpt, live = _setup()
+    mask = sample_failure_mask(jax.random.PRNGKey(1), part, 0.25)
+    rec = recover(live, ckpt, mask, RecoveryMode.PARTIAL, part)
+    # survivors identical to live; lost equal to checkpoint
+    lost_rows = np.repeat(np.asarray(mask), part.block_rows)[:96]
+    live_w = np.asarray(live["w"])
+    rec_w = np.asarray(rec["w"])
+    ck_w = np.asarray(ckpt.values["w"])
+    np.testing.assert_array_equal(rec_w[~lost_rows], live_w[~lost_rows])
+    np.testing.assert_array_equal(rec_w[lost_rows], ck_w[lost_rows])
+
+
+def test_full_recovery_restores_checkpoint():
+    params, part, ckpt, live = _setup()
+    mask = sample_failure_mask(jax.random.PRNGKey(1), part, 0.25)
+    rec, info = apply_failure_and_recover(live, ckpt, mask,
+                                          RecoveryMode.FULL, part)
+    assert float(tree_sq_norm(rec, ckpt.values)) == 0.0
+    assert info["applied_sq"] == pytest.approx(info["full_sq"], rel=1e-5)
+
+
+def test_partial_applied_delta_matches_partial_norm():
+    params, part, ckpt, live = _setup()
+    mask = sample_failure_mask(jax.random.PRNGKey(2), part, 0.5)
+    rec, info = apply_failure_and_recover(live, ckpt, mask,
+                                          RecoveryMode.PARTIAL, part)
+    assert float(info["applied_sq"]) == pytest.approx(
+        float(info["partial_sq"]), rel=1e-5)
