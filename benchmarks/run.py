@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   fig8  — priority/round/random checkpoints + headline  (bench_priority)
   fig9  — system overhead (t_dump vs t_step, budget)    (bench_overhead)
   kern  — Pallas kernel microbenches vs jnp oracles     (bench_kernels)
+  tier  — tiered recovery fabric vs checkpoint-only     (bench_tiered_recovery)
 """
 from __future__ import annotations
 
@@ -19,7 +20,7 @@ import time
 
 from benchmarks import (bench_kernels, bench_mlr_bound, bench_overhead,
                         bench_partial_recovery, bench_priority, bench_qp_bound,
-                        bench_reset)
+                        bench_reset, bench_tiered_recovery)
 
 SECTIONS = {
     "fig3": bench_qp_bound.run,
@@ -29,6 +30,7 @@ SECTIONS = {
     "fig8": bench_priority.run,
     "fig9": bench_overhead.run,
     "kern": bench_kernels.run,
+    "tier": bench_tiered_recovery.run,
 }
 
 

@@ -35,6 +35,7 @@ class ShardedCheckpointStore:
         self.must_reload = False
         self._q: "queue.Queue" = queue.Queue()
         self._worker: Optional[threading.Thread] = None
+        self._worker_error: Optional[BaseException] = None
         os.makedirs(root, exist_ok=True)
 
     # -- lifecycle ----------------------------------------------------------
@@ -51,14 +52,21 @@ class ShardedCheckpointStore:
             ],
             "saved_iter": [0] * partition.total_blocks,
         }
-        with open(self._manifest_path(), "w") as f:
-            json.dump(manifest, f)
+        self._write_manifest(manifest)
         # initial full mirror (x^(0)) — the running checkpoint's base
         full_mask = np.ones((partition.total_blocks,), bool)
         self.write_blocks(full_mask, params, step=0, background=False)
 
     def _manifest_path(self) -> str:
         return os.path.join(self.root, "MANIFEST.json")
+
+    def _write_manifest(self, manifest: dict) -> None:
+        """Atomic replace: a crash mid-write can never leave a torn manifest
+        (readers either see the old complete file or the new one)."""
+        tmp = self._manifest_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, self._manifest_path())
 
     def _block_path(self, gid: int) -> str:
         return os.path.join(self.root, f"block_{gid:08d}.npy")
@@ -100,26 +108,45 @@ class ShardedCheckpointStore:
     def _drain(self) -> None:
         while True:
             item = self._q.get()
-            if item is None:
-                return
-            _, jobs, step = item
-            self._do_write(jobs, step)
-            self._q.task_done()
+            try:
+                if item is None:
+                    return
+                _, jobs, step = item
+                self._do_write(jobs, step)
+            except BaseException as e:  # keep draining; surface on flush()
+                self._worker_error = e
+            finally:
+                # task_done even on failure — otherwise q.join() in flush()
+                # deadlocks forever on the first bad write
+                self._q.task_done()
 
     def _do_write(self, jobs, step: int) -> None:
         for gid, blk in jobs:
-            np.save(self._block_path(gid), blk)
+            # atomic like the manifest: a crash mid-overwrite must not tear
+            # the previous good copy of the block
+            path = self._block_path(gid)
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                np.save(f, blk)
+            os.replace(tmp, path)
         with open(self._manifest_path()) as f:
             manifest = json.load(f)
         for gid, _ in jobs:
             manifest["saved_iter"][gid] = int(step)
-        with open(self._manifest_path(), "w") as f:
-            json.dump(manifest, f)
+        self._write_manifest(manifest)
 
     def flush(self) -> None:
-        """Block until all background writes have landed."""
+        """Block until all background writes have landed.
+
+        Raises if any background write failed since the last flush — a
+        silently-lost mirror write would otherwise surface only at recovery
+        time, when the data is already gone.
+        """
         if self._worker is not None and self._worker.is_alive():
             self._q.join()
+        if self._worker_error is not None:
+            err, self._worker_error = self._worker_error, None
+            raise RuntimeError("background checkpoint write failed") from err
 
     # -- read path ----------------------------------------------------------
 

@@ -11,6 +11,11 @@ Host-side orchestrator that owns the running checkpoint and drives:
    partially (or fully) restore from the running checkpoint. If the
    in-memory replica itself was lost (total failure), reload from the
    persistent store.
+3. *Fabric coordination* (optional ``fabric=``) — maintain the tiered
+   redundancy fabric (anti-affine peer replicas + XOR parity,
+   :mod:`repro.fabric`) alongside the running checkpoint, and route
+   ``on_failure`` through the tier planner so each lost block recovers
+   from the cheapest surviving tier, with per-tier perturbation stats.
 
 The controller is deliberately thin: all numerics are pure functions from
 :mod:`repro.core.checkpoint` / :mod:`repro.core.recovery`, so it composes
@@ -24,13 +29,16 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.blocks import BlockPartition, block_scores, partition_pytree
+from repro.core.blocks import (BlockPartition, block_scores,
+                               partition_pytree, tree_sq_norm)
 from repro.core.checkpoint import (RunningCheckpoint, full_save,
                                    init_running_checkpoint, save_step)
 from repro.core.norms import get_norm
 from repro.core.policy import CheckpointPolicy, RecoveryMode, SelectionStrategy
-from repro.core.recovery import apply_failure_and_recover, sample_failure_mask
+from repro.core.recovery import (apply_failure_and_recover,
+                                 perturbation_norms, sample_failure_mask)
 
 PyTree = Any
 
@@ -43,7 +51,8 @@ class FTController:
                  store: Optional[Any] = None,
                  score_fn: Optional[Callable] = None,
                  rng: Optional[jax.Array] = None,
-                 colocate: tuple = ()):
+                 colocate: tuple = (),
+                 fabric: Optional[Any] = None):
         self.policy = policy
         self.partition = partition_pytree(params, policy.block_rows,
                                           colocate=colocate)
@@ -53,6 +62,26 @@ class FTController:
         self.store = store
         self._score_fn = score_fn  # optional kernel-backed scorer
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+        # np generator for topology sampling, derived from the jax key
+        # (key_data handles both legacy uint32 and typed key arrays)
+        np_seed = int(np.asarray(
+            jax.random.key_data(self._rng)).ravel()[-1])
+        self._np_rng = np.random.default_rng(np_seed)
+        # fabric: a CheckpointFabric, or a FabricConfig to build one over
+        # this controller's partition (import deferred so fabric-less
+        # controllers never pay the fabric/kernel import chain)
+        if fabric is not None:
+            from repro.fabric import CheckpointFabric, FabricConfig
+            if isinstance(fabric, FabricConfig):
+                fabric = CheckpointFabric(self.partition, fabric)
+            if policy.recovery == RecoveryMode.FULL:
+                # the tier planner is inherently partial (survivors keep
+                # live values); a FULL-recovery baseline must not silently
+                # degrade into it
+                raise ValueError("fabric recovery is tiered/partial; use "
+                                 "recovery=RecoveryMode.PARTIAL or drop "
+                                 "the fabric for a FULL-recovery baseline")
+        self.fabric = fabric
         self.stats = {"saves": 0, "recoveries": 0, "save_seconds": 0.0,
                       "blocks_saved": 0, "bytes_mirrored": 0}
         self._jit_save = jax.jit(partial(
@@ -101,7 +130,16 @@ class FTController:
             self.stats["bytes_mirrored"] += self.store.write_blocks(
                 mask, self.ckpt.values, step,
                 background=self.policy.async_persist)
+        if self.fabric is not None:
+            # keep the redundancy tiers at least as fresh as the checkpoint
+            self.fabric.maintain(int(step), params, force=True)
         return mask
+
+    def maintain(self, step: int, params: PyTree) -> None:
+        """Per-iteration fabric upkeep (replica refresh / parity re-encode
+        on their configured intervals). No-op without a fabric."""
+        if self.fabric is not None:
+            self.fabric.maintain(int(step), params)
 
     # -- recovery path ------------------------------------------------------
 
@@ -109,15 +147,43 @@ class FTController:
         self._rng, sub = jax.random.split(self._rng)
         return sample_failure_mask(sub, self.partition, fraction)
 
+    def sample_domain_failure(self, kind: str = "host",
+                              ) -> tuple[np.ndarray, np.ndarray]:
+        """Correlated whole-domain failure → (lost mask, failed devices).
+        Requires a fabric (it owns the failure-domain topology)."""
+        assert self.fabric is not None, "domain failures need a fabric"
+        return self.fabric.sample_domain_failure(self._np_rng, kind)
+
     def on_failure(self, params: PyTree, lost_mask: jnp.ndarray,
+                   failed_devices=None, step: Optional[int] = None,
                    ) -> tuple[PyTree, dict]:
-        """Recover from a partial failure. Returns (params', diagnostics)."""
+        """Recover from a partial failure. Returns (params', diagnostics).
+
+        With a fabric, recovery routes through the tier planner: each lost
+        block resolves to the cheapest surviving redundancy tier, and the
+        diagnostics gain per-tier block counts and perturbation norms.
+        ``failed_devices`` names the dead devices of a correlated failure
+        (None = the paper's uniform block-loss model).
+        """
         ckpt = self.ckpt
         if self.store is not None and getattr(self.store, "must_reload", False):
             values = self.store.read_all()
             ckpt = RunningCheckpoint(values, ckpt.saved_iter, ckpt.rr_cursor)
-        recovered, info = apply_failure_and_recover(
-            params, ckpt, lost_mask, self.policy.recovery, self.partition)
+        if self.fabric is not None:
+            lost = np.asarray(lost_mask, bool)
+            info = perturbation_norms(params, ckpt, jnp.asarray(lost),
+                                      self.partition)
+            recovered, tier_info = self.fabric.on_failure(
+                params, ckpt.values, lost,
+                failed_devices=failed_devices, step=step,
+                disk_reader=(self.store.read_all if self.store is not None
+                             else None))
+            info["applied_sq"] = tree_sq_norm(recovered, params)
+            info["lost_blocks"] = int(lost.sum())
+            info.update(tier_info)
+        else:
+            recovered, info = apply_failure_and_recover(
+                params, ckpt, lost_mask, self.policy.recovery, self.partition)
         self.stats["recoveries"] += 1
         return recovered, {k: (float(v) if hasattr(v, "item") else v)
                            for k, v in info.items()}

@@ -1,0 +1,19 @@
+"""Tiered checkpoint fabric: failure domains, peer replication, parity.
+
+The paper's SCAR recovers every lost block from one redundancy tier — the
+in-memory running checkpoint (with a disk mirror behind it). Production
+failures are *correlated* (a host or rack dies, taking every block homed
+there), and cheaper redundancy tiers exist: anti-affine peer replicas and
+XOR parity groups recover *live* block values at zero perturbation. This
+package layers those tiers above the running checkpoint and resolves each
+lost block to the cheapest surviving one. See DESIGN.md.
+"""
+from repro.fabric.domains import FailureDomainMap, FailureEvent
+from repro.fabric.fabric import CheckpointFabric, FabricConfig
+from repro.fabric.parity import ParityCodec
+from repro.fabric.replica import ReplicaSet
+from repro.fabric.tiers import RecoveryTier, TieredRecovery, TierPlan
+
+__all__ = ["FailureDomainMap", "FailureEvent", "CheckpointFabric",
+           "FabricConfig", "ParityCodec", "ReplicaSet", "RecoveryTier",
+           "TieredRecovery", "TierPlan"]

@@ -1,0 +1,128 @@
+"""The checkpoint fabric facade: topology + replicas + parity + planner.
+
+``CheckpointFabric`` is the single object the FTController (and the
+training loops) talk to:
+
+- ``maintain(step, params)``      — refresh replicas / re-encode parity on
+                                    their configured intervals (idempotent
+                                    per step).
+- ``sample_domain_failure(...)``  — correlated whole-domain failure: the
+                                    lost-block mask plus the failed devices.
+- ``on_failure(...)``             — tier-plan the lost blocks, recover each
+                                    from the cheapest surviving tier, and
+                                    report per-tier perturbation norms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.blocks import BlockPartition
+from repro.fabric.domains import FailureDomainMap
+from repro.fabric.parity import ParityCodec
+from repro.fabric.replica import ReplicaSet
+from repro.fabric.tiers import TieredRecovery
+from repro.sharding.partition import block_device_homes
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    n_devices: int = 8
+    devices_per_host: int = 2
+    hosts_per_rack: int = 2
+    replicate: bool = True
+    replicate_interval: int = 1    # steps between replica refreshes
+    parity: bool = True
+    parity_group: int = 4          # members per XOR parity group
+    parity_interval: int = 1       # steps between parity re-encodes
+    use_pallas: Optional[bool] = None   # None = auto: Pallas on TPU only
+
+    def __post_init__(self):
+        if self.replicate_interval < 1 or self.parity_interval < 1:
+            raise ValueError("maintenance intervals must be >= 1")
+
+
+class CheckpointFabric:
+    def __init__(self, partition: BlockPartition,
+                 cfg: Optional[FabricConfig] = None,
+                 homes: Optional[np.ndarray] = None):
+        self.cfg = cfg or FabricConfig()
+        self.partition = partition
+        self.domains = FailureDomainMap(self.cfg.n_devices,
+                                        self.cfg.devices_per_host,
+                                        self.cfg.hosts_per_rack)
+        self.homes = (np.asarray(homes, np.int32) if homes is not None
+                      else block_device_homes(partition, self.cfg.n_devices))
+        self.replicas = (ReplicaSet(partition, self.homes, self.domains)
+                         if self.cfg.replicate else None)
+        self.parity = (ParityCodec(partition, self.homes, self.domains,
+                                   group_size=self.cfg.parity_group,
+                                   use_pallas=self.cfg.use_pallas)
+                       if self.cfg.parity else None)
+        self.planner = TieredRecovery(partition, self.domains, self.homes,
+                                      replicas=self.replicas,
+                                      parity=self.parity)
+        self.last_maintained_step = -1
+        self.stats = {"replica_refreshes": 0, "parity_encodes": 0,
+                      "recoveries": 0}
+
+    # -- maintenance ---------------------------------------------------------
+
+    def maintain(self, step: int, params: PyTree, force: bool = False) -> None:
+        """Refresh redundancy tiers from live params (idempotent per step)."""
+        step = int(step)
+        if step == self.last_maintained_step and not force:
+            return
+        if self.replicas is not None and (
+                force or step % self.cfg.replicate_interval == 0):
+            self.replicas.refresh(step, params)
+            self.stats["replica_refreshes"] += 1
+        if self.parity is not None and (
+                force or step % self.cfg.parity_interval == 0):
+            self.parity.encode(step, params)
+            self.stats["parity_encodes"] += 1
+        self.last_maintained_step = step
+
+    def redundancy_nbytes(self) -> dict[str, int]:
+        return {
+            "replica": self.replicas.nbytes() if self.replicas else 0,
+            "parity": self.parity.nbytes() if self.parity else 0,
+        }
+
+    # -- failure injection ---------------------------------------------------
+
+    def sample_domain_failure(self, rng: np.random.Generator,
+                              kind: str = "host",
+                              ) -> tuple[np.ndarray, np.ndarray]:
+        """Correlated whole-domain loss → (lost block mask, failed devices)."""
+        failed = self.domains.sample_domain_failure(rng, kind)
+        lost = np.isin(self.homes, failed)
+        return lost, failed
+
+    # -- recovery ------------------------------------------------------------
+
+    def on_failure(self, params: PyTree, ckpt_values: PyTree,
+                   lost_mask, failed_devices=None,
+                   step: Optional[int] = None,
+                   disk_values: Optional[PyTree] = None,
+                   disk_reader=None,
+                   ) -> tuple[PyTree, dict]:
+        """Tier-planned recovery. ``failed_devices=None`` models the paper's
+        uniform block loss (no device actually died — every redundancy tier
+        survives). ``step=None`` assumes the failure hit at the last
+        maintained step, i.e. replicas/parity are fresh."""
+        if failed_devices is None:
+            failed_devices = np.empty((0,), np.int32)
+        if step is None:
+            step = self.last_maintained_step
+        plan = self.planner.plan(lost_mask, failed_devices, step)
+        recovered, stats = self.planner.recover(params, ckpt_values, plan,
+                                                disk_values=disk_values,
+                                                disk_reader=disk_reader)
+        self.stats["recoveries"] += 1
+        stats["failed_devices"] = int(np.asarray(failed_devices).size)
+        return recovered, stats

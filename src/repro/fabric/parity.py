@@ -1,0 +1,276 @@
+"""XOR parity groups over blocks with single-erasure reconstruction (tier 2).
+
+Storage-cheap redundancy: blocks are striped into groups of ``g`` members
+whose homes sit on *distinct hosts*, and one parity block (the XOR of the
+members' bit patterns) is kept per group — 1/g of the replica tier's
+memory. A whole-host failure then loses at most one member per group, and
+the lost member is reconstructed bit-exactly as
+``parity ^ XOR(surviving members)`` by the fused Pallas ``parity_xor``
+kernel.
+
+Reconstruction needs the survivors' frames *as of encode time*; re-encoding
+runs at memory bandwidth (one XOR pass), so the codec is refreshed every
+maintenance call and reconstruction recovers the *live* value — zero
+perturbation, same accounting as the replica tier. A stale parity (any
+parameter update since encode) is unusable — the XOR would mix bit patterns
+from different iterations into garbage — so the tier planner gates on
+freshness.
+
+Block frames: each block's payload is packed as the float32 bit pattern of
+its rows, one fixed-width int32 row per global block id (zero-padded —
+zeros are XOR-neutral). Colocated leaves (shared block ids) concatenate
+side by side within the frame.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import (BlockPartition, LeafMeta, expand_block_mask,
+                               leaf_block_view)
+from repro.fabric.domains import FailureDomainMap
+from repro.kernels.parity_xor.ops import parity_encode, parity_reconstruct
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Block frames: fixed-width bit-pattern rows, one per global block id
+# ---------------------------------------------------------------------------
+
+def _leaf_frame_width(leaf: LeafMeta, block_rows: int) -> int:
+    # matches leaf_block_view: single-block leaves are unpadded
+    if leaf.n_blocks == 1:
+        return max(leaf.rows, 1) * leaf.row_width
+    return block_rows * leaf.row_width
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameLayout:
+    """Column placement of each leaf's payload inside its blocks' frames."""
+    cols: tuple[int, ...]      # per-leaf start column
+    widths: tuple[int, ...]    # per-leaf payload width
+    frame_elems: int           # int32 words per frame
+
+
+def frame_layout(partition: BlockPartition) -> FrameLayout:
+    cols, widths = [], []
+    used: dict[int, int] = {}  # block-id offset -> columns consumed so far
+    for leaf in partition.leaves:
+        w = _leaf_frame_width(leaf, partition.block_rows)
+        start = used.get(leaf.offset, 0)   # colocated leaves share offsets
+        cols.append(start)
+        widths.append(w)
+        used[leaf.offset] = start + w
+    return FrameLayout(tuple(cols), tuple(widths), max(used.values()))
+
+
+def pack_frames(values: PyTree, partition: BlockPartition,
+                layout: FrameLayout) -> jnp.ndarray:
+    """(total_blocks, frame_elems) int32 — float32 bit patterns, 0-padded."""
+    out = jnp.zeros((partition.total_blocks, layout.frame_elems), jnp.int32)
+    flat = jax.tree_util.tree_leaves(values)
+    for x, leaf, col, w in zip(flat, partition.leaves, layout.cols,
+                               layout.widths):
+        view = leaf_block_view(x.astype(jnp.float32), partition.block_rows)
+        bits = jax.lax.bitcast_convert_type(view, jnp.int32)
+        out = out.at[leaf.offset:leaf.offset + leaf.n_blocks,
+                     col:col + w].set(bits)
+    return out
+
+
+def unpack_frames_into(dst: PyTree, frames_by_block: jnp.ndarray,
+                       block_mask: np.ndarray, partition: BlockPartition,
+                       layout: FrameLayout) -> PyTree:
+    """Overwrite the masked blocks of ``dst`` with values decoded from
+    ``frames_by_block``; all other blocks pass through untouched."""
+    mask = np.asarray(block_mask, bool)
+    flat = jax.tree_util.tree_leaves(dst)
+    out = []
+    for x, leaf, col, w in zip(flat, partition.leaves, layout.cols,
+                               layout.widths):
+        seg = mask[leaf.offset:leaf.offset + leaf.n_blocks]
+        if not seg.any():
+            out.append(x)
+            continue
+        bits = frames_by_block[leaf.offset:leaf.offset + leaf.n_blocks,
+                               col:col + w]
+        vals = jax.lax.bitcast_convert_type(bits, jnp.float32)
+        rows = max(leaf.rows, 1)
+        decoded = vals.reshape(-1, max(leaf.row_width, 1))[:rows]
+        decoded = decoded.reshape(leaf.shape).astype(x.dtype)
+        em = expand_block_mask(jnp.asarray(seg), leaf, partition.block_rows)
+        out.append(jnp.where(em, decoded, x))
+    return jax.tree_util.tree_unflatten(partition.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Anti-affine group construction
+# ---------------------------------------------------------------------------
+
+def stripe_groups(homes: np.ndarray, domains: FailureDomainMap,
+                  group_size: int) -> np.ndarray:
+    """(n_groups, group_size) int32 member block ids, -1 padded.
+
+    RAID-style striping: round-robin over per-host bucket lists so
+    consecutive members come from distinct hosts — whenever ≥ group_size
+    hosts still have blocks left, a group's members are host-disjoint and a
+    single host failure erases at most one member. Tail groups on skewed
+    layouts may violate this; the tier planner checks actual survivorship,
+    so anti-affinity here is a placement optimization, not a correctness
+    requirement.
+    """
+    homes = np.asarray(homes)
+    hosts = np.asarray(domains.host_of(homes))
+    buckets = {h: list(np.nonzero(hosts == h)[0]) for h in np.unique(hosts)}
+    order: list[int] = []
+    while buckets:
+        for h in sorted(buckets):
+            order.append(int(buckets[h].pop(0)))
+            if not buckets[h]:
+                del buckets[h]
+    n_groups = -(-len(order) // group_size)
+    members = np.full((n_groups, group_size), -1, np.int32)
+    for i, b in enumerate(order):
+        members[i // group_size, i % group_size] = b
+    return members
+
+
+def _parity_homes(members: np.ndarray, homes: np.ndarray,
+                  domains: FailureDomainMap) -> np.ndarray:
+    """Home each parity block on a device whose host holds no member.
+
+    When every host carries a member (group as wide as the topology), fall
+    back to a device holding no member, spread across groups — a host loss
+    then still leaves most groups' parity alive."""
+    out = np.zeros((members.shape[0],), np.int32)
+    for j, row in enumerate(members):
+        ids = row[row >= 0]
+        member_hosts = set(np.asarray(domains.host_of(homes[ids])).ravel())
+        member_devs = set(int(d) for d in homes[ids])
+        start = int(homes[ids[0]]) + domains.devices_per_host + j
+        chosen = None
+        for off in range(domains.n_devices):
+            d = (start + off) % domains.n_devices
+            if int(domains.host_of(d)) not in member_hosts:
+                chosen = d
+                break
+            if chosen is None and d not in member_devs:
+                chosen = d
+        out[j] = chosen if chosen is not None else start % domains.n_devices
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Codec
+# ---------------------------------------------------------------------------
+
+class ParityCodec:
+    """XOR parity over anti-affine block groups, Pallas-kernel backed."""
+
+    def __init__(self, partition: BlockPartition, homes: np.ndarray,
+                 domains: FailureDomainMap, group_size: int = 4,
+                 use_pallas: bool | None = None):
+        if group_size < 2:
+            raise ValueError("parity group_size must be >= 2")
+        # RAID-style width clamp: members + parity must fit in the host
+        # count, else a single host failure can erase two stripe units and
+        # the single-erasure code cannot recover. Leaves one host free to
+        # hold the parity block whenever the topology has ≥3 hosts.
+        if domains.n_hosts >= 3:
+            group_size = min(group_size, domains.n_hosts - 1)
+        self.partition = partition
+        self.domains = domains
+        self.homes = np.asarray(homes, np.int32)
+        self.group_size = group_size
+        self.use_pallas = use_pallas
+        self.layout = frame_layout(partition)
+        self.members = stripe_groups(self.homes, domains, group_size)
+        self.n_groups = self.members.shape[0]
+        self.group_of = np.full((partition.total_blocks,), -1, np.int32)
+        for j, row in enumerate(self.members):
+            for b in row[row >= 0]:
+                self.group_of[b] = j
+        self.parity_homes = _parity_homes(self.members, self.homes, domains)
+        self.valid = (self.members >= 0)
+        # -1 members gather row 0 but are masked out by ``valid``
+        self._gather_ids = np.where(self.valid, self.members, 0)
+        self.parity: Optional[jnp.ndarray] = None
+        self.encoded_step = -1
+        # encode runs every maintenance interval (the hot loop): fuse
+        # pack + gather + XOR fold into one cached jitted program so the
+        # per-step cost is one dispatch, not a per-leaf eager op chain
+        gather = jnp.asarray(self._gather_ids)
+        valid = jnp.asarray(self.valid)
+
+        def _encode(values):
+            frames = pack_frames(values, self.partition, self.layout)
+            return parity_encode(frames[gather], valid,
+                                 use_pallas=self.use_pallas)
+        self._encode_fn = jax.jit(_encode)
+
+    # -- maintenance ---------------------------------------------------------
+
+    def encode(self, step: int, values: PyTree) -> None:
+        """Re-encode all parity blocks from live values (one XOR pass)."""
+        self.parity = self._encode_fn(values)
+        self.encoded_step = int(step)
+
+    def is_fresh(self, step: int) -> bool:
+        return self.parity is not None and self.encoded_step == int(step)
+
+    def nbytes(self) -> int:
+        return 0 if self.parity is None else int(self.parity.nbytes)
+
+    # -- recovery ------------------------------------------------------------
+
+    def reconstructable(self, lost_mask: np.ndarray,
+                        available_mask: np.ndarray,
+                        failed_devices, step: int) -> np.ndarray:
+        """(total_blocks,) bool — lost blocks recoverable from parity.
+
+        A lost block is parity-recoverable iff the parity is fresh, its
+        group's parity home survived, and it is the group's *only* member
+        without an available live frame (single-erasure code).
+        """
+        total = self.partition.total_blocks
+        if not self.is_fresh(step):
+            return np.zeros((total,), bool)
+        lost = np.asarray(lost_mask, bool)
+        available = np.asarray(available_mask, bool)
+        failed = np.asarray(failed_devices, np.int32)
+        parity_alive = ~np.isin(self.parity_homes, failed)
+        member_unavail = self.valid & ~available[self._gather_ids]
+        single_erasure = member_unavail.sum(axis=1) == 1
+        ok_group = parity_alive & single_erasure
+        out = np.zeros((total,), bool)
+        grouped_ok = ok_group[:, None] & member_unavail
+        out[self._gather_ids[grouped_ok]] = True
+        return out & lost
+
+    def reconstruct(self, values: PyTree, recover_mask: np.ndarray,
+                    available_mask: np.ndarray) -> jnp.ndarray:
+        """Reconstruct the masked blocks' frames; returns a
+        (total_blocks, frame_elems) int32 buffer (zeros off-mask).
+
+        ``values`` must hold live frames for every available member
+        (survivors and fresh-replica-restored blocks).
+        """
+        assert self.parity is not None
+        frames = pack_frames(values, self.partition, self.layout)
+        grouped = frames[jnp.asarray(self._gather_ids)]
+        survivors = self.valid & np.asarray(available_mask, bool)[
+            self._gather_ids]
+        rec = parity_reconstruct(grouped, self.parity,
+                                 jnp.asarray(survivors),
+                                 use_pallas=self.use_pallas)
+        ids = np.nonzero(np.asarray(recover_mask, bool))[0]
+        out = jnp.zeros_like(frames)
+        if ids.size:
+            out = out.at[jnp.asarray(ids)].set(rec[jnp.asarray(
+                self.group_of[ids])])
+        return out

@@ -1,0 +1,67 @@
+"""Anti-affine peer replication of running-state blocks (tier 1).
+
+Each block's replica is placed ring-shifted into a different failure domain
+(the next rack when racks exist, else the next host), so a whole-domain
+failure never takes a block *and* its replica together. Replicas hold live
+parameter values as of the last refresh — refreshing is a device-to-device
+copy (no host trip, no disk), cheap enough to run every iteration, so a
+replica-recovered block is restored to its *live* value: zero perturbation
+in the Thm 4.1 accounting (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import BlockPartition
+from repro.fabric.domains import (FailureDomainMap, anti_affine_shift,
+                                  ring_shift_homes)
+
+PyTree = Any
+
+
+class ReplicaSet:
+    """One replica per block, anti-affine to the block's primary home."""
+
+    def __init__(self, partition: BlockPartition, homes: np.ndarray,
+                 domains: FailureDomainMap, shift: Optional[int] = None):
+        self.partition = partition
+        self.domains = domains
+        self.homes = np.asarray(homes, np.int32)
+        if shift is None:
+            shift = anti_affine_shift(domains)
+        self.shift = shift
+        self.replica_homes = ring_shift_homes(self.homes, shift,
+                                              domains.n_devices)
+        self.values: Optional[PyTree] = None
+        self.refreshed_step = -1
+
+    # -- maintenance ---------------------------------------------------------
+
+    def refresh(self, step: int, params: PyTree) -> None:
+        """Snapshot live params into the replicas (device copy)."""
+        self.values = jax.tree_util.tree_map(jnp.array, params)
+        self.refreshed_step = int(step)
+
+    def is_fresh(self, step: int) -> bool:
+        """True when replicas hold the *current* live values (no parameter
+        update has happened since the refresh)."""
+        return self.values is not None and self.refreshed_step == int(step)
+
+    # -- survivorship --------------------------------------------------------
+
+    def surviving(self, failed_devices) -> np.ndarray:
+        """(total_blocks,) bool — replicas whose home device is alive."""
+        if self.values is None:
+            return np.zeros((self.partition.total_blocks,), bool)
+        failed = np.asarray(failed_devices, np.int32)
+        return ~np.isin(self.replica_homes, failed)
+
+    def nbytes(self) -> int:
+        if self.values is None:
+            return 0
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(self.values))

@@ -1,0 +1,56 @@
+"""Dispatch wrappers: XOR parity encode / single-erasure reconstruct.
+
+Same backend-selection contract as masked_restore.ops: Pallas compiled on
+TPU, Pallas interpret elsewhere, with the jnp oracle as an opt-out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.parity_xor.kernel import parity_xor_pallas
+from repro.kernels.parity_xor.ref import parity_xor_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def parity_xor(frames: jnp.ndarray, base: jnp.ndarray, keep: jnp.ndarray,
+               use_pallas: bool | None = None,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """``use_pallas=None`` (default) is *auto*: the compiled kernel on TPU,
+    the jnp oracle elsewhere. Parity encode sits in the per-iteration
+    maintenance loop, where interpret-mode Pallas would be orders of
+    magnitude slower than the oracle — force ``use_pallas=True`` only to
+    validate kernel semantics."""
+    if use_pallas is None:
+        use_pallas = _is_tpu()
+    if not use_pallas:
+        return parity_xor_ref(frames, base, keep)
+    if interpret is None:
+        interpret = not _is_tpu()
+    return parity_xor_pallas(frames, base, keep, interpret=interpret)
+
+
+def parity_encode(frames: jnp.ndarray, valid: jnp.ndarray,
+                  use_pallas: bool | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Parity block per group: XOR of the group's valid members.
+
+    frames: (n_groups, g, E) int32 member frames (padded members arbitrary);
+    valid: (n_groups, g) — 1 for real members, 0 for padding.
+    """
+    base = jnp.zeros(frames.shape[::2], jnp.int32)
+    return parity_xor(frames, base, valid, use_pallas, interpret)
+
+
+def parity_reconstruct(frames: jnp.ndarray, parity: jnp.ndarray,
+                       survivors: jnp.ndarray,
+                       use_pallas: bool | None = None,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Reconstruct each group's single missing member:
+    parity ^ XOR of surviving members. Groups with zero or >1 missing
+    members produce unused garbage — callers gate on eligibility.
+    """
+    return parity_xor(frames, parity, survivors, use_pallas, interpret)

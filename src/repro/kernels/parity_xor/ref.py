@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the parity_xor kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def parity_xor_ref(frames: jnp.ndarray, base: jnp.ndarray,
+                   keep: jnp.ndarray) -> jnp.ndarray:
+    """out[j] = base[j] ^ XOR_{i: keep[j,i]} frames[j,i]."""
+    contrib = jnp.where(keep[..., None] > 0, frames, 0)
+    folded = jax.lax.reduce(contrib, jnp.int32(0),
+                            jax.lax.bitwise_xor, (1,))
+    return base ^ folded

@@ -242,6 +242,25 @@ def batch_partition_specs(batch_shape: PyTree, ctx: DistContext) -> PyTree:
 # Failure domains: mesh devices -> parameter blocks
 # ---------------------------------------------------------------------------
 
+def block_device_homes(partition, n_devices: int) -> np.ndarray:
+    """(total_blocks,) int32 — the data-axis slice ("device") holding each
+    block's rows under FSDP row-sharding.
+
+    Each leaf's leading rows are split into ``n_devices`` equal spans; the
+    block's first real row decides its home. This is the device→block homing
+    the checkpoint fabric builds failure domains over
+    (:mod:`repro.fabric.domains`), and the granularity at which correlated
+    failures destroy state: a dead device takes every block homed on it.
+    """
+    homes = np.zeros((partition.total_blocks,), np.int32)
+    for leaf in partition.leaves:
+        span = max(1, leaf.rows // n_devices)
+        for b in range(leaf.n_blocks):
+            row = min(b * partition.block_rows, leaf.rows - 1)
+            homes[leaf.offset + b] = min(row // span, n_devices - 1)
+    return homes
+
+
 def blocks_on_failed_devices(partition, params_shape: PyTree, ctx: DistContext,
                              failed_device_fraction: float,
                              rng: np.random.Generator) -> np.ndarray:
@@ -256,14 +275,6 @@ def blocks_on_failed_devices(partition, params_shape: PyTree, ctx: DistContext,
     n_data = ctx.mesh.shape.get("data", 1) if ctx.mesh is not None else 1
     n_fail = max(1, round(failed_device_fraction * n_data))
     start = int(rng.integers(0, n_data))
-    failed = {(start + i) % n_data for i in range(n_fail)}
-    mask = np.zeros((partition.total_blocks,), bool)
-    for leaf in partition.leaves:
-        # rows of this leaf are split into n_data equal spans (FSDP homes)
-        span = max(1, leaf.rows // n_data)
-        for b in range(leaf.n_blocks):
-            row = min(b * partition.block_rows, leaf.rows - 1)
-            home = min(row // span, n_data - 1)
-            if home in failed:
-                mask[leaf.offset + b] = True
-    return mask
+    failed = [(start + i) % n_data for i in range(n_fail)]
+    homes = block_device_homes(partition, n_data)
+    return np.isin(homes, failed)

@@ -104,26 +104,38 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
                      fail_iter: int, fail_fraction: float,
                      max_iters: int = 400, seed: int = 0,
                      clean_losses: Optional[list] = None,
-                     store=None) -> dict:
+                     store=None, fabric=None,
+                     fail_domain: str = "uniform") -> dict:
     """Full SCAR lifecycle on one classic model (Figures 7/8).
 
     The failure destroys ``fail_fraction`` of parameter blocks (uniformly at
-    random, the paper's model); recovery follows ``policy.recovery`` from
-    the running checkpoint maintained under ``policy``.
+    random, the paper's model) or — with ``fabric`` and
+    ``fail_domain="host"``/``"rack"``/``"device"`` — one whole correlated
+    failure domain. Recovery follows ``policy.recovery`` from the running
+    checkpoint, or the fabric's tier planner when a fabric is given.
     """
+    if fail_domain != "uniform" and fabric is None:
+        raise ValueError("correlated fail_domain needs a fabric")
     key = _keys(seed)
     p = model.init(jax.random.PRNGKey(1))
     ctl = FTController(p, policy, norm_aux=model.norm_aux, store=store,
                        rng=jax.random.PRNGKey(seed + 13),
-                       colocate=model.colocate)
+                       colocate=model.colocate, fabric=fabric)
     losses = []
     recovery_info = {}
     for i in range(1, max_iters + 1):
         p = model.step(p, key(i), i)
         ctl.maybe_checkpoint(i, p)
+        ctl.maintain(i, p)
         if i == fail_iter:
-            lost = ctl.sample_failure(fail_fraction)
-            p, recovery_info = ctl.on_failure(p, lost)
+            if fail_domain == "uniform":
+                lost = ctl.sample_failure(fail_fraction)
+                p, recovery_info = ctl.on_failure(p, lost, step=i)
+            else:
+                lost, failed = ctl.sample_domain_failure(fail_domain)
+                p, recovery_info = ctl.on_failure(p, lost,
+                                                  failed_devices=failed,
+                                                  step=i)
         losses.append(float(model.loss(p)))
     if clean_losses is None:
         clean_losses = run_clean(model, max_iters, seed)["losses"]

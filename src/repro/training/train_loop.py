@@ -10,7 +10,10 @@
   params; Adam moments after a partial restore are simply kept, which is
   itself a perturbation the theory covers; see DESIGN.md);
 - optional fault injection (iteration sampled from a geometric
-  distribution, as in the paper's §5.3).
+  distribution, as in the paper's §5.3), either the paper's uniform
+  block-loss model or correlated whole-domain loss
+  (``fail_domain="host"``) routed through the checkpoint fabric's tier
+  planner (:mod:`repro.fabric`).
 """
 from __future__ import annotations
 
@@ -38,8 +41,15 @@ class TrainLoopConfig:
     policy: Optional[CheckpointPolicy] = None
     fail_prob: float = 0.0          # per-iteration geometric failure prob
     fail_fraction: float = 0.5      # fraction of blocks lost per failure
+    fail_domain: str = "uniform"    # "uniform" | "device" | "host" | "rack"
+    fabric: Optional[Any] = None    # FabricConfig → tiered recovery fabric
     log_every: int = 10
     seed: int = 0
+
+    def __post_init__(self):
+        if self.fail_domain != "uniform" and self.fabric is None:
+            raise ValueError("correlated fail_domain injection needs a "
+                             "fabric (set TrainLoopConfig.fabric)")
 
 
 class TrainLoop:
@@ -76,7 +86,8 @@ class TrainLoop:
         state = TrainState.create(params, self.optimizer)
         if self.loop_cfg.policy is not None:
             self.controller = FTController(params, self.loop_cfg.policy,
-                                           store=self._store)
+                                           store=self._store,
+                                           fabric=self.loop_cfg.fabric)
         return state
 
     # -- run loop -------------------------------------------------------------
@@ -96,12 +107,10 @@ class TrainLoop:
                 if self.controller.maybe_checkpoint(int(state.step),
                                                     state.params):
                     rec["checkpointed"] = True
+                self.controller.maintain(int(state.step), state.params)
                 if (self.loop_cfg.fail_prob > 0
                         and self._rng.random() < self.loop_cfg.fail_prob):
-                    lost = self.controller.sample_failure(
-                        self.loop_cfg.fail_fraction)
-                    new_params, info = self.controller.on_failure(
-                        state.params, lost)
+                    new_params, info = self._inject(state)
                     state = TrainState(new_params, state.opt_state, state.step)
                     rec["failure"] = info
             self.metrics.append(rec)
@@ -109,10 +118,27 @@ class TrainLoop:
                 on_step(i, loss)
         return state
 
+    def _inject(self, state: TrainState) -> tuple[PyTree, dict]:
+        """One failure event per the configured model (uniform/correlated)."""
+        if self.loop_cfg.fail_domain == "uniform":
+            lost = self.controller.sample_failure(self.loop_cfg.fail_fraction)
+            return self.controller.on_failure(state.params, lost,
+                                              step=int(state.step))
+        lost, failed = self.controller.sample_domain_failure(
+            self.loop_cfg.fail_domain)
+        return self.controller.on_failure(state.params, lost,
+                                          failed_devices=failed,
+                                          step=int(state.step))
+
     def inject_failure(self, state: TrainState,
-                       fraction: float) -> tuple[TrainState, dict]:
+                       fraction: Optional[float] = None,
+                       ) -> tuple[TrainState, dict]:
         """Explicit failure injection (for experiments/examples)."""
         assert self.controller is not None, "enable a CheckpointPolicy first"
-        lost = self.controller.sample_failure(fraction)
-        new_params, info = self.controller.on_failure(state.params, lost)
+        if fraction is not None:
+            lost = self.controller.sample_failure(fraction)
+            new_params, info = self.controller.on_failure(
+                state.params, lost, step=int(state.step))
+        else:
+            new_params, info = self._inject(state)
         return TrainState(new_params, state.opt_state, state.step), info

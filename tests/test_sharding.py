@@ -18,8 +18,8 @@ from repro.sharding.partition import (DistContext, _fit_spec,
 @pytest.fixture(scope="module")
 def mesh():
     # 1-device mesh (1,1) — spec logic is shape-only, works on CPU
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
