@@ -14,19 +14,32 @@ counts, and the estimated recovery latency. Also validates the Pallas
 
 Expected: replica/parity tiers recover live values — ||δ'||² ≈ 0, strictly
 below ckpt-only's, and iteration cost does not increase.
+
+A second, degraded-mode section drives a 3-event host-loss MTBF trace where
+failed hosts stay dead between events, comparing the elastic placement
+engine (re-home + re-seed + re-stripe after every loss) against
+recover-in-place (redundancy wiring left pointing at dead devices): elastic
+keeps every later recovery on the PEER_REPLICA/PARITY tiers, in-place falls
+through to RUNNING_CKPT/DISK once the degraded topology eats its replicas.
+
+Standalone: ``python -m benchmarks.bench_tiered_recovery [--quick]
+[--out BENCH_tiered_recovery.json]`` (the CI smoke job's entry point).
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, summarize, timed
 from repro.core.policy import CheckpointPolicy, RecoveryMode, SelectionStrategy
-from repro.fabric import FabricConfig
+from repro.fabric import FabricConfig, FailureEvent
 from repro.kernels.parity_xor.kernel import parity_xor_pallas
 from repro.kernels.parity_xor.ref import parity_xor_ref
 from repro.models.classic import make_model
-from repro.training import run_clean, run_with_failure
+from repro.training import run_clean, run_with_failure, run_with_trace
 
 VARIANTS = {
     "ckpt_only": dict(replicate=False, parity=False),
@@ -56,6 +69,43 @@ def _kernel_check_rows(quick: bool) -> list[str]:
     return [csv_row("tier_parity_xor_kernel", us,
                     f"matches_ref={exact};bit_exact_tol=0;"
                     f"shape={n}x{g}x{e};ref_us={ref_us:.1f}")]
+
+
+def _soak_rows(model, policy, clean, max_iters: int) -> list[str]:
+    """Degraded-mode soak: 3 host losses, no healing — elastic vs in-place."""
+    trace = [FailureEvent(step=max_iters // 6, kind="host", index=0),
+             FailureEvent(step=max_iters // 2 - 5, kind="host", index=1),
+             FailureEvent(step=2 * max_iters // 3 + 5, kind="host", index=2)]
+    rows = []
+    fallthrough = {}
+    costs = {}
+    for name, kw in (("elastic", dict(elastic=True)),
+                     ("inplace", dict(elastic=False))):
+        r = run_with_trace(model, policy, fabric=_fabric_cfg(**kw),
+                           max_iters=max_iters, seed=0, clean_losses=clean,
+                           trace=trace)
+        events = [e for e in r["events"] if not e.get("skipped")]
+        later = events[1:]
+        ckpt_disk = sum(e["tier_counts"]["RUNNING_CKPT"]
+                        + e["tier_counts"]["DISK"] for e in later)
+        cheap = sum(e["tier_counts"]["PEER_REPLICA"]
+                    + e["tier_counts"]["PARITY"] for e in later)
+        sq_total = sum(e["applied_sq"] for e in events)
+        fallthrough[name] = ckpt_disk
+        costs[name] = max(r["iteration_cost"], 0)
+        rows.append(csv_row(
+            f"tier_soak_{name}", 0.0,
+            f"events={len(events)};iter_cost={costs[name]:.1f};"
+            f"applied_sq_total={sq_total:.3e};"
+            f"later_replica_parity_blocks={cheap};"
+            f"later_ckpt_disk_blocks={ckpt_disk}"))
+    rows.append(csv_row(
+        "tier_soak_headline", 0.0,
+        f"elastic_avoids_ckpt_tiers={bool(fallthrough['elastic'] == 0)};"
+        f"inplace_fellthrough_blocks={fallthrough['inplace']};"
+        f"elastic_iter_cost={costs['elastic']:.1f};"
+        f"inplace_iter_cost={costs['inplace']:.1f}"))
+    return rows
 
 
 def run(trials: int = 5, quick: bool = False) -> list[str]:
@@ -114,4 +164,32 @@ def run(trials: int = 5, quick: bool = False) -> list[str]:
         f"parity_sq_strictly_lower={bool(sq_par < sq_ck)};"
         f"iter_cost_not_worse={bool(cost_tier <= cost_ck)};"
         f"ckpt_sq={sq_ck:.3e};tiered_sq={sq_tier:.3e}"))
+
+    rows.extend(_soak_rows(model, policy, clean, max_iters))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--trials", type=int, default=5)
+    ap.add_argument("--out", default="",
+                    help="also write rows as JSON (CI perf trajectory)")
+    args = ap.parse_args()
+    rows = run(trials=args.trials, quick=args.quick)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row, flush=True)
+    if args.out:
+        parsed = []
+        for row in rows:
+            name, us, derived = row.split(",", 2)
+            parsed.append({"name": name, "us_per_call": float(us),
+                           "derived": derived})
+        with open(args.out, "w") as f:
+            json.dump({"bench": "tiered_recovery", "quick": args.quick,
+                       "rows": parsed}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,11 +10,20 @@ Writes can be deferred to a background thread (``background=True``),
 matching §4.3: "the training algorithm can be resumed as soon as the
 in-memory caches have been updated, while output to the shared persistent
 storage happens asynchronously".
+
+**Fabric-aware sharding** (optional ``homes``/``domains`` at ``init``):
+block files are keyed by failure domain — ``host_NNNN/block_*.npy`` per the
+block's home host — and the manifest records ``host_of_block``. A DISK-tier
+read after a domain loss then touches only the needed blocks' files in the
+surviving domains' directories (:meth:`read_blocks`), instead of scanning
+the whole mirror, and :meth:`read_surviving` models a host-local deployment
+where a dead domain's shard is unreachable. :meth:`write_parity` mirrors
+the fabric's XOR parity blocks to disk so blocks whose domain shard died
+remain reconstructable offline from the surviving members + parity.
 """
 from __future__ import annotations
 
 import json
-import math
 import os
 import queue
 import threading
@@ -33,6 +42,7 @@ class ShardedCheckpointStore:
         self.root = root
         self.partition: Optional[BlockPartition] = None
         self.must_reload = False
+        self.host_of_block: Optional[np.ndarray] = None
         self._q: "queue.Queue" = queue.Queue()
         self._worker: Optional[threading.Thread] = None
         self._worker_error: Optional[BaseException] = None
@@ -40,8 +50,21 @@ class ShardedCheckpointStore:
 
     # -- lifecycle ----------------------------------------------------------
 
-    def init(self, params: PyTree, partition: BlockPartition) -> None:
+    def init(self, params: PyTree, partition: BlockPartition,
+             homes: Optional[np.ndarray] = None,
+             domains: Optional[Any] = None) -> None:
+        """``homes``/``domains`` (a block→device map + ``FailureDomainMap``)
+        switch on the domain-keyed layout. The keying snapshots the homes at
+        init — the *initial* placement; elastic re-homing moves the in-memory
+        tiers, while the disk mirror keeps its stable layout (a block's file
+        never migrates, so recovery readers need no re-homing history)."""
         self.partition = partition
+        if homes is not None and domains is not None:
+            self.host_of_block = np.asarray(
+                domains.host_of(np.asarray(homes)), np.int32)
+            for h in np.unique(self.host_of_block):
+                os.makedirs(os.path.join(self.root, f"host_{int(h):04d}"),
+                            exist_ok=True)
         manifest = {
             "block_rows": partition.block_rows,
             "leaves": [
@@ -52,6 +75,8 @@ class ShardedCheckpointStore:
             ],
             "saved_iter": [0] * partition.total_blocks,
         }
+        if self.host_of_block is not None:
+            manifest["host_of_block"] = [int(h) for h in self.host_of_block]
         self._write_manifest(manifest)
         # initial full mirror (x^(0)) — the running checkpoint's base
         full_mask = np.ones((partition.total_blocks,), bool)
@@ -69,6 +94,9 @@ class ShardedCheckpointStore:
         os.replace(tmp, self._manifest_path())
 
     def _block_path(self, gid: int) -> str:
+        if self.host_of_block is not None:
+            host_dir = f"host_{int(self.host_of_block[gid]):04d}"
+            return os.path.join(self.root, host_dir, f"block_{gid:08d}.npy")
         return os.path.join(self.root, f"block_{gid:08d}.npy")
 
     # -- write path ---------------------------------------------------------
@@ -99,6 +127,57 @@ class ShardedCheckpointStore:
         else:
             self._do_write(jobs, step)
         return nbytes
+
+    def write_parity(self, step: int, parity: np.ndarray,
+                     parity_homes: np.ndarray,
+                     domains: Optional[Any] = None,
+                     members: Optional[np.ndarray] = None) -> int:
+        """Mirror the fabric's parity blocks to disk for offline
+        reconstruction. One file per group, keyed by the parity home's host
+        when the store is domain-keyed, plus a small ``PARITY.json``
+        manifest (step, frame width, per-group paths, and — essential for
+        reconstruction after a restart — each group's member block ids as
+        of encode time, which elastic re-striping changes). Synchronous —
+        the parity buffer is 1/g the size of a block write."""
+        parity = np.asarray(parity)
+        homes = np.asarray(parity_homes, np.int32)
+        paths = []
+        for g in range(parity.shape[0]):
+            if self.host_of_block is not None and domains is not None:
+                host_dir = f"host_{int(domains.host_of(homes[g])):04d}"
+                os.makedirs(os.path.join(self.root, host_dir), exist_ok=True)
+                rel = os.path.join(host_dir, f"parity_{g:06d}.npy")
+            else:
+                rel = f"parity_{g:06d}.npy"
+            path = os.path.join(self.root, rel)
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                np.save(f, parity[g])
+            os.replace(tmp, path)
+            paths.append(rel)
+        meta = {"step": int(step), "n_groups": int(parity.shape[0]),
+                "frame_elems": int(parity.shape[-1]) if parity.ndim > 1 else 1,
+                "paths": paths,
+                "parity_homes": [int(h) for h in homes]}
+        if members is not None:
+            meta["members"] = [[int(b) for b in row if b >= 0]
+                               for row in np.asarray(members)]
+        tmp = os.path.join(self.root, "PARITY.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, os.path.join(self.root, "PARITY.json"))
+        return int(parity.nbytes)
+
+    def read_parity(self) -> Optional[tuple[np.ndarray, dict]]:
+        """(parity array, manifest) from the last mirror, or None."""
+        meta_path = os.path.join(self.root, "PARITY.json")
+        if not os.path.exists(meta_path):
+            return None
+        with open(meta_path) as f:
+            meta = json.load(f)
+        groups = [np.load(os.path.join(self.root, rel))
+                  for rel in meta["paths"]]
+        return np.stack(groups), meta
 
     def _ensure_worker(self) -> None:
         if self._worker is None or not self._worker.is_alive():
@@ -150,10 +229,8 @@ class ShardedCheckpointStore:
 
     # -- read path ----------------------------------------------------------
 
-    def read_all(self) -> PyTree:
-        """Reassemble the full running checkpoint from disk (total-failure
-        recovery). Returns a flat list in leaf order; callers unflatten with
-        the partition's treedef."""
+    def _read_masked(self, block_mask: Optional[np.ndarray]) -> PyTree:
+        """Reassemble from disk; ``block_mask=None`` reads every block."""
         assert self.partition is not None
         self.flush()
         br = self.partition.block_rows
@@ -162,12 +239,40 @@ class ShardedCheckpointStore:
             rows = max(leaf_meta.rows, 1)
             arr = np.zeros((rows, leaf_meta.row_width), np.dtype(leaf_meta.dtype))
             for b in range(leaf_meta.n_blocks):
-                p = self._block_path(leaf_meta.offset + b)
+                gid = leaf_meta.offset + b
+                if block_mask is not None and not block_mask[gid]:
+                    continue
+                p = self._block_path(gid)
                 if os.path.exists(p):
                     blk = np.load(p)
                     arr[b * br:b * br + blk.shape[0]] = blk
             out.append(arr.reshape(leaf_meta.shape))
         return jax.tree_util.tree_unflatten(self.partition.treedef, out)
+
+    def read_all(self) -> PyTree:
+        """Reassemble the full running checkpoint from disk (total-failure
+        recovery)."""
+        return self._read_masked(None)
+
+    def read_blocks(self, block_mask) -> PyTree:
+        """Partial DISK-tier read: only the masked blocks' files are opened
+        — with the domain-keyed layout, a post-domain-loss recovery touches
+        only the directories its DISK blocks live in, not the whole mirror.
+        Off-mask blocks come back zero (callers select by the same mask)."""
+        return self._read_masked(np.asarray(block_mask, bool))
+
+    def read_surviving(self, failed_hosts) -> tuple[PyTree, np.ndarray]:
+        """Host-local-deployment read: blocks whose shard directory sits on
+        a failed host are unreadable. Returns (values, present_mask) —
+        missing blocks are zero in ``values`` and False in the mask; the
+        parity mirror (:meth:`read_parity`) reconstructs them offline."""
+        assert self.partition is not None
+        if self.host_of_block is None:
+            present = np.ones((self.partition.total_blocks,), bool)
+            return self.read_all(), present
+        failed = np.asarray(failed_hosts, np.int32)
+        present = ~np.isin(self.host_of_block, failed)
+        return self._read_masked(present), present
 
     def saved_iters(self) -> np.ndarray:
         with open(self._manifest_path()) as f:

@@ -16,6 +16,10 @@ Host-side orchestrator that owns the running checkpoint and drives:
    :mod:`repro.fabric`) alongside the running checkpoint, and route
    ``on_failure`` through the tier planner so each lost block recovers
    from the cheapest surviving tier, with per-tier perturbation stats.
+   Trace-driven soaks use ``on_domain_event``/``heal_domain`` — failed
+   domains stay dead in the fabric's cluster view (elastic fabrics
+   re-home/re-seed across the survivors) and every event's tier counts
+   land in ``stats["events"]``.
 
 The controller is deliberately thin: all numerics are pure functions from
 :mod:`repro.core.checkpoint` / :mod:`repro.core.recovery`, so it composes
@@ -83,12 +87,19 @@ class FTController:
                                  "the fabric for a FULL-recovery baseline")
         self.fabric = fabric
         self.stats = {"saves": 0, "recoveries": 0, "save_seconds": 0.0,
-                      "blocks_saved": 0, "bytes_mirrored": 0}
+                      "blocks_saved": 0, "bytes_mirrored": 0, "events": []}
         self._jit_save = jax.jit(partial(
             save_step, policy=self.policy, partition=self.partition,
             norm_fn=self.norm_fn))
         if store is not None:
-            store.init(params, self.partition)
+            if self.fabric is not None:
+                # domain-keyed disk layout: DISK-tier reads after a domain
+                # loss touch only the needed blocks' files
+                store.init(params, self.partition,
+                           homes=self.fabric.view.homes,
+                           domains=self.fabric.domains)
+            else:
+                store.init(params, self.partition)
 
     # -- checkpoint path ----------------------------------------------------
 
@@ -133,6 +144,17 @@ class FTController:
         if self.fabric is not None:
             # keep the redundancy tiers at least as fresh as the checkpoint
             self.fabric.maintain(int(step), params, force=True)
+            if (self.store is not None
+                    and getattr(self.fabric, "parity", None) is not None
+                    and self.fabric.parity.parity is not None
+                    and hasattr(self.store, "write_parity")):
+                # mirror parity to disk: blocks whose domain shard died stay
+                # reconstructable offline from survivors + parity
+                self.stats["bytes_mirrored"] += self.store.write_parity(
+                    int(step), np.asarray(self.fabric.parity.parity),
+                    self.fabric.parity.parity_homes,
+                    domains=self.fabric.domains,
+                    members=self.fabric.parity.members)
         return mask
 
     def maintain(self, step: int, params: PyTree) -> None:
@@ -154,8 +176,34 @@ class FTController:
         assert self.fabric is not None, "domain failures need a fabric"
         return self.fabric.sample_domain_failure(self._np_rng, kind)
 
+    def on_domain_event(self, params: PyTree, kind: str, index: int,
+                        step: Optional[int] = None) -> tuple[PyTree, dict]:
+        """Apply one trace event: fail a *specific* domain, recover, and —
+        under the fabric's elastic mode — re-home/re-seed/re-stripe. The
+        cluster view keeps the domain dead afterwards (trace semantics: the
+        view tracks real cluster state) until :meth:`heal_domain`.
+        Events on fully-dead domains are skipped."""
+        assert self.fabric is not None, "domain events need a fabric"
+        lost, failed = self.fabric.domain_failure(kind, index)
+        if failed.size == 0:
+            return params, {"skipped": True, "kind": kind, "index": index}
+        recovered, info = self.on_failure(params, lost,
+                                          failed_devices=failed, step=step,
+                                          persist_failure=True)
+        info["kind"], info["index"] = kind, index
+        return recovered, info
+
+    def heal_domain(self, kind: str, index: int,
+                    params: Optional[PyTree] = None,
+                    step: Optional[int] = None) -> dict:
+        """Re-admit a healed domain to the fabric's cluster view (elastic
+        fabrics also rebalance placement onto the restored capacity)."""
+        assert self.fabric is not None, "domain healing needs a fabric"
+        return self.fabric.heal_domain(kind, index, params=params, step=step)
+
     def on_failure(self, params: PyTree, lost_mask: jnp.ndarray,
                    failed_devices=None, step: Optional[int] = None,
+                   persist_failure: Optional[bool] = None,
                    ) -> tuple[PyTree, dict]:
         """Recover from a partial failure. Returns (params', diagnostics).
 
@@ -163,7 +211,10 @@ class FTController:
         block resolves to the cheapest surviving redundancy tier, and the
         diagnostics gain per-tier block counts and perturbation norms.
         ``failed_devices`` names the dead devices of a correlated failure
-        (None = the paper's uniform block-loss model).
+        (None = the paper's uniform block-loss model). ``persist_failure``
+        (see :meth:`CheckpointFabric.on_failure`) keeps the devices dead in
+        the cluster view — the trace-driven path sets it; one-shot
+        experiments default to the fabric's ``elastic`` flag.
         """
         ckpt = self.ckpt
         if self.store is not None and getattr(self.store, "must_reload", False):
@@ -173,14 +224,27 @@ class FTController:
             lost = np.asarray(lost_mask, bool)
             info = perturbation_norms(params, ckpt, jnp.asarray(lost),
                                       self.partition)
+            disk_reader = None
+            if self.store is not None:
+                disk_reader = getattr(self.store, "read_blocks",
+                                      self.store.read_all)
             recovered, tier_info = self.fabric.on_failure(
                 params, ckpt.values, lost,
                 failed_devices=failed_devices, step=step,
-                disk_reader=(self.store.read_all if self.store is not None
-                             else None))
+                disk_reader=disk_reader, persist_failure=persist_failure)
             info["applied_sq"] = tree_sq_norm(recovered, params)
             info["lost_blocks"] = int(lost.sum())
             info.update(tier_info)
+            # per-event accounting: the trace-driven soak loops read this
+            # off the controller to chart tier usage over a failure schedule
+            self.stats["events"].append({
+                "step": None if step is None else int(step),
+                "lost_blocks": info["lost_blocks"],
+                "failed_devices": info.get("failed_devices", 0),
+                "tier_counts": info.get("tier_counts"),
+                "applied_sq": float(info["applied_sq"]),
+                "placement": info.get("placement"),
+            })
         else:
             recovered, info = apply_failure_and_recover(
                 params, ckpt, lost_mask, self.policy.recovery, self.partition)

@@ -1,4 +1,5 @@
-"""Tiered checkpoint fabric: failure domains, peer replication, parity.
+"""Tiered checkpoint fabric: failure domains, peer replication, parity,
+and an elastic placement engine.
 
 The paper's SCAR recovers every lost block from one redundancy tier — the
 in-memory running checkpoint (with a disk mirror behind it). Production
@@ -6,14 +7,23 @@ failures are *correlated* (a host or rack dies, taking every block homed
 there), and cheaper redundancy tiers exist: anti-affine peer replicas and
 XOR parity groups recover *live* block values at zero perturbation. This
 package layers those tiers above the running checkpoint and resolves each
-lost block to the cheapest surviving one. See DESIGN.md.
+lost block to the cheapest surviving one. Placement is *elastic*: all
+components share one mutable :class:`ClusterView`, and after a domain loss
+the engine re-homes blocks, re-seeds replicas, and re-stripes parity across
+the survivors so training continues degraded at full redundancy. See
+DESIGN.md.
 """
 from repro.fabric.domains import FailureDomainMap, FailureEvent
 from repro.fabric.fabric import CheckpointFabric, FabricConfig
 from repro.fabric.parity import ParityCodec
+from repro.fabric.placement import (ClusterView, anti_affine_replica_homes,
+                                    rebalance_homes, rehome_blocks,
+                                    stripe_parity_groups)
 from repro.fabric.replica import ReplicaSet
 from repro.fabric.tiers import RecoveryTier, TieredRecovery, TierPlan
 
 __all__ = ["FailureDomainMap", "FailureEvent", "CheckpointFabric",
            "FabricConfig", "ParityCodec", "ReplicaSet", "RecoveryTier",
-           "TieredRecovery", "TierPlan"]
+           "TieredRecovery", "TierPlan", "ClusterView",
+           "anti_affine_replica_homes", "rebalance_homes", "rehome_blocks",
+           "stripe_parity_groups"]

@@ -110,21 +110,3 @@ class FailureDomainMap:
                     index=int(rng.integers(self.n_domains(kind)))))
                 t += rng.exponential(mean)
         return sorted(events, key=lambda e: e.step)
-
-
-def ring_shift_homes(homes: np.ndarray, shift: int,
-                     n_devices: int) -> np.ndarray:
-    """Ring-shifted placement: copy of a block homed on device d lives on
-    device (d + shift) mod n_devices. With shift = one domain's device
-    count, the copy is guaranteed to sit in a *different* domain."""
-    return ((np.asarray(homes, np.int64) + shift) % n_devices).astype(np.int32)
-
-
-def anti_affine_shift(domains: FailureDomainMap) -> int:
-    """Device shift placing a copy in the farthest distinct domain level:
-    next rack when there are ≥2 racks, else next host, else next device."""
-    if domains.n_racks > 1:
-        return domains.hosts_per_rack * domains.devices_per_host
-    if domains.n_hosts > 1:
-        return domains.devices_per_host
-    return 1

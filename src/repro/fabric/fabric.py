@@ -1,4 +1,4 @@
-"""The checkpoint fabric facade: topology + replicas + parity + planner.
+"""The checkpoint fabric facade: cluster view + replicas + parity + planner.
 
 ``CheckpointFabric`` is the single object the FTController (and the
 training loops) talk to:
@@ -8,9 +8,22 @@ training loops) talk to:
                                     per step).
 - ``sample_domain_failure(...)``  — correlated whole-domain failure: the
                                     lost-block mask plus the failed devices.
+- ``domain_failure(kind, index)`` — the lost mask for one *specific* domain
+                                    (trace-driven injection).
 - ``on_failure(...)``             — tier-plan the lost blocks, recover each
                                     from the cheapest surviving tier, and
-                                    report per-tier perturbation norms.
+                                    report per-tier perturbation norms. With
+                                    ``elastic=True`` the failed devices stay
+                                    dead in the :class:`ClusterView` and the
+                                    placement engine re-homes the recovered
+                                    blocks, re-seeds replicas, and
+                                    re-stripes parity over the survivors.
+- ``heal_domain(kind, index)``    — re-admit a healed domain to the view
+                                    (and, elastic, rebalance onto it).
+
+All components share one mutable :class:`~repro.fabric.placement.ClusterView`
+— `block_device_homes` is only the *initial* placement; the view owns the
+current one.
 """
 from __future__ import annotations
 
@@ -22,6 +35,7 @@ import numpy as np
 from repro.core.blocks import BlockPartition
 from repro.fabric.domains import FailureDomainMap
 from repro.fabric.parity import ParityCodec
+from repro.fabric.placement import ClusterView, rebalance_homes, rehome_blocks
 from repro.fabric.replica import ReplicaSet
 from repro.fabric.tiers import TieredRecovery
 from repro.sharding.partition import block_device_homes
@@ -39,11 +53,15 @@ class FabricConfig:
     parity: bool = True
     parity_group: int = 4          # members per XOR parity group
     parity_interval: int = 1       # steps between parity re-encodes
+    elastic: bool = False          # post-failure re-homing/re-seeding
     use_pallas: Optional[bool] = None   # None = auto: Pallas on TPU only
 
     def __post_init__(self):
         if self.replicate_interval < 1 or self.parity_interval < 1:
             raise ValueError("maintenance intervals must be >= 1")
+        if self.parity_group < 2:
+            raise ValueError("parity_group must be >= 2: a 1-member group "
+                             "degenerates the XOR code to a bare copy")
 
 
 class CheckpointFabric:
@@ -55,20 +73,26 @@ class CheckpointFabric:
         self.domains = FailureDomainMap(self.cfg.n_devices,
                                         self.cfg.devices_per_host,
                                         self.cfg.hosts_per_rack)
-        self.homes = (np.asarray(homes, np.int32) if homes is not None
-                      else block_device_homes(partition, self.cfg.n_devices))
-        self.replicas = (ReplicaSet(partition, self.homes, self.domains)
+        initial = (np.asarray(homes, np.int32) if homes is not None
+                   else block_device_homes(partition, self.cfg.n_devices))
+        self.view = ClusterView(self.domains, initial)
+        self.replicas = (ReplicaSet(partition, self.view)
                          if self.cfg.replicate else None)
-        self.parity = (ParityCodec(partition, self.homes, self.domains,
+        self.parity = (ParityCodec(partition, self.view,
                                    group_size=self.cfg.parity_group,
                                    use_pallas=self.cfg.use_pallas)
                        if self.cfg.parity else None)
-        self.planner = TieredRecovery(partition, self.domains, self.homes,
+        self.planner = TieredRecovery(partition, self.view,
                                       replicas=self.replicas,
                                       parity=self.parity)
         self.last_maintained_step = -1
         self.stats = {"replica_refreshes": 0, "parity_encodes": 0,
-                      "recoveries": 0}
+                      "recoveries": 0, "rehomes": 0, "heals": 0}
+
+    @property
+    def homes(self) -> np.ndarray:
+        """Current primary placement (the view's, not the initial one)."""
+        return self.view.homes
 
     # -- maintenance ---------------------------------------------------------
 
@@ -82,7 +106,8 @@ class CheckpointFabric:
             self.replicas.refresh(step, params)
             self.stats["replica_refreshes"] += 1
         if self.parity is not None and (
-                force or step % self.cfg.parity_interval == 0):
+                force or step % self.cfg.parity_interval == 0
+                or self.parity.parity is None):
             self.parity.encode(step, params)
             self.stats["parity_encodes"] += 1
         self.last_maintained_step = step
@@ -100,7 +125,18 @@ class CheckpointFabric:
                               ) -> tuple[np.ndarray, np.ndarray]:
         """Correlated whole-domain loss → (lost block mask, failed devices)."""
         failed = self.domains.sample_domain_failure(rng, kind)
-        lost = np.isin(self.homes, failed)
+        failed = failed[self.view.alive[failed]]
+        lost = np.isin(self.view.homes, failed)
+        return lost, failed
+
+    def domain_failure(self, kind: str, index: int,
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """Loss of one *specific* domain under the current placement
+        (trace-driven injection). Devices already dead in the view are not
+        failed again — an event on a fully-dead domain is a no-op."""
+        failed = self.domains.devices_in(kind, index)
+        failed = failed[self.view.alive[failed]]
+        lost = np.isin(self.view.homes, failed)
         return lost, failed
 
     # -- recovery ------------------------------------------------------------
@@ -110,19 +146,91 @@ class CheckpointFabric:
                    step: Optional[int] = None,
                    disk_values: Optional[PyTree] = None,
                    disk_reader=None,
+                   persist_failure: Optional[bool] = None,
                    ) -> tuple[PyTree, dict]:
         """Tier-planned recovery. ``failed_devices=None`` models the paper's
         uniform block loss (no device actually died — every redundancy tier
         survives). ``step=None`` assumes the failure hit at the last
-        maintained step, i.e. replicas/parity are fresh."""
+        maintained step, i.e. replicas/parity are fresh.
+
+        ``persist_failure`` controls whether the failed devices stay dead in
+        the cluster view after recovery (they do in a trace-driven soak,
+        where the view tracks real cluster state; one-shot paper-style
+        experiments leave it False so each event is independent). Defaults
+        to ``cfg.elastic``. With ``elastic=True`` the placement engine then
+        re-homes the lost blocks across the survivors, re-seeds replicas
+        anti-affinely in the degraded topology, and re-stripes parity — the
+        *next* failure still finds live redundancy tiers.
+        """
         if failed_devices is None:
             failed_devices = np.empty((0,), np.int32)
+        failed = np.asarray(failed_devices, np.int32).ravel()
         if step is None:
             step = self.last_maintained_step
-        plan = self.planner.plan(lost_mask, failed_devices, step)
+        persist = self.cfg.elastic if persist_failure is None else \
+            bool(persist_failure)
+        if persist and failed.size:
+            self.view.mark_failed(failed)
+        plan = self.planner.plan(lost_mask, failed, step)
         recovered, stats = self.planner.recover(params, ckpt_values, plan,
                                                 disk_values=disk_values,
                                                 disk_reader=disk_reader)
         self.stats["recoveries"] += 1
-        stats["failed_devices"] = int(np.asarray(failed_devices).size)
+        stats["failed_devices"] = int(failed.size)
+        if self.cfg.elastic and failed.size:
+            stats["placement"] = self._replan(int(step), recovered)
         return recovered, stats
+
+    def _replan(self, step: int, params: PyTree) -> dict:
+        """Post-failure elastic re-plan: re-home displaced blocks, re-seed
+        replicas, re-stripe parity — all against the recovered params, so
+        every tier is fresh on the new placement."""
+        displaced = rehome_blocks(self.view)
+        if self.replicas is not None:
+            self.replicas.reseed()
+            self.replicas.refresh(step, params)
+            self.stats["replica_refreshes"] += 1
+        if self.parity is not None:
+            self.parity.restripe()
+            self.parity.encode(step, params)
+            self.stats["parity_encodes"] += 1
+        self.planner.rehome()
+        self.last_maintained_step = step
+        self.stats["rehomes"] += 1
+        return {"rehomed_blocks": int(displaced.size),
+                "alive_devices": self.view.n_alive_devices,
+                "alive_hosts": self.view.n_alive_hosts,
+                "parity_groups": (self.parity.n_groups
+                                  if self.parity is not None else 0)}
+
+    # -- healing -------------------------------------------------------------
+
+    def heal_domain(self, kind: str, index: int,
+                    params: Optional[PyTree] = None,
+                    step: Optional[int] = None) -> dict:
+        """Re-admit a healed domain's devices to the view. With
+        ``elastic=True`` the placement engine rebalances primary load onto
+        the restored capacity and re-seeds/re-stripes the redundancy tiers
+        (against ``params`` when given, so they are immediately fresh;
+        otherwise the next ``maintain`` refreshes them)."""
+        healed = self.view.heal(self.domains.devices_in(kind, index))
+        info = {"healed_devices": int(healed.size)}
+        if healed.size == 0:
+            return info
+        self.stats["heals"] += 1
+        if not self.cfg.elastic:
+            return info
+        at = int(step) if step is not None else self.last_maintained_step
+        moved = rebalance_homes(self.view)
+        if self.replicas is not None:
+            self.replicas.reseed()
+            if params is not None:
+                self.replicas.refresh(at, params)
+        if self.parity is not None:
+            self.parity.restripe()
+            if params is not None:
+                self.parity.encode(at, params)
+        self.planner.rehome()
+        info["rebalanced_blocks"] = int(moved.size)
+        info["alive_hosts"] = self.view.n_alive_hosts
+        return info

@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.core.blocks import (BlockPartition, LeafMeta, expand_block_mask,
                                leaf_block_view)
-from repro.fabric.domains import FailureDomainMap
+from repro.fabric.placement import (ClusterView, effective_parity_group,
+                                    parity_group_homes, stripe_parity_groups)
 from repro.kernels.parity_xor.ops import parity_encode, parity_reconstruct
 
 PyTree = Any
@@ -109,98 +110,48 @@ def unpack_frames_into(dst: PyTree, frames_by_block: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Anti-affine group construction
-# ---------------------------------------------------------------------------
-
-def stripe_groups(homes: np.ndarray, domains: FailureDomainMap,
-                  group_size: int) -> np.ndarray:
-    """(n_groups, group_size) int32 member block ids, -1 padded.
-
-    RAID-style striping: round-robin over per-host bucket lists so
-    consecutive members come from distinct hosts — whenever ≥ group_size
-    hosts still have blocks left, a group's members are host-disjoint and a
-    single host failure erases at most one member. Tail groups on skewed
-    layouts may violate this; the tier planner checks actual survivorship,
-    so anti-affinity here is a placement optimization, not a correctness
-    requirement.
-    """
-    homes = np.asarray(homes)
-    hosts = np.asarray(domains.host_of(homes))
-    buckets = {h: list(np.nonzero(hosts == h)[0]) for h in np.unique(hosts)}
-    order: list[int] = []
-    while buckets:
-        for h in sorted(buckets):
-            order.append(int(buckets[h].pop(0)))
-            if not buckets[h]:
-                del buckets[h]
-    n_groups = -(-len(order) // group_size)
-    members = np.full((n_groups, group_size), -1, np.int32)
-    for i, b in enumerate(order):
-        members[i // group_size, i % group_size] = b
-    return members
-
-
-def _parity_homes(members: np.ndarray, homes: np.ndarray,
-                  domains: FailureDomainMap) -> np.ndarray:
-    """Home each parity block on a device whose host holds no member.
-
-    When every host carries a member (group as wide as the topology), fall
-    back to a device holding no member, spread across groups — a host loss
-    then still leaves most groups' parity alive."""
-    out = np.zeros((members.shape[0],), np.int32)
-    for j, row in enumerate(members):
-        ids = row[row >= 0]
-        member_hosts = set(np.asarray(domains.host_of(homes[ids])).ravel())
-        member_devs = set(int(d) for d in homes[ids])
-        start = int(homes[ids[0]]) + domains.devices_per_host + j
-        chosen = None
-        for off in range(domains.n_devices):
-            d = (start + off) % domains.n_devices
-            if int(domains.host_of(d)) not in member_hosts:
-                chosen = d
-                break
-            if chosen is None and d not in member_devs:
-                chosen = d
-        out[j] = chosen if chosen is not None else start % domains.n_devices
-    return out
-
-
-# ---------------------------------------------------------------------------
 # Codec
 # ---------------------------------------------------------------------------
 
 class ParityCodec:
-    """XOR parity over anti-affine block groups, Pallas-kernel backed."""
+    """XOR parity over anti-affine block groups, Pallas-kernel backed.
 
-    def __init__(self, partition: BlockPartition, homes: np.ndarray,
-                 domains: FailureDomainMap, group_size: int = 4,
-                 use_pallas: bool | None = None):
+    Group striping and parity homing are read from the fabric's mutable
+    :class:`~repro.fabric.placement.ClusterView` — after a domain loss,
+    :meth:`restripe` re-cuts the groups over the surviving hosts (the RAID
+    width clamp follows the *alive* host count) and invalidates the parity
+    until the next :meth:`encode`.
+    """
+
+    def __init__(self, partition: BlockPartition, view: ClusterView,
+                 group_size: int = 4, use_pallas: bool | None = None):
         if group_size < 2:
             raise ValueError("parity group_size must be >= 2")
-        # RAID-style width clamp: members + parity must fit in the host
-        # count, else a single host failure can erase two stripe units and
-        # the single-erasure code cannot recover. Leaves one host free to
-        # hold the parity block whenever the topology has ≥3 hosts.
-        if domains.n_hosts >= 3:
-            group_size = min(group_size, domains.n_hosts - 1)
         self.partition = partition
-        self.domains = domains
-        self.homes = np.asarray(homes, np.int32)
-        self.group_size = group_size
+        self.view = view
+        self.domains = view.domains
+        self.requested_group_size = group_size
         self.use_pallas = use_pallas
         self.layout = frame_layout(partition)
-        self.members = stripe_groups(self.homes, domains, group_size)
+        self.parity: Optional[jnp.ndarray] = None
+        self.encoded_step = -1
+        self._build()
+
+    def _build(self) -> None:
+        """(Re)derive groups, parity homes, and the fused encode program
+        from the view's current placement."""
+        self.group_size = effective_parity_group(self.view,
+                                                 self.requested_group_size)
+        self.members = stripe_parity_groups(self.view, self.group_size)
         self.n_groups = self.members.shape[0]
-        self.group_of = np.full((partition.total_blocks,), -1, np.int32)
+        self.group_of = np.full((self.partition.total_blocks,), -1, np.int32)
         for j, row in enumerate(self.members):
             for b in row[row >= 0]:
                 self.group_of[b] = j
-        self.parity_homes = _parity_homes(self.members, self.homes, domains)
+        self.parity_homes = parity_group_homes(self.members, self.view)
         self.valid = (self.members >= 0)
         # -1 members gather row 0 but are masked out by ``valid``
         self._gather_ids = np.where(self.valid, self.members, 0)
-        self.parity: Optional[jnp.ndarray] = None
-        self.encoded_step = -1
         # encode runs every maintenance interval (the hot loop): fuse
         # pack + gather + XOR fold into one cached jitted program so the
         # per-step cost is one dispatch, not a per-leaf eager op chain
@@ -219,6 +170,17 @@ class ParityCodec:
         """Re-encode all parity blocks from live values (one XOR pass)."""
         self.parity = self._encode_fn(values)
         self.encoded_step = int(step)
+
+    def restripe(self) -> None:
+        """Re-cut the parity groups over the view's current topology.
+
+        The old parity buffers XOR frames of the old groups — meaningless
+        under the new striping — so the codec is invalidated until the next
+        :meth:`encode` (the fabric re-encodes immediately after a
+        post-failure restripe)."""
+        self._build()
+        self.parity = None
+        self.encoded_step = -1
 
     def is_fresh(self, step: int) -> bool:
         return self.parity is not None and self.encoded_step == int(step)
@@ -243,7 +205,8 @@ class ParityCodec:
         lost = np.asarray(lost_mask, bool)
         available = np.asarray(available_mask, bool)
         failed = np.asarray(failed_devices, np.int32)
-        parity_alive = ~np.isin(self.parity_homes, failed)
+        parity_alive = (self.view.alive[self.parity_homes]
+                        & ~np.isin(self.parity_homes, failed))
         member_unavail = self.valid & ~available[self._gather_ids]
         single_erasure = member_unavail.sum(axis=1) == 1
         ok_group = parity_alive & single_erasure

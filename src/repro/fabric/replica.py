@@ -1,12 +1,16 @@
 """Anti-affine peer replication of running-state blocks (tier 1).
 
-Each block's replica is placed ring-shifted into a different failure domain
-(the next rack when racks exist, else the next host), so a whole-domain
-failure never takes a block *and* its replica together. Replicas hold live
-parameter values as of the last refresh — refreshing is a device-to-device
-copy (no host trip, no disk), cheap enough to run every iteration, so a
-replica-recovered block is restored to its *live* value: zero perturbation
-in the Thm 4.1 accounting (see DESIGN.md).
+Each block's replica is placed in a different failure domain (the farthest
+one the *current* topology offers: another rack when racks survive, else
+another host), so a whole-domain failure never takes a block *and* its
+replica together. Placement is read from the fabric's mutable
+:class:`~repro.fabric.placement.ClusterView` — after a domain loss the set
+is :meth:`reseed`-ed so replicas stay anti-affine in the degraded topology
+instead of pointing at dead devices. Replicas hold live parameter values as
+of the last refresh — refreshing is a device-to-device copy (no host trip,
+no disk), cheap enough to run every iteration, so a replica-recovered block
+is restored to its *live* value: zero perturbation in the Thm 4.1
+accounting (see DESIGN.md).
 """
 from __future__ import annotations
 
@@ -17,8 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blocks import BlockPartition
-from repro.fabric.domains import (FailureDomainMap, anti_affine_shift,
-                                  ring_shift_homes)
+from repro.fabric.placement import ClusterView, anti_affine_replica_homes
 
 PyTree = Any
 
@@ -26,16 +29,11 @@ PyTree = Any
 class ReplicaSet:
     """One replica per block, anti-affine to the block's primary home."""
 
-    def __init__(self, partition: BlockPartition, homes: np.ndarray,
-                 domains: FailureDomainMap, shift: Optional[int] = None):
+    def __init__(self, partition: BlockPartition, view: ClusterView):
         self.partition = partition
-        self.domains = domains
-        self.homes = np.asarray(homes, np.int32)
-        if shift is None:
-            shift = anti_affine_shift(domains)
-        self.shift = shift
-        self.replica_homes = ring_shift_homes(self.homes, shift,
-                                              domains.n_devices)
+        self.view = view
+        self.domains = view.domains
+        self.replica_homes = anti_affine_replica_homes(view)
         self.values: Optional[PyTree] = None
         self.refreshed_step = -1
 
@@ -51,14 +49,22 @@ class ReplicaSet:
         update has happened since the refresh)."""
         return self.values is not None and self.refreshed_step == int(step)
 
+    def reseed(self) -> None:
+        """Recompute replica placement in the view's current (possibly
+        degraded) topology. Values are untouched — re-seeding is a
+        placement change; the next :meth:`refresh` lands on the new homes."""
+        self.replica_homes = anti_affine_replica_homes(self.view)
+
     # -- survivorship --------------------------------------------------------
 
     def surviving(self, failed_devices) -> np.ndarray:
-        """(total_blocks,) bool — replicas whose home device is alive."""
+        """(total_blocks,) bool — replicas whose home device is alive in the
+        view and not among this event's failed devices."""
         if self.values is None:
             return np.zeros((self.partition.total_blocks,), bool)
         failed = np.asarray(failed_devices, np.int32)
-        return ~np.isin(self.replica_homes, failed)
+        return (self.view.alive[self.replica_homes]
+                & ~np.isin(self.replica_homes, failed))
 
     def nbytes(self) -> int:
         if self.values is None:

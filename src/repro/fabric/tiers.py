@@ -21,14 +21,15 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import inspect
 from typing import Any, Callable, Optional
 
 import numpy as np
 
 from repro.core.blocks import BlockPartition, masked_sq_norm, select_blocks
-from repro.fabric.domains import FailureDomainMap, ring_shift_homes
 from repro.fabric.parity import (ParityCodec, _leaf_frame_width,
                                  unpack_frames_into)
+from repro.fabric.placement import ClusterView, checkpoint_cache_homes
 from repro.fabric.replica import ReplicaSet
 
 PyTree = Any
@@ -72,24 +73,31 @@ class TierPlan:
 class TieredRecovery:
     """Planner + executor over the fabric's redundancy tiers."""
 
-    def __init__(self, partition: BlockPartition, domains: FailureDomainMap,
-                 homes: np.ndarray,
+    def __init__(self, partition: BlockPartition, view: ClusterView,
                  replicas: Optional[ReplicaSet] = None,
-                 parity: Optional[ParityCodec] = None,
-                 ckpt_shift: Optional[int] = None):
+                 parity: Optional[ParityCodec] = None):
         self.partition = partition
-        self.domains = domains
-        self.homes = np.asarray(homes, np.int32)
+        self.view = view
+        self.domains = view.domains
         self.replicas = replicas
         self.parity = parity
-        # running-checkpoint cache homed one host *behind* the primary (the
-        # opposite ring direction from replicas, so one domain loss cannot
-        # take a block, its replica, and its checkpoint copy all at once)
-        if ckpt_shift is None:
-            ckpt_shift = -domains.devices_per_host if domains.n_hosts > 1 else 0
-        self.ckpt_homes = ring_shift_homes(self.homes, ckpt_shift,
-                                           domains.n_devices)
+        # running-checkpoint cache homed on a host holding neither the
+        # primary nor the replica, so one domain loss cannot take a block,
+        # its replica, and its checkpoint copy all at once
+        self.rehome()
         self._block_bytes = self._frame_bytes()
+
+    @property
+    def homes(self) -> np.ndarray:
+        """Current primary placement (shared mutable view)."""
+        return self.view.homes
+
+    def rehome(self) -> None:
+        """Recompute the running-checkpoint cache placement from the view's
+        current topology (called after elastic re-homing / healing)."""
+        self.ckpt_homes = checkpoint_cache_homes(
+            self.view, self.replicas.replica_homes
+            if self.replicas is not None else None)
 
     def _frame_bytes(self) -> np.ndarray:
         """Approximate payload bytes per block (for latency estimates)."""
@@ -118,15 +126,22 @@ class TieredRecovery:
 
         parity_ok = np.zeros((total,), bool)
         if self.parity is not None:
-            # a fresh-replica-restored block's frame equals its live value,
-            # so it can serve as a survivor in its parity group (cascade)
-            available = ~lost | (replica_ok if replica_fresh else False)
+            # a member's frame is available if its home is still alive and
+            # it isn't lost in this event — a block homed on a device dead
+            # since an earlier (persisted) failure is physically gone even
+            # though the simulation still holds its value. A fresh-replica-
+            # restored block's frame equals its live value, so it can serve
+            # as a survivor in its parity group (cascade).
+            home_alive = self.view.alive[self.view.homes]
+            available = (~lost & home_alive) | (replica_ok if replica_fresh
+                                                else False)
             parity_ok = self.parity.reconstructable(
                 lost & ~replica_ok, available, failed, step)
         tiers[parity_ok & ~replica_ok] = int(RecoveryTier.PARITY)
 
         remaining = lost & ~replica_ok & ~parity_ok
-        ckpt_alive = ~np.isin(self.ckpt_homes, failed)
+        ckpt_alive = (self.view.alive[self.ckpt_homes]
+                      & ~np.isin(self.ckpt_homes, failed))
         tiers[remaining & ckpt_alive] = int(RecoveryTier.RUNNING_CKPT)
         tiers[remaining & ~ckpt_alive] = int(RecoveryTier.DISK)
         return TierPlan(tiers=tiers, failed_devices=failed, step=int(step))
@@ -158,8 +173,12 @@ class TieredRecovery:
         m_par = plan.mask(RecoveryTier.PARITY)
         if m_par.any():
             # survivors + replica-restored blocks in ``out`` carry the live
-            # frames parity reconstruction folds against
-            available = ~(plan.tiers >= int(RecoveryTier.PARITY))
+            # frames parity reconstruction folds against — matching plan():
+            # survivors must also be home-alive, replica restores count
+            # regardless (their frame came off an alive replica device)
+            home_alive = self.view.alive[self.view.homes]
+            available = (plan.tiers < int(RecoveryTier.PARITY)) & (
+                home_alive | (plan.tiers == int(RecoveryTier.PEER_REPLICA)))
             frames = self.parity.reconstruct(out, m_par, available)
             out = unpack_frames_into(out, frames, m_par, part,
                                      self.parity.layout)
@@ -171,7 +190,18 @@ class TieredRecovery:
         m_dk = plan.mask(RecoveryTier.DISK)
         if m_dk.any():
             if disk_values is None and disk_reader is not None:
-                disk_values = disk_reader()
+                # domain-keyed stores accept the block mask so the read
+                # touches only the needed blocks' files; legacy readers
+                # take no arguments and return the full mirror. Dispatch on
+                # the signature — catching TypeError would swallow a
+                # reader's own bugs.
+                try:
+                    takes_mask = len(inspect.signature(
+                        disk_reader).parameters) >= 1
+                except (TypeError, ValueError):
+                    takes_mask = True
+                disk_values = (disk_reader(np.asarray(m_dk)) if takes_mask
+                               else disk_reader())
             src = disk_values if disk_values is not None else ckpt_values
             out = select_blocks(out, src, np.asarray(m_dk), part)
 

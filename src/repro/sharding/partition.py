@@ -247,10 +247,13 @@ def block_device_homes(partition, n_devices: int) -> np.ndarray:
     block's rows under FSDP row-sharding.
 
     Each leaf's leading rows are split into ``n_devices`` equal spans; the
-    block's first real row decides its home. This is the device→block homing
-    the checkpoint fabric builds failure domains over
-    (:mod:`repro.fabric.domains`), and the granularity at which correlated
-    failures destroy state: a dead device takes every block homed on it.
+    block's first real row decides its home. This is the *initial* placement
+    the checkpoint fabric seeds its mutable
+    :class:`~repro.fabric.placement.ClusterView` with — not the permanent
+    one: after a correlated domain loss the elastic placement engine
+    re-homes displaced blocks across the surviving devices, so the current
+    homing always lives in the view. A dead device takes every block
+    *currently* homed on it.
     """
     homes = np.zeros((partition.total_blocks,), np.int32)
     for leaf in partition.leaves:

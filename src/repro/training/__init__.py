@@ -1,8 +1,10 @@
 """Training loops: classic (paper-experiment) runner + SPMD LM trainer."""
 from repro.training.classic_runner import (run_clean, run_with_failure,
                                            run_with_perturbation,
+                                           run_with_trace,
                                            iterations_to_converge)
 from repro.training.train_loop import TrainLoop, TrainLoopConfig
 
 __all__ = ["run_clean", "run_with_failure", "run_with_perturbation",
-           "iterations_to_converge", "TrainLoop", "TrainLoopConfig"]
+           "run_with_trace", "iterations_to_converge", "TrainLoop",
+           "TrainLoopConfig"]

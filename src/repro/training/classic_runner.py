@@ -10,6 +10,12 @@ Drives the paper's §5 experiments:
                                fraction p of parameter blocks at a sampled
                                iteration, recovery (full or partial), then
                                continue to convergence: Figures 7/8.
+- ``run_with_trace``         — beyond-paper degraded-mode soak: an
+                               MTBF-sampled (or explicit) multi-event
+                               failure trace where failed domains stay dead
+                               in the fabric's cluster view; elastic fabrics
+                               re-home/re-seed between events, and domains
+                               optionally heal ``heal_after`` iters later.
 
 All return loss trajectories + the empirical iteration cost
 ι = κ(y, ε) − κ(x, ε) measured exactly as the paper does.
@@ -142,5 +148,67 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
     cost = empirical_iteration_cost(losses, clean_losses, model.eps)
     return {"losses": losses, "iteration_cost": cost,
             "recovery": recovery_info, "controller_stats": ctl.stats,
+            "kappa_perturbed": iterations_to_eps(losses, model.eps),
+            "kappa_clean": iterations_to_eps(clean_losses, model.eps)}
+
+
+def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
+                   fabric, max_iters: int = 400, seed: int = 0,
+                   mtbf: Optional[dict] = None, trace=None,
+                   heal_after: Optional[int] = None,
+                   clean_losses: Optional[list] = None,
+                   store=None) -> dict:
+    """Degraded-mode soak on one classic model: a multi-event failure trace
+    (explicit ``trace`` list of :class:`FailureEvent`, or MTBF-sampled from
+    ``mtbf``), recovered through the fabric's tier planner.
+
+    Unlike ``run_with_failure``, failed domains stay *dead* in the fabric's
+    cluster view between events — the second hit lands on a degraded
+    topology. With ``FabricConfig(elastic=True)`` the placement engine
+    re-homes/re-seeds/re-stripes after every event so the next failure still
+    finds live redundancy tiers; with ``elastic=False`` ("recover in place
+    and pray the host returns") later events fall through to the expensive
+    RUNNING_CKPT/DISK tiers. ``heal_after`` re-admits a failed domain that
+    many iterations after its event.
+
+    Returns the loss trajectory, the per-event recovery diagnostics, and
+    the paper's §5 empirical iteration cost.
+    """
+    if fabric is None:
+        raise ValueError("run_with_trace needs a fabric")
+    key = _keys(seed)
+    p = model.init(jax.random.PRNGKey(1))
+    ctl = FTController(p, policy, norm_aux=model.norm_aux, store=store,
+                       rng=jax.random.PRNGKey(seed + 13),
+                       colocate=model.colocate, fabric=fabric)
+    if trace is None:
+        if mtbf is None:
+            raise ValueError("pass an explicit trace or mtbf means")
+        trace = ctl.fabric.domains.sample_failure_trace(
+            np.random.default_rng(seed + 5), max_iters, mtbf)
+    events_at: dict[int, list] = {}
+    for ev in trace:
+        events_at.setdefault(max(1, min(ev.step, max_iters)), []).append(ev)
+    heal_at: dict[int, list] = {}
+    events_out: list[dict] = []
+    losses = []
+    for i in range(1, max_iters + 1):
+        p = model.step(p, key(i), i)
+        ctl.maybe_checkpoint(i, p)
+        ctl.maintain(i, p)
+        for ev in events_at.pop(i, []):
+            p, info = ctl.on_domain_event(p, ev.kind, ev.index, step=i)
+            info["step"] = i
+            events_out.append(info)
+            if heal_after is not None and not info.get("skipped"):
+                heal_at.setdefault(i + heal_after, []).append(ev)
+        for ev in heal_at.pop(i, []):
+            ctl.heal_domain(ev.kind, ev.index, p, step=i)
+        losses.append(float(model.loss(p)))
+    if clean_losses is None:
+        clean_losses = run_clean(model, max_iters, seed)["losses"]
+    cost = empirical_iteration_cost(losses, clean_losses, model.eps)
+    return {"losses": losses, "iteration_cost": cost,
+            "events": events_out, "controller_stats": ctl.stats,
             "kappa_perturbed": iterations_to_eps(losses, model.eps),
             "kappa_clean": iterations_to_eps(clean_losses, model.eps)}

@@ -13,7 +13,13 @@
   distribution, as in the paper's §5.3), either the paper's uniform
   block-loss model or correlated whole-domain loss
   (``fail_domain="host"``) routed through the checkpoint fabric's tier
-  planner (:mod:`repro.fabric`).
+  planner (:mod:`repro.fabric`);
+- trace-driven soak mode (``mtbf=``): an MTBF-sampled multi-event failure
+  schedule where failed domains stay dead in the fabric's cluster view
+  (elastic fabrics re-home/re-seed across the survivors) and optionally
+  heal ``heal_after`` steps later — long-horizon degraded-mode training
+  with per-event tier/perturbation accounting in ``metrics`` and
+  ``controller.stats["events"]``.
 """
 from __future__ import annotations
 
@@ -43,6 +49,12 @@ class TrainLoopConfig:
     fail_fraction: float = 0.5      # fraction of blocks lost per failure
     fail_domain: str = "uniform"    # "uniform" | "device" | "host" | "rack"
     fabric: Optional[Any] = None    # FabricConfig → tiered recovery fabric
+    # trace-driven soak mode: per-domain-kind MTBF means (in steps) sampled
+    # into a multi-event failure schedule each run(); failed domains stay
+    # dead in the cluster view, and optionally heal ``heal_after`` steps
+    # later (re-admitting their devices to the placement engine)
+    mtbf: Optional[dict] = None     # e.g. {"host": 200.0, "device": 80.0}
+    heal_after: Optional[int] = None
     log_every: int = 10
     seed: int = 0
 
@@ -50,6 +62,9 @@ class TrainLoopConfig:
         if self.fail_domain != "uniform" and self.fabric is None:
             raise ValueError("correlated fail_domain injection needs a "
                              "fabric (set TrainLoopConfig.fabric)")
+        if self.mtbf is not None and self.fabric is None:
+            raise ValueError("trace-driven soak mode needs a fabric "
+                             "(set TrainLoopConfig.fabric)")
 
 
 class TrainLoop:
@@ -96,6 +111,8 @@ class TrainLoop:
             on_step: Optional[Callable[[int, float], None]] = None,
             ) -> TrainState:
         it = iter(batches)
+        events_at = self._sample_trace(n_steps)
+        heal_at: dict[int, list] = {}
         for i in range(1, n_steps + 1):
             t0 = time.perf_counter()
             state, loss = self._train_step(state, next(it))
@@ -108,6 +125,22 @@ class TrainLoop:
                                                     state.params):
                     rec["checkpointed"] = True
                 self.controller.maintain(int(state.step), state.params)
+                for ev in events_at.pop(i, []):
+                    new_params, info = self.controller.on_domain_event(
+                        state.params, ev.kind, ev.index,
+                        step=int(state.step))
+                    state = TrainState(new_params, state.opt_state,
+                                       state.step)
+                    rec.setdefault("failures", []).append(info)
+                    if (self.loop_cfg.heal_after is not None
+                            and not info.get("skipped")):
+                        heal_at.setdefault(i + self.loop_cfg.heal_after,
+                                           []).append(ev)
+                for ev in heal_at.pop(i, []):
+                    heal = self.controller.heal_domain(
+                        ev.kind, ev.index, state.params,
+                        step=int(state.step))
+                    rec.setdefault("heals", []).append(heal)
                 if (self.loop_cfg.fail_prob > 0
                         and self._rng.random() < self.loop_cfg.fail_prob):
                     new_params, info = self._inject(state)
@@ -117,6 +150,20 @@ class TrainLoop:
             if on_step is not None:
                 on_step(i, loss)
         return state
+
+    def _sample_trace(self, n_steps: int) -> dict[int, list]:
+        """MTBF-driven soak schedule for one run(): loop-iteration → events.
+        Empty without ``mtbf`` (or without a controller to recover)."""
+        if self.loop_cfg.mtbf is None or self.controller is None \
+                or self.controller.fabric is None:
+            return {}
+        trace = self.controller.fabric.domains.sample_failure_trace(
+            self._rng, n_steps, self.loop_cfg.mtbf)
+        events_at: dict[int, list] = {}
+        for ev in trace:
+            events_at.setdefault(max(1, min(ev.step, n_steps)),
+                                 []).append(ev)
+        return events_at
 
     def _inject(self, state: TrainState) -> tuple[PyTree, dict]:
         """One failure event per the configured model (uniform/correlated)."""

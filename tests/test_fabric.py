@@ -17,9 +17,10 @@ import pytest
 from repro.core.blocks import partition_pytree, tree_sq_norm
 from repro.core.checkpoint import init_running_checkpoint
 from repro.core.policy import CheckpointPolicy, RecoveryMode, SelectionStrategy
-from repro.fabric import (CheckpointFabric, FabricConfig, FailureDomainMap,
-                          ParityCodec, RecoveryTier, ReplicaSet)
-from repro.fabric.parity import frame_layout, pack_frames, stripe_groups
+from repro.fabric import (CheckpointFabric, ClusterView, FabricConfig,
+                          FailureDomainMap, ParityCodec, RecoveryTier,
+                          ReplicaSet)
+from repro.fabric.parity import frame_layout, pack_frames
 from repro.kernels.parity_xor.kernel import parity_xor_pallas
 from repro.kernels.parity_xor.ops import parity_encode, parity_reconstruct
 from repro.kernels.parity_xor.ref import parity_xor_ref
@@ -73,7 +74,7 @@ def test_replica_placement_anti_affine():
     part = partition_pytree(_params(), 16)
     dm = FailureDomainMap(n_devices=8, devices_per_host=2, hosts_per_rack=2)
     homes = block_device_homes(part, 8)
-    rs = ReplicaSet(part, homes, dm)
+    rs = ReplicaSet(part, ClusterView(dm, homes))
     # with 2 racks the replica must live in a different rack (hence host)
     assert np.all(np.asarray(dm.rack_of(rs.replica_homes))
                   != np.asarray(dm.rack_of(homes)))
@@ -85,7 +86,8 @@ def test_parity_groups_host_disjoint():
     part = partition_pytree(_params(), 16)
     dm = FailureDomainMap(n_devices=8, devices_per_host=2, hosts_per_rack=2)
     homes = block_device_homes(part, 8)
-    codec = ParityCodec(part, homes, dm, group_size=3, use_pallas=False)
+    codec = ParityCodec(part, ClusterView(dm, homes), group_size=3,
+                        use_pallas=False)
     hosts = np.asarray(dm.host_of(homes))
     for j, row in enumerate(codec.members):
         ids = row[row >= 0]
@@ -131,7 +133,8 @@ def test_pack_frames_roundtrip_through_codec():
     part = partition_pytree(params, 16)
     dm = FailureDomainMap(n_devices=8, devices_per_host=2, hosts_per_rack=2)
     homes = block_device_homes(part, 8)
-    codec = ParityCodec(part, homes, dm, group_size=3, use_pallas=False)
+    codec = ParityCodec(part, ClusterView(dm, homes), group_size=3,
+                        use_pallas=False)
     codec.encode(7, params)
     failed = dm.devices_in("host", 1)
     lost = np.isin(homes, failed)
