@@ -1,0 +1,275 @@
+"""Beyond-paper: fused single-pass redundancy maintenance vs the seed path.
+
+The paper's §4.3 constant-budget property (a fraction-r partial checkpoint
+writes the same bytes per C iterations as a full checkpoint) only holds if
+the *maintenance* hot path is itself O(r)-ish: the seed implementation made
+three-plus independent full passes per maintained step (replica tree copy,
+pack-frames + member gather + XOR parity encode with two materialized
+full-model staging buffers, and a third full read for PRIORITY scoring),
+and the partial save rewrote every leaf through a full-size ``jnp.where``.
+
+Measured here, on the reduced qwen2 config (quick mode shrinks repeats,
+not the model):
+
+  maint_sweep_*      — analytic HBM bytes + measured wall-clock per
+                       maintenance step, fused single sweep vs the seed
+                       three-pass path (both including PRIORITY scoring).
+  maint_partial_save — bytes moved into the running checkpoint by the
+                       donation-based in-place save at r=0.125 vs the full
+                       rewrite (the §4.3 property, now true in memory).
+  maint_store_packed — packed append-mode shard mirror: bytes appended per
+                       partial save, live index bytes, compaction reclaim.
+  maint_kernel       — interpret-mode bit-exactness of the fused_maintain
+                       kernel vs its jnp oracles.
+
+Bytes are the roofline currency here: on this CPU host the in-place save's
+per-leaf eager dispatch overhead exceeds the memcpy it saves at the
+reduced model size (the rewrite is one fused XLA program), so its
+wall-clock row is honest-but-unflattering; the byte ratios are what
+transfer to a bandwidth-bound accelerator.
+
+Standalone: ``python -m benchmarks.bench_maintain [--quick]
+[--out BENCH_maintain.json]`` (the CI smoke job's entry point).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, timed
+from repro.checkpoint_io import ShardedCheckpointStore
+from repro.configs import get_config
+from repro.core.blocks import block_scores, partition_pytree
+from repro.core.controller import FTController
+from repro.core.norms import get_norm
+from repro.core.policy import CheckpointPolicy
+from repro.fabric import CheckpointFabric, FabricConfig
+from repro.models import get_model
+
+
+def _reduced_params():
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    ops = get_model(cfg)
+    return ops.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _tree_nbytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def _drift(tree, scale=1e-2):
+    return jax.tree_util.tree_map(lambda x: x + jnp.asarray(scale, x.dtype),
+                                  tree)
+
+
+def _kernel_check_rows(quick: bool) -> list[str]:
+    from repro.fabric.domains import FailureDomainMap
+    from repro.fabric.placement import ClusterView
+    from repro.fabric.parity import ParityCodec
+    from repro.kernels.fused_maintain.ops import make_fused_maintain_fn
+    from repro.sharding.partition import block_device_homes
+
+    rng = np.random.default_rng(5)
+    rows_n = 40 if quick else 200
+    params = {"w": jnp.asarray(rng.normal(size=(rows_n, 24)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(7,)), jnp.float32)}
+    ck = jax.tree_util.tree_map(
+        lambda x: x + jnp.asarray(rng.normal(size=x.shape), x.dtype), params)
+    part = partition_pytree(params, 16)
+    view = ClusterView(FailureDomainMap(8, 2, 2),
+                       block_device_homes(part, 8))
+    codec = ParityCodec(part, view, group_size=3, use_pallas=False)
+    codec.encode(0, params)
+    fn = make_fused_maintain_fn(part, codec.layout, codec.group_of,
+                                codec.n_groups, use_pallas=True,
+                                interpret=True)
+    (rep, sc, par), us = timed(
+        lambda: jax.block_until_ready(fn(params, ck)), repeats=2)
+    rep_ok = all(
+        bool((np.asarray(a) == np.asarray(b)).all())
+        for a, b in zip(jax.tree_util.tree_leaves(rep),
+                        jax.tree_util.tree_leaves(params)))
+    par_ok = bool((np.asarray(par) == np.asarray(codec.parity)).all())
+    want_sc = np.asarray(block_scores(params, ck, part, get_norm("l2")))
+    sc_ok = bool(np.allclose(np.asarray(sc), want_sc, rtol=1e-5, atol=1e-5))
+    return [csv_row(
+        "maint_kernel", us,
+        f"replica_bit_exact={rep_ok};parity_bit_exact={par_ok};"
+        f"scores_match={sc_ok};blocks={part.total_blocks}")]
+
+
+def _sweep_rows(params, quick: bool) -> tuple[list[str], dict]:
+    """Fused vs seed maintenance sweep: analytic bytes + wall clock."""
+    part = partition_pytree(params, 128)
+    ck_values = _drift(params)
+    reps = 2 if quick else 4
+    out = {}
+    rows = []
+    for name, fused in (("fused", True), ("seed", False)):
+        fab = CheckpointFabric(part, FabricConfig(fused=fused))
+        fab.maintain(0, params, ckpt_values=ck_values, force=True)  # compile
+        t0 = time.perf_counter()
+        for i in range(1, reps + 1):
+            fab.maintain(i, params, ckpt_values=ck_values, force=True)
+            if not fused:
+                # the seed path scores separately (the third full pass the
+                # fused sweep folds in)
+                jax.block_until_ready(
+                    block_scores(params, ck_values, part, get_norm("l2")))
+        jax.block_until_ready(fab.parity.parity)
+        wall_us = (time.perf_counter() - t0) / reps * 1e6
+        t = fab._traffic_model()
+        bytes_step = t["fused"] if fused else t["seed"]
+        out[name] = {"bytes": bytes_step, "us": wall_us,
+                     "staging": t["staging_fused" if fused
+                                  else "staging_seed"],
+                     "nbytes": fab.redundancy_nbytes()}
+        rows.append(csv_row(
+            f"maint_sweep_{name}", wall_us,
+            f"bytes_per_step={bytes_step};staging_bytes={out[name]['staging']};"
+            f"model_bytes={t['model']};fused_maintains="
+            f"{fab.stats['fused_maintains']}"))
+    ratio = out["seed"]["bytes"] / max(out["fused"]["bytes"], 1)
+    wall_ratio = out["seed"]["us"] / max(out["fused"]["us"], 1e-9)
+    rows.append(csv_row(
+        "maint_headline", 0.0,
+        f"bytes_ratio_seed_over_fused={ratio:.2f};"
+        f"meets_2x={bool(ratio >= 2.0)};"
+        f"wall_ratio_seed_over_fused={wall_ratio:.2f}"))
+    return rows, out
+
+
+def _partial_save_rows(params, quick: bool) -> list[str]:
+    """In-place partial save: O(k·block_bytes) vs the full-leaf rewrite.
+
+    The budget headline uses ROUND_ROBIN over one full rotation, so the
+    average bytes per save is exactly ``r``·(full bytes) regardless of the
+    model's block-size spread; a PRIORITY row rides along for context —
+    drift-weighted selection legitimately concentrates on the biggest
+    (most-drifted) blocks, so its byte fraction exceeds its block
+    fraction."""
+    from repro.core.policy import RecoveryMode, SelectionStrategy
+
+    model_bytes = _tree_nbytes(params)
+    frac = 0.125
+    part = partition_pytree(params, 128)
+    k = part.blocks_for_k(frac)
+    cycle = -(-part.total_blocks // k)          # saves per full rotation
+    rr_pol = CheckpointPolicy(fraction=frac, full_interval=8,
+                              strategy=SelectionStrategy.ROUND_ROBIN,
+                              recovery=RecoveryMode.PARTIAL)
+    rows = []
+    moved_per_save = {}
+    for name, inplace in (("inplace", True), ("rewrite", False)):
+        ctl = FTController(params, rr_pol, inplace_save=inplace)
+        live = params
+        for i in range(cycle):                  # warm cycle: compile every
+            live = _drift(live)                 # (leaf, bucket) pair
+            ctl.checkpoint_now(1 + i, live)
+        ctl.stats.update(saves=0, save_seconds=0.0, save_bytes_moved=0)
+        for i in range(cycle):
+            live = _drift(live)
+            ctl.checkpoint_now(1 + cycle + i, live)
+        if inplace:
+            moved = ctl.stats["save_bytes_moved"] / max(ctl.stats["saves"], 1)
+        else:
+            moved = float(model_bytes)   # jnp.where rewrites every leaf
+        moved_per_save[name] = moved
+        t_save = ctl.stats["save_seconds"] / max(ctl.stats["saves"], 1)
+        rows.append(csv_row(
+            f"maint_partial_save_{name}", t_save * 1e6,
+            f"bytes_moved_per_save={moved:.0f};"
+            f"frac_of_full={moved / model_bytes:.4f};"
+            f"saves_per_rotation={cycle}"))
+    frac_of_full = moved_per_save["inplace"] / model_bytes
+    rows.append(csv_row(
+        "maint_partial_save_headline", 0.0,
+        f"r={frac};frac_of_full={frac_of_full:.4f};"
+        f"near_r={bool(frac_of_full <= 1.5 * frac)};"
+        f"rewrite_over_inplace="
+        f"{moved_per_save['rewrite'] / max(moved_per_save['inplace'], 1):.1f}"))
+    # drift-weighted PRIORITY context row
+    ctl = FTController(params, CheckpointPolicy.scar(fraction=frac,
+                                                     interval=8))
+    live = _drift(params)
+    ctl.checkpoint_now(1, live)
+    rows.append(csv_row(
+        "maint_partial_save_priority", 0.0,
+        f"bytes_moved={ctl.stats['save_bytes_moved']};"
+        f"frac_of_full="
+        f"{ctl.stats['save_bytes_moved'] / model_bytes:.4f};"
+        f"blocks_frac={frac}"))
+    return rows
+
+
+def _store_rows(params, quick: bool) -> list[str]:
+    """Packed append-mode shard mirror: append volume, live bytes,
+    compaction reclaim."""
+    part = partition_pytree(params, 128)
+    store_dir = tempfile.mkdtemp(prefix="bench_maintain_store_")
+    try:
+        store = ShardedCheckpointStore(store_dir)
+        store.init(params, part)
+        k = part.blocks_for_k(0.125)
+        rng = np.random.default_rng(0)
+        saves = 3 if quick else 6
+        appended = 0
+        for i in range(saves):
+            mask = np.zeros((part.total_blocks,), bool)
+            mask[rng.choice(part.total_blocks, k, replace=False)] = True
+            appended += store.write_blocks(mask, params, step=i + 1,
+                                           background=False)
+        before = store.disk_nbytes()
+        reclaimed = store.compact()
+        after = store.disk_nbytes()
+        return [csv_row(
+            "maint_store_packed", 0.0,
+            f"appended_bytes={appended};log_bytes={before['shard']};"
+            f"live_bytes={before['live']};reclaimed={reclaimed};"
+            f"compacted_log={after['shard']};"
+            f"compaction_exact={bool(after['shard'] == after['live'])}")]
+    finally:
+        shutil.rmtree(store_dir, ignore_errors=True)
+
+
+def run(trials: int = 4, quick: bool = False) -> list[str]:
+    rows = _kernel_check_rows(quick)
+    params = _reduced_params()
+    sweep_rows, _ = _sweep_rows(params, quick)
+    rows.extend(sweep_rows)
+    rows.extend(_partial_save_rows(params, quick))
+    rows.extend(_store_rows(params, quick))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="",
+                    help="also write rows as JSON (CI perf trajectory)")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row, flush=True)
+    if args.out:
+        parsed = []
+        for row in rows:
+            name, us, derived = row.split(",", 2)
+            parsed.append({"name": name, "us_per_call": float(us),
+                           "derived": derived})
+        with open(args.out, "w") as f:
+            json.dump({"bench": "maintain", "quick": args.quick,
+                       "rows": parsed}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,12 +12,15 @@ out positive. Offline here, we measure on the LM trainer (reduced qwen2):
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import time
 
 import jax
 import numpy as np
 
 from benchmarks.common import csv_row
+from repro.checkpoint_io import ShardedCheckpointStore
 from repro.configs import get_config
 from repro.core.policy import CheckpointPolicy
 from repro.data.pipeline import ShardedLMDataset
@@ -33,22 +36,25 @@ def run(trials: int = 12, quick: bool = False) -> list[str]:
     byte_budget = {}
     for frac, interval in ((1.0, 8), (0.25, 8), (0.125, 8)):
         pol = CheckpointPolicy.scar(fraction=frac, interval=interval)
-        import tempfile
-        from repro.checkpoint_io import ShardedCheckpointStore
-        store = ShardedCheckpointStore(tempfile.mkdtemp())
-        loop = TrainLoop(cfg, ctx, loop_cfg=TrainLoopConfig(policy=pol),
-                         store=store)
-        state = loop.init_state()
-        ds = ShardedLMDataset(cfg, batch=2, seq=64, ctx=ctx)
-        # warm up the jitted save path so t_dump excludes compile time
-        loop.controller.checkpoint_now(1, state.params)
-        loop.controller.stats.update(saves=0, save_seconds=0.0,
-                                     blocks_saved=0, bytes_mirrored=0)
-        state = loop.run(state, iter(ds), steps)
-        stats = loop.controller.stats
-        t_step = np.mean([m["seconds"] for m in loop.metrics[2:]])
-        t_dump = stats["save_seconds"] / max(stats["saves"], 1)
-        per_iter_bytes = stats["bytes_mirrored"] / steps
+        mirror_dir = tempfile.mkdtemp(prefix="bench_overhead_")
+        store = ShardedCheckpointStore(mirror_dir)
+        try:
+            loop = TrainLoop(cfg, ctx, loop_cfg=TrainLoopConfig(policy=pol),
+                             store=store)
+            state = loop.init_state()
+            ds = ShardedLMDataset(cfg, batch=2, seq=64, ctx=ctx)
+            # warm up the jitted save path so t_dump excludes compile time
+            loop.controller.checkpoint_now(1, state.params)
+            loop.controller.stats.update(saves=0, save_seconds=0.0,
+                                         blocks_saved=0, bytes_mirrored=0)
+            state = loop.run(state, iter(ds), steps)
+            stats = loop.controller.stats
+            t_step = np.mean([m["seconds"] for m in loop.metrics[2:]])
+            t_dump = stats["save_seconds"] / max(stats["saves"], 1)
+            per_iter_bytes = stats["bytes_mirrored"] / steps
+            store.flush()   # all background writes landed before cleanup
+        finally:
+            shutil.rmtree(mirror_dir, ignore_errors=True)
         byte_budget[frac] = per_iter_bytes
         rows.append(csv_row(
             f"fig9_overhead_r{frac}", t_dump * 1e6,

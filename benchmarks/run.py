@@ -12,15 +12,17 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   fig9  — system overhead (t_dump vs t_step, budget)    (bench_overhead)
   kern  — Pallas kernel microbenches vs jnp oracles     (bench_kernels)
   tier  — tiered recovery fabric vs checkpoint-only     (bench_tiered_recovery)
+  maint — fused single-pass maintenance vs seed path    (bench_maintain)
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-from benchmarks import (bench_kernels, bench_mlr_bound, bench_overhead,
-                        bench_partial_recovery, bench_priority, bench_qp_bound,
-                        bench_reset, bench_tiered_recovery)
+from benchmarks import (bench_kernels, bench_maintain, bench_mlr_bound,
+                        bench_overhead, bench_partial_recovery,
+                        bench_priority, bench_qp_bound, bench_reset,
+                        bench_tiered_recovery)
 
 SECTIONS = {
     "fig3": bench_qp_bound.run,
@@ -31,6 +33,7 @@ SECTIONS = {
     "fig9": bench_overhead.run,
     "kern": bench_kernels.run,
     "tier": bench_tiered_recovery.run,
+    "maint": bench_maintain.run,
 }
 
 

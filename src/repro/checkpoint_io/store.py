@@ -1,10 +1,26 @@
 """On-disk mirror of the running checkpoint (paper §4.3 persistent storage).
 
-Layout: one ``.npy`` file per parameter *block* (the unit of partial save /
-restore), plus a JSON manifest recording the leaf geometry and which
-iteration each block was last persisted. Writing only the selected blocks
-gives the paper's property that a fraction-r checkpoint writes the same
-bytes per C iterations as a full checkpoint.
+Layout: **packed per-shard block files**. Block payloads are appended to a
+log-structured shard file (``blocks.shard``, or ``host_NNNN/blocks.shard``
+under the fabric-aware domain keying) and MANIFEST.json carries an offset
+index — ``segments[gid] = [offset, nbytes]`` points at each block's *latest*
+copy. Earlier layouts wrote one ``.npy`` file per block, which costs a
+file create + rename + metadata flush per saved block; a fraction-r partial
+save of k blocks now appends k contiguous payloads to (at most) a handful
+of shard files and publishes one manifest. Reads go through ``np.memmap``
+slices of the shard, so a partial DISK-tier read touches only the needed
+blocks' byte ranges.
+
+Crash consistency is log-structured: appends land before the manifest is
+atomically replaced, so a crash mid-write leaves dangling bytes at the tail
+of a shard (unreferenced garbage) but never a torn block — readers follow
+the old index until the new one is published. ``compact()`` rewrites each
+shard keeping only live segments (the log otherwise grows by the write
+volume of overwritten blocks; ``disk_nbytes`` reports both). Compaction
+writes a *new generation* file (``blocks.gNNNN.shard``), publishes the
+manifest pointing into it, and only then removes older generations — a
+crash at any point leaves either the old index over the old file or the
+new index over the new file, never live offsets into a rewritten file.
 
 Writes can be deferred to a background thread (``background=True``),
 matching §4.3: "the training algorithm can be resumed as soon as the
@@ -12,14 +28,13 @@ in-memory caches have been updated, while output to the shared persistent
 storage happens asynchronously".
 
 **Fabric-aware sharding** (optional ``homes``/``domains`` at ``init``):
-block files are keyed by failure domain — ``host_NNNN/block_*.npy`` per the
+shards are keyed by failure domain — ``host_NNNN/blocks.shard`` per the
 block's home host — and the manifest records ``host_of_block``. A DISK-tier
-read after a domain loss then touches only the needed blocks' files in the
-surviving domains' directories (:meth:`read_blocks`), instead of scanning
-the whole mirror, and :meth:`read_surviving` models a host-local deployment
-where a dead domain's shard is unreachable. :meth:`write_parity` mirrors
-the fabric's XOR parity blocks to disk so blocks whose domain shard died
-remain reconstructable offline from the surviving members + parity.
+read after a domain loss then touches only the surviving domains' shards
+(:meth:`read_blocks`), and :meth:`read_surviving` models a host-local
+deployment where a dead domain's shard is unreachable. :meth:`write_parity`
+mirrors the fabric's XOR parity blocks to disk so blocks whose domain shard
+died remain reconstructable offline from the surviving members + parity.
 """
 from __future__ import annotations
 
@@ -37,12 +52,23 @@ from repro.core.blocks import BlockPartition
 PyTree = Any
 
 
+def _shard_name(gen: int) -> str:
+    return f"blocks.g{gen:04d}.shard"
+
+
+def _is_shard_name(name: str) -> bool:
+    return name.startswith("blocks.") and name.endswith(".shard")
+
+
 class ShardedCheckpointStore:
     def __init__(self, root: str):
         self.root = root
         self.partition: Optional[BlockPartition] = None
         self.must_reload = False
         self.host_of_block: Optional[np.ndarray] = None
+        # per shard-directory compaction generation (segments index offsets
+        # are only valid within their generation's file)
+        self._gen: dict = {}
         self._q: "queue.Queue" = queue.Queue()
         self._worker: Optional[threading.Thread] = None
         self._worker_error: Optional[BaseException] = None
@@ -56,9 +82,11 @@ class ShardedCheckpointStore:
         """``homes``/``domains`` (a block→device map + ``FailureDomainMap``)
         switch on the domain-keyed layout. The keying snapshots the homes at
         init — the *initial* placement; elastic re-homing moves the in-memory
-        tiers, while the disk mirror keeps its stable layout (a block's file
-        never migrates, so recovery readers need no re-homing history)."""
+        tiers, while the disk mirror keeps its stable layout (a block's
+        shard never migrates, so recovery readers need no re-homing
+        history)."""
         self.partition = partition
+        self._gen = {}
         if homes is not None and domains is not None:
             self.host_of_block = np.asarray(
                 domains.host_of(np.asarray(homes)), np.int32)
@@ -74,6 +102,7 @@ class ShardedCheckpointStore:
                 for l in partition.leaves
             ],
             "saved_iter": [0] * partition.total_blocks,
+            "segments": [None] * partition.total_blocks,
         }
         if self.host_of_block is not None:
             manifest["host_of_block"] = [int(h) for h in self.host_of_block]
@@ -93,11 +122,15 @@ class ShardedCheckpointStore:
             json.dump(manifest, f)
         os.replace(tmp, self._manifest_path())
 
-    def _block_path(self, gid: int) -> str:
+    def _shard_dir(self, gid: int) -> str:
         if self.host_of_block is not None:
             host_dir = f"host_{int(self.host_of_block[gid]):04d}"
-            return os.path.join(self.root, host_dir, f"block_{gid:08d}.npy")
-        return os.path.join(self.root, f"block_{gid:08d}.npy")
+            return os.path.join(self.root, host_dir)
+        return self.root
+
+    def _shard_path(self, gid: int) -> str:
+        d = self._shard_dir(gid)
+        return os.path.join(d, _shard_name(self._gen.get(d, 0)))
 
     # -- write path ---------------------------------------------------------
 
@@ -118,7 +151,7 @@ class ShardedCheckpointStore:
             arr = np.asarray(x).reshape(max(leaf_meta.rows, 1), -1)
             for b in np.nonzero(seg)[0]:
                 lo, hi = b * br, min((b + 1) * br, leaf_meta.rows)
-                blk = arr[lo:hi]
+                blk = arr[lo:hi] if hi > lo else arr[:1]
                 jobs.append((leaf_meta.offset + int(b), blk))
                 nbytes += blk.nbytes
         if background:
@@ -200,18 +233,26 @@ class ShardedCheckpointStore:
                 self._q.task_done()
 
     def _do_write(self, jobs, step: int) -> None:
+        """Append the blocks' payloads to their shards, then publish the
+        new offset index atomically — the log-structured write path."""
+        by_shard: dict[str, list[tuple[int, np.ndarray]]] = {}
         for gid, blk in jobs:
-            # atomic like the manifest: a crash mid-overwrite must not tear
-            # the previous good copy of the block
-            path = self._block_path(gid)
-            tmp = path + ".tmp"
-            with open(tmp, "wb") as f:
-                np.save(f, blk)
-            os.replace(tmp, path)
+            by_shard.setdefault(self._shard_path(gid), []).append((gid, blk))
+        new_segments: dict[int, list[int]] = {}
+        for path, batch in by_shard.items():
+            with open(path, "ab") as f:
+                for gid, blk in batch:
+                    off = f.tell()
+                    payload = np.ascontiguousarray(blk)
+                    f.write(payload.tobytes())
+                    new_segments[gid] = [off, int(payload.nbytes)]
+                f.flush()
+                os.fsync(f.fileno())
         with open(self._manifest_path()) as f:
             manifest = json.load(f)
         for gid, _ in jobs:
             manifest["saved_iter"][gid] = int(step)
+            manifest["segments"][gid] = new_segments[gid]
         self._write_manifest(manifest)
 
     def flush(self) -> None:
@@ -227,25 +268,122 @@ class ShardedCheckpointStore:
             err, self._worker_error = self._worker_error, None
             raise RuntimeError("background checkpoint write failed") from err
 
+    def compact(self) -> int:
+        """Rewrite every shard keeping only the live (indexed) segments.
+
+        The append log grows by the write volume of overwritten blocks;
+        compaction reclaims it. Returns the bytes reclaimed. Synchronous
+        and exclusive — callers stop writing around it (the background
+        queue is flushed first).
+
+        Crash-safe ordering: the live segments are copied into the *next
+        generation's* file, the manifest (new offsets + generation) is
+        published atomically, and only then are older generation files
+        unlinked — stale offsets never point into a rewritten file; a
+        crash before the unlink merely leaves an orphan generation that
+        the next compaction sweeps up."""
+        assert self.partition is not None
+        self.flush()
+        with open(self._manifest_path()) as f:
+            manifest = json.load(f)
+        segments = manifest["segments"]
+        by_dir: dict[str, list[int]] = {}
+        for gid in range(self.partition.total_blocks):
+            if segments[gid] is not None:
+                by_dir.setdefault(self._shard_dir(gid), []).append(gid)
+        reclaimed = 0
+        cleanup: list[tuple[str, str]] = []
+        for d, gids in by_dir.items():
+            old_path = os.path.join(d, _shard_name(self._gen.get(d, 0)))
+            if not os.path.exists(old_path):
+                continue
+            old_size = os.path.getsize(old_path)
+            new_gen = self._gen.get(d, 0) + 1
+            new_path = os.path.join(d, _shard_name(new_gen))
+            mm = np.memmap(old_path, np.uint8, mode="r")
+            with open(new_path, "wb") as f:
+                # preserve on-disk order so compaction is a single
+                # sequential read of the live bytes
+                for gid in sorted(gids, key=lambda g: segments[g][0]):
+                    off, n = segments[gid]
+                    new_off = f.tell()
+                    f.write(mm[off:off + n].tobytes())
+                    segments[gid] = [new_off, n]
+                f.flush()
+                os.fsync(f.fileno())
+            del mm
+            self._gen[d] = new_gen
+            reclaimed += old_size - os.path.getsize(new_path)
+            cleanup.append((d, _shard_name(new_gen)))
+        manifest["segments"] = segments
+        manifest["shard_gen"] = {os.path.relpath(d, self.root): g
+                                 for d, g in self._gen.items()}
+        self._write_manifest(manifest)
+        for d, keep in cleanup:     # old gens (and crash orphans) die last
+            for name in os.listdir(d):
+                if _is_shard_name(name) and name != keep:
+                    os.unlink(os.path.join(d, name))
+        return int(reclaimed)
+
+    def disk_nbytes(self) -> dict[str, int]:
+        """On-disk footprint: shard bytes (the append log), the subset of
+        those bytes the index still references (live), and the parity
+        mirror."""
+        shard_bytes = 0
+        parity_bytes = 0
+        for dirpath, _, files in os.walk(self.root):
+            for name in files:
+                p = os.path.join(dirpath, name)
+                if _is_shard_name(name):
+                    shard_bytes += os.path.getsize(p)
+                elif name.startswith("parity_") and name.endswith(".npy"):
+                    parity_bytes += os.path.getsize(p)
+        live = 0
+        if self.partition is not None and os.path.exists(self._manifest_path()):
+            with open(self._manifest_path()) as f:
+                for seg in json.load(f)["segments"]:
+                    if seg is not None:
+                        live += seg[1]
+        return {"shard": int(shard_bytes), "live": int(live),
+                "parity": int(parity_bytes)}
+
     # -- read path ----------------------------------------------------------
 
     def _read_masked(self, block_mask: Optional[np.ndarray]) -> PyTree:
-        """Reassemble from disk; ``block_mask=None`` reads every block."""
+        """Reassemble from disk; ``block_mask=None`` reads every block.
+
+        Blocks whose shard is unreachable (or that were never indexed)
+        come back zero — callers select by the mask they asked for."""
         assert self.partition is not None
         self.flush()
+        with open(self._manifest_path()) as f:
+            segments = json.load(f)["segments"]
         br = self.partition.block_rows
+        mmaps: dict[str, Optional[np.memmap]] = {}
         out = []
         for leaf_meta in self.partition.leaves:
             rows = max(leaf_meta.rows, 1)
-            arr = np.zeros((rows, leaf_meta.row_width), np.dtype(leaf_meta.dtype))
+            width = max(leaf_meta.row_width, 1)
+            dtype = np.dtype(leaf_meta.dtype)
+            arr = np.zeros((rows, width), dtype)
             for b in range(leaf_meta.n_blocks):
                 gid = leaf_meta.offset + b
                 if block_mask is not None and not block_mask[gid]:
                     continue
-                p = self._block_path(gid)
-                if os.path.exists(p):
-                    blk = np.load(p)
-                    arr[b * br:b * br + blk.shape[0]] = blk
+                if segments[gid] is None:
+                    continue
+                path = self._shard_path(gid)
+                if path not in mmaps:
+                    ok = os.path.exists(path) and os.path.getsize(path) > 0
+                    mmaps[path] = (np.memmap(path, np.uint8, mode="r")
+                                   if ok else None)
+                mm = mmaps[path]
+                if mm is None:
+                    continue
+                off, n = segments[gid]
+                blk = np.frombuffer(mm[off:off + n].tobytes(), dtype)
+                blk = blk.reshape(-1, width)
+                arr[b * br:b * br + blk.shape[0]] = blk
             out.append(arr.reshape(leaf_meta.shape))
         return jax.tree_util.tree_unflatten(self.partition.treedef, out)
 
@@ -255,17 +393,18 @@ class ShardedCheckpointStore:
         return self._read_masked(None)
 
     def read_blocks(self, block_mask) -> PyTree:
-        """Partial DISK-tier read: only the masked blocks' files are opened
-        — with the domain-keyed layout, a post-domain-loss recovery touches
-        only the directories its DISK blocks live in, not the whole mirror.
-        Off-mask blocks come back zero (callers select by the same mask)."""
+        """Partial DISK-tier read: only the masked blocks' byte ranges are
+        touched — with the domain-keyed layout, a post-domain-loss recovery
+        memmaps only the shards its DISK blocks live in, not the whole
+        mirror. Off-mask blocks come back zero (callers select by the same
+        mask)."""
         return self._read_masked(np.asarray(block_mask, bool))
 
     def read_surviving(self, failed_hosts) -> tuple[PyTree, np.ndarray]:
-        """Host-local-deployment read: blocks whose shard directory sits on
-        a failed host are unreadable. Returns (values, present_mask) —
-        missing blocks are zero in ``values`` and False in the mask; the
-        parity mirror (:meth:`read_parity`) reconstructs them offline."""
+        """Host-local-deployment read: blocks whose shard sits on a failed
+        host are unreadable. Returns (values, present_mask) — missing
+        blocks are zero in ``values`` and False in the mask; the parity
+        mirror (:meth:`read_parity`) reconstructs them offline."""
         assert self.partition is not None
         if self.host_of_block is None:
             present = np.ones((self.partition.total_blocks,), bool)

@@ -8,7 +8,15 @@ saved at different iterations — exactly the paper's construction.
 
 ``save_step`` is a pure jittable function: given the live params and the
 current checkpoint it returns the new checkpoint plus the selected block
-mask. Selection strategies:
+mask — the ``jnp.where`` fold rewrites every leaf, so it moves O(model)
+bytes per save. It remains the reference semantics (and the
+``FTController(inplace_save=False)`` path); the controller's default save
+now runs ``select_save_mask`` for the mask and then scatters only the
+selected blocks into the donated checkpoint buffers
+(:func:`repro.kernels.fused_maintain.ops.tree_scatter_save`), moving
+O(k·block_bytes) — bit-equivalent, measured in ``bench_maintain``.
+
+Selection strategies:
 
 - PRIORITY     — top-k blocks by distance-since-last-save (paper §4.2).
 - ROUND_ROBIN  — k blocks at a rotating cursor (paper §5.4 baseline).

@@ -38,7 +38,8 @@ import numpy as np
 from repro.core.blocks import (BlockPartition, block_scores,
                                partition_pytree, tree_sq_norm)
 from repro.core.checkpoint import (RunningCheckpoint, full_save,
-                                   init_running_checkpoint, save_step)
+                                   init_running_checkpoint, save_step,
+                                   select_save_mask)
 from repro.core.norms import get_norm
 from repro.core.policy import CheckpointPolicy, RecoveryMode, SelectionStrategy
 from repro.core.recovery import (apply_failure_and_recover,
@@ -56,8 +57,13 @@ class FTController:
                  score_fn: Optional[Callable] = None,
                  rng: Optional[jax.Array] = None,
                  colocate: tuple = (),
-                 fabric: Optional[Any] = None):
+                 fabric: Optional[Any] = None,
+                 inplace_save: bool = True):
         self.policy = policy
+        # donation-based partial save: scatter only the selected blocks
+        # into the running checkpoint (O(k·block_bytes)) instead of
+        # rewriting every leaf through a full-size jnp.where
+        self.inplace_save = inplace_save
         self.partition = partition_pytree(params, policy.block_rows,
                                           colocate=colocate)
         self.norm_fn = get_norm(policy.norm, aux=norm_aux,
@@ -87,9 +93,13 @@ class FTController:
                                  "the fabric for a FULL-recovery baseline")
         self.fabric = fabric
         self.stats = {"saves": 0, "recoveries": 0, "save_seconds": 0.0,
-                      "blocks_saved": 0, "bytes_mirrored": 0, "events": []}
+                      "blocks_saved": 0, "bytes_mirrored": 0,
+                      "save_bytes_moved": 0, "events": []}
         self._jit_save = jax.jit(partial(
             save_step, policy=self.policy, partition=self.partition,
+            norm_fn=self.norm_fn))
+        self._jit_select = jax.jit(partial(
+            select_save_mask, policy=self.policy, partition=self.partition,
             norm_fn=self.norm_fn))
         if store is not None:
             if self.fabric is not None:
@@ -125,12 +135,34 @@ class FTController:
         else:
             self._rng, sub = jax.random.split(self._rng)
             scores = None
-            if self._score_fn is not None and \
-                    self.policy.strategy == SelectionStrategy.PRIORITY:
-                scores = self._score_fn(params, self.ckpt.values)
-            self.ckpt, mask = self._jit_save(self.ckpt, params,
-                                             jnp.int32(step), rng=sub,
-                                             scores=scores)
+            if self.policy.strategy == SelectionStrategy.PRIORITY:
+                if self._score_fn is not None:
+                    scores = self._score_fn(params, self.ckpt.values)
+                elif (self.fabric is not None
+                        and self.fabric.last_scores_step == int(step)
+                        and self.policy.norm == "l2"):
+                    # this step's fused maintenance sweep already measured
+                    # the drift vs the running checkpoint — reuse it
+                    # instead of a third full read of params + ckpt
+                    scores = self.fabric.last_scores
+            if self.inplace_save:
+                mask, cursor = self._jit_select(self.ckpt, params, rng=sub,
+                                                scores=scores)
+                idx = np.nonzero(np.asarray(mask))[0]
+                from repro.kernels.fused_maintain.ops import tree_scatter_save
+                new_values, moved = tree_scatter_save(
+                    self.ckpt.values, params, idx, self.partition)
+                new_saved = jnp.where(mask, jnp.int32(step),
+                                      self.ckpt.saved_iter)
+                self.ckpt = RunningCheckpoint(new_values, new_saved, cursor)
+                self.stats["save_bytes_moved"] += moved
+            else:
+                self.ckpt, mask = self._jit_save(self.ckpt, params,
+                                                 jnp.int32(step), rng=sub,
+                                                 scores=scores)
+        if self.fabric is not None:
+            # the save invalidated the drift the cached scores measured
+            self.fabric.invalidate_scores()
         # block until the in-memory cache is consistent (paper: training may
         # resume now), then mirror to disk
         jax.block_until_ready(self.ckpt.values)
@@ -142,8 +174,11 @@ class FTController:
                 mask, self.ckpt.values, step,
                 background=self.policy.async_persist)
         if self.fabric is not None:
-            # keep the redundancy tiers at least as fresh as the checkpoint
-            self.fabric.maintain(int(step), params, force=True)
+            if not self.fabric.is_fresh(int(step)):
+                # keep the redundancy tiers at least as fresh as the
+                # checkpoint (a same-step maintain() may have skipped an
+                # off-interval tier — force refreshes every tier)
+                self.fabric.maintain(int(step), params, force=True)
             if (self.store is not None
                     and getattr(self.fabric, "parity", None) is not None
                     and self.fabric.parity.parity is not None
@@ -159,9 +194,22 @@ class FTController:
 
     def maintain(self, step: int, params: PyTree) -> None:
         """Per-iteration fabric upkeep (replica refresh / parity re-encode
-        on their configured intervals). No-op without a fabric."""
-        if self.fabric is not None:
-            self.fabric.maintain(int(step), params)
+        on their configured intervals). No-op without a fabric.
+
+        When the policy's PRIORITY selection can consume fused scores
+        (squared-L2 drift, no custom scorer), the running-checkpoint
+        values ride along so the fused sweep scores blocks in the same
+        read — the loops call maintain() *before* maybe_checkpoint() so a
+        same-step save reuses them."""
+        if self.fabric is None:
+            return
+        want_scores = (self.policy.strategy == SelectionStrategy.PRIORITY
+                       and self.policy.norm == "l2"
+                       and self._score_fn is None
+                       and self.should_checkpoint(int(step)))
+        self.fabric.maintain(
+            int(step), params,
+            ckpt_values=self.ckpt.values if want_scores else None)
 
     # -- recovery path ------------------------------------------------------
 

@@ -54,6 +54,7 @@ class FabricConfig:
     parity_group: int = 4          # members per XOR parity group
     parity_interval: int = 1       # steps between parity re-encodes
     elastic: bool = False          # post-failure re-homing/re-seeding
+    fused: bool = True             # single-sweep maintenance pipeline
     use_pallas: Optional[bool] = None   # None = auto: Pallas on TPU only
 
     def __post_init__(self):
@@ -86,8 +87,16 @@ class CheckpointFabric:
                                       replicas=self.replicas,
                                       parity=self.parity)
         self.last_maintained_step = -1
+        # fused maintenance program: (re)built lazily against the view's
+        # current striping (see _fused_maintain_fn)
+        self._fused_fn = None
+        self._fused_version = -1
+        self._traffic = None
+        self.last_scores = None
+        self.last_scores_step = -1
         self.stats = {"replica_refreshes": 0, "parity_encodes": 0,
-                      "recoveries": 0, "rehomes": 0, "heals": 0}
+                      "recoveries": 0, "rehomes": 0, "heals": 0,
+                      "fused_maintains": 0, "maintain_bytes_moved": 0}
 
     @property
     def homes(self) -> np.ndarray:
@@ -96,27 +105,143 @@ class CheckpointFabric:
 
     # -- maintenance ---------------------------------------------------------
 
-    def maintain(self, step: int, params: PyTree, force: bool = False) -> None:
-        """Refresh redundancy tiers from live params (idempotent per step)."""
+    def maintain(self, step: int, params: PyTree,
+                 ckpt_values: Optional[PyTree] = None,
+                 force: bool = False) -> None:
+        """Refresh redundancy tiers from live params (idempotent per step).
+
+        With ``cfg.fused`` (default) and both tiers due, the refresh runs
+        as one fused sweep (``kernels/fused_maintain``): each live leaf is
+        read once and yields the replica snapshot, the XOR parity frames,
+        and — when ``ckpt_values`` is passed — per-block PRIORITY scores
+        against the running checkpoint, cached on ``last_scores`` for the
+        controller's next partial save. Off-interval steps and
+        partial-tier configs fall back to the independent per-component
+        passes.
+        """
         step = int(step)
         if step == self.last_maintained_step and not force:
             return
-        if self.replicas is not None and (
-                force or step % self.cfg.replicate_interval == 0):
-            self.replicas.refresh(step, params)
-            self.stats["replica_refreshes"] += 1
-        if self.parity is not None and (
-                force or step % self.cfg.parity_interval == 0
-                or self.parity.parity is None):
-            self.parity.encode(step, params)
-            self.stats["parity_encodes"] += 1
+        due_replica = self.replicas is not None and (
+            force or step % self.cfg.replicate_interval == 0)
+        due_parity = self.parity is not None and (
+            force or step % self.cfg.parity_interval == 0
+            or self.parity.parity is None)
+        if self.cfg.fused and due_replica and due_parity:
+            self._fused_maintain(step, params, ckpt_values)
+        else:
+            t = self._traffic_model()
+            if due_replica:
+                self.replicas.refresh(step, params)
+                self.stats["replica_refreshes"] += 1
+                self.stats["maintain_bytes_moved"] += t["replica_pass"]
+            if due_parity:
+                self.parity.encode(step, params)
+                self.stats["parity_encodes"] += 1
+                self.stats["maintain_bytes_moved"] += t["parity_pass"]
         self.last_maintained_step = step
 
-    def redundancy_nbytes(self) -> dict[str, int]:
-        return {
+    def _fused_maintain(self, step: int, params: PyTree,
+                        ckpt_values: Optional[PyTree]) -> None:
+        fn = self._fused_maintain_fn()
+        # without checkpoint values there is nothing to score against —
+        # the sweep still runs, diffing params against itself (zero
+        # scores, discarded), so the program stays one cached jit
+        z = ckpt_values if ckpt_values is not None else params
+        replica, scores, parity = fn(params, z)
+        self.replicas.ingest(step, replica)
+        self.parity.ingest(step, parity)
+        if ckpt_values is not None:
+            self.last_scores = scores
+            self.last_scores_step = step
+        self.stats["replica_refreshes"] += 1
+        self.stats["parity_encodes"] += 1
+        self.stats["fused_maintains"] += 1
+        self.stats["maintain_bytes_moved"] += self._traffic_model()["fused"]
+
+    def _fused_maintain_fn(self):
+        """The jitted single-sweep program, rebuilt whenever the placement
+        engine re-striped since the last build (view.version moves on
+        every re-home/re-stripe/heal)."""
+        if self._fused_fn is None or self._fused_version != self.view.version:
+            from repro.kernels.fused_maintain.ops import make_fused_maintain_fn
+            self._fused_fn = make_fused_maintain_fn(
+                self.partition, self.parity.layout, self.parity.group_of,
+                self.parity.n_groups, use_pallas=self.cfg.use_pallas)
+            self._fused_version = self.view.version
+            self._traffic = None
+        return self._fused_fn
+
+    def is_fresh(self, step: int) -> bool:
+        """True when every configured tier holds this step's live values —
+        an off-interval :meth:`maintain` can run without refreshing a tier,
+        so ``last_maintained_step`` alone does not imply freshness."""
+        step = int(step)
+        if self.replicas is not None and not self.replicas.is_fresh(step):
+            return False
+        if self.parity is not None and not self.parity.is_fresh(step):
+            return False
+        return True
+
+    def invalidate_scores(self) -> None:
+        """Drop the cached PRIORITY scores (the controller calls this
+        after a partial save mutates the running checkpoint — the drift
+        they measured no longer exists)."""
+        self.last_scores = None
+        self.last_scores_step = -1
+
+    def _traffic_model(self) -> dict[str, int]:
+        """Analytic bytes per maintenance step under the current striping
+        (cached; placement changes invalidate)."""
+        if self._traffic is None:
+            model = sum(
+                int(np.prod(l.shape) if l.shape else 1)
+                * np.dtype(l.dtype).itemsize for l in self.partition.leaves)
+            if self.parity is not None:
+                from repro.kernels.fused_maintain.ops import maintain_traffic
+                t = dict(maintain_traffic(
+                    self.partition, self.parity.layout, self.parity.group_of,
+                    self.parity.n_groups, self.parity.members.shape[1]))
+                # per-component splits for off-interval steps: the scoring
+                # pass (2·model) only happens at PRIORITY checkpoint time
+                # on the seed path, so it is excluded from both
+                t["parity_pass"] = t["seed"] - 4 * t["model"]
+            else:
+                t = {"seed": 2 * model, "fused": 2 * model, "model": model,
+                     "parity": 0, "staging_seed": 0, "staging_fused": 0,
+                     "parity_pass": 0}
+            t["replica_pass"] = 2 * t["model"]
+            self._traffic = t
+        return self._traffic
+
+    def redundancy_nbytes(self, store: Optional[Any] = None) -> dict[str, int]:
+        """Real memory/disk footprint of the redundancy machinery: replica
+        and parity payloads, the parity codec's staging buffers (packed
+        frames + member gather on the seed path, compact per-leaf
+        contributions on the fused path — previously unaccounted), and,
+        when a persistent ``store`` is given, its on-disk shard bytes."""
+        staging = 0
+        if self.parity is not None:
+            # the fused sweep's compact staging applies only when every
+            # maintain actually takes the fused branch — mismatched tier
+            # intervals route off-interval steps through the seed encode,
+            # whose frames+gather footprint is the real peak
+            all_fused = (self.cfg.fused and self.cfg.replicate
+                         and self.cfg.replicate_interval
+                         == self.cfg.parity_interval)
+            staging = (self._traffic_model()["staging_fused"] if all_fused
+                       else self.parity.staging_nbytes())
+        out = {
             "replica": self.replicas.nbytes() if self.replicas else 0,
             "parity": self.parity.nbytes() if self.parity else 0,
+            "parity_staging": staging,
         }
+        if store is not None and hasattr(store, "disk_nbytes"):
+            disk = store.disk_nbytes()
+            # "live" is the indexed subset of "shard" — not additive
+            out["store_disk"] = int(disk["shard"] + disk["parity"])
+            out["store_disk_live"] = int(disk["live"] + disk["parity"])
+        return out
 
     # -- failure injection ---------------------------------------------------
 

@@ -171,6 +171,13 @@ class ParityCodec:
         self.parity = self._encode_fn(values)
         self.encoded_step = int(step)
 
+    def ingest(self, step: int, parity: jnp.ndarray) -> None:
+        """Adopt a parity buffer encoded elsewhere (the fused maintenance
+        sweep XOR-folds leaf bit patterns straight into group frames —
+        bit-identical to :meth:`encode` under the same striping)."""
+        self.parity = parity
+        self.encoded_step = int(step)
+
     def restripe(self) -> None:
         """Re-cut the parity groups over the view's current topology.
 
@@ -187,6 +194,17 @@ class ParityCodec:
 
     def nbytes(self) -> int:
         return 0 if self.parity is None else int(self.parity.nbytes)
+
+    def staging_nbytes(self) -> int:
+        """Peak staging footprint of one seed-path :meth:`encode`: the
+        packed ``(total_blocks, frame_elems)`` bit-pattern buffer plus the
+        ``(n_groups, width, frame_elems)`` member gather the XOR fold
+        consumes. The fused maintenance path replaces both with compact
+        per-leaf contributions (see ``kernels/fused_maintain``); callers
+        accounting real memory overhead must include whichever applies."""
+        frames = self.partition.total_blocks * self.layout.frame_elems * 4
+        gathered = int(self.members.size) * self.layout.frame_elems * 4
+        return frames + gathered
 
     # -- recovery ------------------------------------------------------------
 

@@ -44,6 +44,13 @@ class ReplicaSet:
         self.values = jax.tree_util.tree_map(jnp.array, params)
         self.refreshed_step = int(step)
 
+    def ingest(self, step: int, values: PyTree) -> None:
+        """Adopt a snapshot already produced elsewhere (the fused
+        maintenance sweep emits the replica copy in the same pass that
+        encodes parity — no second read of the live params)."""
+        self.values = values
+        self.refreshed_step = int(step)
+
     def is_fresh(self, step: int) -> bool:
         """True when replicas hold the *current* live values (no parameter
         update has happened since the refresh)."""

@@ -1,0 +1,165 @@
+"""Pallas TPU kernels: fused single-pass redundancy maintenance.
+
+The checkpoint fabric's hot loop previously made three-plus independent
+full passes over the live parameters every maintained step: a full-tree
+replica copy, a pack-into-frames + gather + XOR parity encode (two
+materialized full-model intermediates), and a third full read for PRIORITY
+block scoring. Both kernels here collapse that to the memory-roofline
+floor:
+
+``fused_maintain`` — one sweep per parameter leaf that reads each element
+of the live leaf (and its running-checkpoint counterpart) from HBM exactly
+once and, in that single pass,
+
+  (a) writes the replica snapshot (plain copy, original dtype),
+  (b) XOR-accumulates the leaf's float32 bit-pattern rows directly into
+      compact per-group parity frames — no ``(total_blocks, frame_width)``
+      packed intermediate and no ``(n_groups, g, E)`` gather buffer ever
+      exists, and
+  (c) emits per-block squared-L2 distance partials for PRIORITY selection.
+
+Layout: the grid is ``(E_tiles, S)`` — element tiles *outer*, blocks
+*inner* — and the block axis is driven by three scalar-prefetched arrays:
+``perm`` visits the leaf's blocks sorted by parity group, so all members
+of one group arrive on consecutive grid steps and the parity output block
+can be revisit-accumulated in VMEM (init on ``first``, XOR otherwise)
+exactly like ``block_dist``'s running sum; ``outrow`` maps each sorted
+position to its compact parity row. Replica rows and score partials are
+written back through the inverse map so they land in natural block order.
+
+``scatter_save`` — donation-based in-place partial-checkpoint write: the
+running checkpoint buffer is aliased as the output and the grid walks only
+the ``k`` selected blocks (scalar-prefetched row ids), so saving ``k``
+blocks moves ``O(k · block_bytes)`` — never the full leaf. Unvisited rows
+are never DMA'd and keep their previous contents (the §4.3 running
+checkpoint is a mutable mix of iterations by construction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BE = 512    # elements per tile (lanes; multiple of 128)
+
+
+# ---------------------------------------------------------------------------
+# fused_maintain: replica copy + parity XOR + priority scores, one read
+# ---------------------------------------------------------------------------
+
+def _fused_maintain_kernel(perm_ref, outrow_ref, first_ref, x_ref, z_ref,
+                           rep_ref, sc_ref, par_ref):
+    s = pl.program_id(1)
+    x = x_ref[...]                               # (1, BE), leaf dtype
+    rep_ref[...] = x                             # (a) replica snapshot
+    x32 = x.astype(jnp.float32)
+    d = x32 - z_ref[...].astype(jnp.float32)
+    sc_ref[0, 0] = jnp.sum(d * d)                # (c) score partial
+    bits = jax.lax.bitcast_convert_type(x32, jnp.int32)
+
+    @pl.when(first_ref[s] == 1)
+    def _init():                                 # (b) first member: seed
+        par_ref[...] = bits
+
+    @pl.when(first_ref[s] == 0)
+    def _fold():                                 # (b) later member: fold
+        par_ref[...] ^= bits
+
+
+def fused_maintain_pallas(x: jnp.ndarray, z: jnp.ndarray,
+                          perm: jnp.ndarray, outrow: jnp.ndarray,
+                          first: jnp.ndarray, n_out_rows: int,
+                          interpret: bool = False,
+                          ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One fused maintenance sweep over a leaf's block view.
+
+    x, z:    (S, E) live leaf view / running-checkpoint view (same shapes).
+    perm:    (S,) int32 — block ids sorted by parity group (group members
+             consecutive; within a group any order).
+    outrow:  (S,) int32 — compact parity row of sorted position s.
+    first:   (S,) int32 — 1 where s is the first sorted position of its row.
+    n_out_rows — number of distinct parity rows (static).
+
+    Returns (replica (S, E) x.dtype, scores (S,) f32,
+    parity_contrib (n_out_rows, E) int32 — XOR of the f32 bit patterns of
+    each row's member blocks).
+    """
+    s_dim, e = x.shape
+    e_pad = -e % BE
+    if e_pad:
+        x = jnp.pad(x, ((0, 0), (0, e_pad)))
+        z = jnp.pad(z, ((0, 0), (0, e_pad)))
+    ep = x.shape[1]
+    jt = ep // BE
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(jt, s_dim),                        # E tiles OUTER: parity row
+        in_specs=[                               # revisits stay consecutive
+            pl.BlockSpec((1, BE), lambda j, s, p, o, f: (p[s], j)),
+            pl.BlockSpec((1, BE), lambda j, s, p, o, f: (p[s], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BE), lambda j, s, p, o, f: (p[s], j)),
+            pl.BlockSpec((1, 1), lambda j, s, p, o, f: (p[s], j)),
+            pl.BlockSpec((1, BE), lambda j, s, p, o, f: (o[s], j)),
+        ],
+    )
+    rep, sc, par = pl.pallas_call(
+        _fused_maintain_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((s_dim, ep), x.dtype),
+            jax.ShapeDtypeStruct((s_dim, jt), jnp.float32),
+            jax.ShapeDtypeStruct((n_out_rows, ep), jnp.int32),
+        ],
+        interpret=interpret,
+    )(perm, outrow, first, x, z)
+    return rep[:, :e], jnp.sum(sc, axis=1), par[:, :e]
+
+
+# ---------------------------------------------------------------------------
+# scatter_save: donation-based in-place partial checkpoint write
+# ---------------------------------------------------------------------------
+
+def _scatter_save_kernel(rows_ref, src_ref, dst_ref, out_ref):
+    del rows_ref, dst_ref                        # routing/alias only
+    out_ref[...] = src_ref[...]
+
+
+def scatter_save_pallas(dst: jnp.ndarray, src: jnp.ndarray,
+                        rows: jnp.ndarray, block_rows: int,
+                        interpret: bool = False) -> jnp.ndarray:
+    """In-place block scatter over a leaf's raw row matrix.
+
+    dst, src: (R, W) — the leaf reshaped to (rows, row_width), NOT the
+    zero-padded block view (padding would materialize a full copy and
+    defeat the O(k) goal). rows: (k,) int32 selected *block* ids
+    (duplicates are idempotent — callers pad short selections with
+    repeats). Block ``b`` covers dst rows ``[b·block_rows, (b+1)·block_rows)``;
+    the ragged tail block is handled by Pallas's partial-block masking.
+
+    ``dst`` is donated and aliased to the output, so unselected rows are
+    never read or written — saving ``k`` blocks moves ``O(k·block_bytes)``.
+    """
+    r, w = dst.shape
+    k = rows.shape[0]
+    br = min(block_rows, r)
+    bw = min(BE, w)
+    jt = -(-w // bw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k, jt),
+        in_specs=[
+            pl.BlockSpec((br, bw), lambda i, j, rows: (rows[i], j)),
+            pl.BlockSpec(memory_space=pltpu.ANY),     # aliased, untouched
+        ],
+        out_specs=pl.BlockSpec((br, bw), lambda i, j, rows: (rows[i], j)),
+    )
+    return pl.pallas_call(
+        _scatter_save_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, w), dst.dtype),
+        input_output_aliases={2: 0},             # dst (after scalars) -> out
+        interpret=interpret,
+    )(rows, src, dst)

@@ -1,0 +1,294 @@
+"""Tree-level drivers for the fused_maintain kernel family.
+
+``make_fused_maintain_fn`` builds the fabric's hot-loop program: one jitted
+function ``(params, ckpt_values) -> (replica_tree, scores, parity)`` that
+reads each live leaf once and produces all three maintenance outputs. The
+host-side group metadata (sorted block order, compact parity rows, member
+matrices) is precomputed per parity striping and baked into the program —
+rebuilt by the fabric whenever the placement engine re-stripes.
+
+``tree_scatter_save`` is the checkpoint-side counterpart: a donation-based
+in-place partial save that moves only the selected blocks' bytes into the
+running checkpoint instead of rewriting every leaf through ``jnp.where``.
+
+Backend contract matches the other kernel packages: compiled Pallas on
+TPU, the jnp path elsewhere (interpret-mode Pallas is for validation
+only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import BlockPartition, leaf_block_view
+from repro.fabric.parity import FrameLayout
+from repro.kernels.fused_maintain.kernel import (fused_maintain_pallas,
+                                                 scatter_save_pallas)
+
+PyTree = Any
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Host-side group metadata (static per parity striping)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LeafGroupMeta:
+    """Per-leaf routing tables for the fused sweep (numpy, host-resident)."""
+    perm: np.ndarray        # (S,) block ids sorted by parity group
+    outrow: np.ndarray      # (S,) compact parity row per sorted position
+    first: np.ndarray       # (S,) 1 at the first sorted position of its row
+    touched: np.ndarray     # (n_out,) global group ids, ascending
+    members: np.ndarray     # (n_out, m_hat) local block ids, -1 padded
+    col: int                # column of this leaf's payload in the frame
+    width: int              # payload width (int32 words)
+
+
+def leaf_group_metas(partition: BlockPartition, layout: FrameLayout,
+                     group_of: np.ndarray) -> list[LeafGroupMeta]:
+    """Build each leaf's routing tables from the codec's group assignment."""
+    group_of = np.asarray(group_of, np.int32)
+    metas = []
+    for leaf, col, width in zip(partition.leaves, layout.cols, layout.widths):
+        gids = group_of[leaf.offset:leaf.offset + leaf.n_blocks]
+        assert (gids >= 0).all(), \
+            f"leaf {leaf.name}: blocks outside any parity group"
+        order = np.argsort(gids, kind="stable").astype(np.int32)
+        touched, inverse = np.unique(gids, return_inverse=True)
+        outrow = inverse.astype(np.int32)[order]
+        first = np.ones_like(outrow)
+        first[1:] = (outrow[1:] != outrow[:-1]).astype(np.int32)
+        m_hat = int(np.bincount(outrow).max())
+        members = np.full((touched.size, m_hat), -1, np.int32)
+        fill = np.zeros((touched.size,), np.int64)
+        for pos, row in zip(order, outrow):
+            members[row, fill[row]] = pos
+            fill[row] += 1
+        metas.append(LeafGroupMeta(perm=order, outrow=outrow, first=first,
+                                   touched=touched.astype(np.int32),
+                                   members=members, col=int(col),
+                                   width=int(width)))
+    return metas
+
+
+# ---------------------------------------------------------------------------
+# Fused maintenance program
+# ---------------------------------------------------------------------------
+
+def _leaf_sweep_pallas(x, z, meta: LeafGroupMeta, block_rows: int,
+                       interpret: bool):
+    xv = leaf_block_view(x, block_rows)
+    zv = leaf_block_view(z.astype(x.dtype), block_rows)
+    return fused_maintain_pallas(xv, zv, jnp.asarray(meta.perm),
+                                 jnp.asarray(meta.outrow),
+                                 jnp.asarray(meta.first),
+                                 n_out_rows=int(meta.touched.size),
+                                 interpret=interpret)
+
+
+def _leaf_sweep_jnp(x, z, meta: LeafGroupMeta, block_rows: int):
+    """jnp fast path: same outputs, one compact gather+fold per leaf —
+    never the (total_blocks, frame_width) packed buffer of the seed path."""
+    xv = leaf_block_view(x.astype(jnp.float32), block_rows)
+    zv = leaf_block_view(z.astype(jnp.float32), block_rows)
+    scores = jnp.sum((xv - zv) ** 2, axis=1)
+    bits = jax.lax.bitcast_convert_type(xv, jnp.int32)
+    idx = jnp.asarray(meta.members)
+    valid = idx >= 0
+    gathered = bits[jnp.where(valid, idx, 0)]        # (n_out, m_hat, E)
+    contrib = jax.lax.reduce(jnp.where(valid[..., None], gathered, 0),
+                             jnp.int32(0), jax.lax.bitwise_xor, (1,))
+    replica = jax.tree_util.tree_map(jnp.array, x)
+    return replica, scores, contrib
+
+
+def make_fused_maintain_fn(partition: BlockPartition, layout: FrameLayout,
+                           group_of: np.ndarray, n_groups: int,
+                           use_pallas: Optional[bool] = None,
+                           interpret: Optional[bool] = None,
+                           ) -> Callable[[PyTree, PyTree], tuple]:
+    """Build the jitted single-sweep maintenance program.
+
+    Returns ``fn(params, ckpt_values) -> (replica_tree, scores, parity)``
+    where ``scores`` is the (total_blocks,) squared-L2 drift vs the
+    running checkpoint (colocated leaves accumulate, like
+    :func:`repro.core.blocks.block_scores`) and ``parity`` is the
+    (n_groups, frame_elems) int32 XOR parity — bit-identical to
+    :meth:`ParityCodec.encode`'s result under the same striping.
+    """
+    if use_pallas is None:
+        use_pallas = _is_tpu()
+    if interpret is None:
+        interpret = not _is_tpu()
+    metas = leaf_group_metas(partition, layout, group_of)
+    br = partition.block_rows
+
+    def _maintain(params: PyTree, ckpt_values: PyTree):
+        flat = jax.tree_util.tree_leaves(params)
+        zflat = jax.tree_util.tree_leaves(ckpt_values)
+        scores = jnp.zeros((partition.total_blocks,), jnp.float32)
+        parity = jnp.zeros((n_groups, layout.frame_elems), jnp.int32)
+        replicas = []
+        for x, z, leaf, meta in zip(flat, zflat, partition.leaves, metas):
+            if use_pallas:
+                rep_v, sc, contrib = _leaf_sweep_pallas(x, z, meta, br,
+                                                        interpret)
+                rows = max(leaf.rows, 1)
+                rep = rep_v.reshape(-1, max(leaf.row_width, 1))[:rows]
+                rep = rep.reshape(leaf.shape)
+            else:
+                rep, sc, contrib = _leaf_sweep_jnp(x, z, meta, br)
+            replicas.append(rep)
+            scores = jax.lax.dynamic_update_slice(
+                scores, jax.lax.dynamic_slice(
+                    scores, (leaf.offset,), (leaf.n_blocks,)) + sc,
+                (leaf.offset,))
+            rows = jnp.asarray(meta.touched)
+            cols = slice(meta.col, meta.col + meta.width)
+            parity = parity.at[rows, cols].set(parity[rows, cols] ^ contrib)
+        replica_tree = jax.tree_util.tree_unflatten(partition.treedef,
+                                                    replicas)
+        return replica_tree, scores, parity
+
+    return jax.jit(_maintain)
+
+
+# ---------------------------------------------------------------------------
+# In-place partial save
+# ---------------------------------------------------------------------------
+
+_SCATTER_CACHE: dict = {}
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Next power of two ≥ n, clipped to cap — bounds jit recompiles to
+    O(log cap) distinct selection sizes per leaf signature."""
+    return min(1 << max(0, math.ceil(math.log2(max(n, 1)))), cap)
+
+
+def _scatter_leaf_fn(shape: tuple, dtype, k_hat: int, block_rows: int,
+                     use_pallas: bool, interpret: bool):
+    key = (shape, str(dtype), k_hat, block_rows, use_pallas, interpret)
+    fn = _SCATTER_CACHE.get(key)
+    if fn is not None:
+        return fn
+    rows_total = shape[0] if len(shape) >= 1 else 1
+    width = int(np.prod(shape[1:])) if len(shape) >= 1 else 1
+
+    def _scatter(dst, src, sel):
+        d2 = dst.reshape(max(rows_total, 1), max(width, 1))
+        s2 = src.astype(dst.dtype).reshape(max(rows_total, 1), max(width, 1))
+        if use_pallas:
+            out = scatter_save_pallas(d2, s2, sel, block_rows,
+                                      interpret=interpret)
+        else:
+            # row-expanded gather/scatter: duplicates from the clip and the
+            # bucket padding rewrite identical values (idempotent)
+            row_idx = (sel[:, None] * block_rows
+                       + jnp.arange(block_rows)[None, :]).reshape(-1)
+            row_idx = jnp.minimum(row_idx, max(rows_total, 1) - 1)
+            out = d2.at[row_idx].set(s2[row_idx])
+        return out.reshape(shape)
+
+    fn = jax.jit(_scatter, donate_argnums=(0,))
+    _SCATTER_CACHE[key] = fn
+    return fn
+
+
+def tree_scatter_save(dst: PyTree, src: PyTree, global_idx: np.ndarray,
+                      partition: BlockPartition,
+                      use_pallas: Optional[bool] = None,
+                      interpret: Optional[bool] = None,
+                      ) -> tuple[PyTree, int]:
+    """Overwrite the selected blocks of ``dst`` from ``src`` in place.
+
+    ``global_idx`` — host-resident selected global block ids. Leaves with
+    no selected block pass through untouched (zero traffic); each touched
+    leaf moves only its selected blocks' rows. Returns
+    ``(updated_tree, bytes_moved)``. ``dst`` leaves are donated — callers
+    must not reuse the input buffers of touched leaves.
+    """
+    if use_pallas is None:
+        use_pallas = _is_tpu()
+    if interpret is None:
+        interpret = not _is_tpu()
+    idx = np.unique(np.asarray(global_idx, np.int64))
+    dst_flat = jax.tree_util.tree_leaves(dst)
+    src_flat = jax.tree_util.tree_leaves(src)
+    br = partition.block_rows
+    out = []
+    moved = 0
+    # colocated leaves share block-id ranges; each leaf still scatters its
+    # own payload for the shared ids
+    for d, s, leaf in zip(dst_flat, src_flat, partition.leaves):
+        lo = np.searchsorted(idx, leaf.offset)
+        hi = np.searchsorted(idx, leaf.offset + leaf.n_blocks)
+        sel = (idx[lo:hi] - leaf.offset).astype(np.int32)
+        if sel.size == 0:
+            out.append(d)
+            continue
+        k_hat = _bucket(sel.size, leaf.n_blocks)
+        padded = np.full((k_hat,), sel[0], np.int32)
+        padded[:sel.size] = sel
+        fn = _scatter_leaf_fn(tuple(leaf.shape), leaf.dtype, k_hat, br,
+                              use_pallas, interpret)
+        out.append(fn(d, s, jnp.asarray(padded)))
+        rows_per = np.minimum((sel + 1) * br, max(leaf.rows, 1)) - sel * br
+        moved += int(rows_per.clip(min=0).sum()) * leaf.row_width \
+            * np.dtype(leaf.dtype).itemsize
+    return jax.tree_util.tree_unflatten(partition.treedef, out), moved
+
+
+# ---------------------------------------------------------------------------
+# Analytic traffic model (bytes per maintain step / per partial save)
+# ---------------------------------------------------------------------------
+
+def _tree_nbytes(partition: BlockPartition) -> int:
+    return sum(int(np.prod(l.shape) or 1) * np.dtype(l.dtype).itemsize
+               for l in partition.leaves)
+
+
+def maintain_traffic(partition: BlockPartition, layout: FrameLayout,
+                     group_of: np.ndarray, n_groups: int,
+                     group_width: int) -> dict[str, int]:
+    """Analytic HBM bytes moved by one full maintenance step (replica
+    refresh + parity encode + priority scoring), seed path vs fused path.
+
+    The seed path reads the live tree once per pass (replica copy, frame
+    pack, score) plus writes/reads two full-model staging buffers (the
+    packed ``(total_blocks, frame_elems)`` frames and the
+    ``(n_groups, g, E)`` gather); the fused path reads the live tree and
+    the checkpoint once, writes the replica, and touches only the compact
+    per-leaf parity contributions.
+    """
+    model = _tree_nbytes(partition)
+    frames = partition.total_blocks * layout.frame_elems * 4
+    gathered = n_groups * group_width * layout.frame_elems * 4
+    parity = n_groups * layout.frame_elems * 4
+    metas = leaf_group_metas(partition, layout, group_of)
+    contrib = sum(m.touched.size * m.width * 4 for m in metas)
+    seed = (
+        model + model            # replica: read live + write replica
+        + model + frames         # pack_frames: read live + write frames
+        + frames + gathered      # gather: read frames + write grouped
+        + gathered + parity      # encode: read grouped + write parity
+        + model + model          # block_scores: read live + read ckpt
+    )
+    fused = (
+        model + model            # one sweep: read live + read ckpt
+        + model                  # write replica
+        + contrib                # write compact parity contributions
+        + 2 * contrib + parity   # combine: read contribs, rmw parity cols
+    )
+    return {"seed": int(seed), "fused": int(fused), "model": int(model),
+            "parity": int(parity), "staging_seed": int(frames + gathered),
+            "staging_fused": int(contrib)}

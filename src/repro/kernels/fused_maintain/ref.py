@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the fused_maintain kernel family."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fused_maintain_ref(x: jnp.ndarray, z: jnp.ndarray,
+                       outrow_per_block: np.ndarray, n_out_rows: int,
+                       ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for one leaf sweep: (replica copy, per-block squared-L2
+    scores, per-row XOR of the blocks' float32 bit patterns).
+
+    ``outrow_per_block[b]`` is the compact parity row block ``b`` folds
+    into (natural block order, unlike the kernel's sorted ``perm``/
+    ``outrow`` encoding).
+    """
+    x32 = x.astype(jnp.float32)
+    z32 = z.astype(jnp.float32)
+    scores = jnp.sum((x32 - z32) ** 2, axis=1)
+    bits = np.asarray(jax.lax.bitcast_convert_type(x32, jnp.int32))
+    par = np.zeros((n_out_rows, x.shape[1]), np.int32)
+    for b, row in enumerate(np.asarray(outrow_per_block)):
+        par[int(row)] ^= bits[b]
+    return jnp.array(x), scores, jnp.asarray(par)
+
+
+def scatter_save_ref(dst: jnp.ndarray, src: jnp.ndarray,
+                     rows: np.ndarray, block_rows: int) -> jnp.ndarray:
+    """Oracle for the in-place block scatter: ``dst`` with the selected
+    blocks' rows overwritten from ``src`` (row-matrix layout)."""
+    out = np.array(dst)
+    src = np.asarray(src)
+    n_rows = out.shape[0]
+    for b in np.asarray(rows):
+        lo = int(b) * block_rows
+        hi = min(lo + block_rows, n_rows)
+        out[lo:hi] = src[lo:hi]
+    return jnp.asarray(out)

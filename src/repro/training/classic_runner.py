@@ -131,8 +131,10 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
     recovery_info = {}
     for i in range(1, max_iters + 1):
         p = model.step(p, key(i), i)
-        ctl.maybe_checkpoint(i, p)
+        # maintain before the checkpoint: the fused sweep's PRIORITY
+        # scores are measured against the pre-save running checkpoint
         ctl.maintain(i, p)
+        ctl.maybe_checkpoint(i, p)
         if i == fail_iter:
             if fail_domain == "uniform":
                 lost = ctl.sample_failure(fail_fraction)
@@ -194,8 +196,8 @@ def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
     losses = []
     for i in range(1, max_iters + 1):
         p = model.step(p, key(i), i)
-        ctl.maybe_checkpoint(i, p)
         ctl.maintain(i, p)
+        ctl.maybe_checkpoint(i, p)
         for ev in events_at.pop(i, []):
             p, info = ctl.on_domain_event(p, ev.kind, ev.index, step=i)
             info["step"] = i

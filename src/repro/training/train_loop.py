@@ -121,10 +121,13 @@ class TrainLoop:
             rec = {"step": int(state.step), "loss": loss, "seconds": dt}
 
             if self.controller is not None:
+                # maintain first: the fused maintenance sweep scores the
+                # blocks against the running checkpoint in the same read,
+                # and a same-step partial save below reuses those scores
+                self.controller.maintain(int(state.step), state.params)
                 if self.controller.maybe_checkpoint(int(state.step),
                                                     state.params):
                     rec["checkpointed"] = True
-                self.controller.maintain(int(state.step), state.params)
                 for ev in events_at.pop(i, []):
                     new_params, info = self.controller.on_domain_event(
                         state.params, ev.kind, ev.index,

@@ -1,0 +1,374 @@
+"""Fused single-pass maintenance: kernels, tree drivers, fabric + controller
+integration, and the donation-based in-place partial save.
+
+Kernels run in interpret=True mode on CPU (the kernel body executes in
+Python) — the TPU is the compile target, interpret validates semantics.
+Replica and parity outputs must be *bit-exact* vs the seed oracles (copy
+and XOR are exact operations); scores are float reductions with a
+different association order, so they get a tight allclose.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blocks import (block_scores, partition_pytree, select_blocks,
+                               tree_sq_norm)
+from repro.core.checkpoint import init_running_checkpoint
+from repro.core.controller import FTController
+from repro.core.norms import get_norm
+from repro.core.policy import CheckpointPolicy, RecoveryMode, SelectionStrategy
+from repro.fabric import CheckpointFabric, FabricConfig
+from repro.fabric.domains import FailureDomainMap
+from repro.fabric.parity import ParityCodec
+from repro.fabric.placement import ClusterView
+from repro.kernels.fused_maintain.kernel import (fused_maintain_pallas,
+                                                 scatter_save_pallas)
+from repro.kernels.fused_maintain.ref import (fused_maintain_ref,
+                                              scatter_save_ref)
+from repro.kernels.fused_maintain.ops import (leaf_group_metas,
+                                              make_fused_maintain_fn,
+                                              maintain_traffic,
+                                              tree_scatter_save)
+from repro.sharding.partition import block_device_homes
+
+RNG = np.random.default_rng(11)
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _params():
+    return {"w": jnp.asarray(RNG.normal(size=(50, 6)), jnp.float32),
+            "emb": jnp.asarray(RNG.normal(size=(33, 8)), jnp.float32),
+            "b": jnp.asarray(RNG.normal(size=(5,)), jnp.float32),
+            "s": jnp.float32(2.5)}
+
+
+def _codec(params, part, group_size=3):
+    view = ClusterView(FailureDomainMap(8, 2, 2),
+                       block_device_homes(part, 8))
+    codec = ParityCodec(part, view, group_size=group_size, use_pallas=False)
+    codec.encode(0, params)
+    return codec
+
+
+# ---------------------------------------------------------------------------
+# kernel-level sweeps vs oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 1), (5, 100), (8, 512), (13, 777)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_maintain_kernel_sweep(shape, dtype):
+    s, e = shape
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    z = jnp.asarray(RNG.normal(size=shape), dtype)
+    group_of = RNG.integers(0, max(s // 2, 1), (s,))
+    order = np.argsort(group_of, kind="stable").astype(np.int32)
+    touched, inverse = np.unique(group_of, return_inverse=True)
+    outrow = inverse.astype(np.int32)[order]
+    first = np.ones_like(outrow)
+    first[1:] = (outrow[1:] != outrow[:-1]).astype(np.int32)
+    rep, sc, par = fused_maintain_pallas(
+        x, z, jnp.asarray(order), jnp.asarray(outrow), jnp.asarray(first),
+        n_out_rows=int(touched.size), interpret=True)
+    want_rep, want_sc, want_par = fused_maintain_ref(
+        x, z, inverse, int(touched.size))
+    np.testing.assert_array_equal(np.asarray(rep), np.asarray(want_rep))
+    np.testing.assert_array_equal(np.asarray(par), np.asarray(want_par))
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(want_sc),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape,block_rows", [((50, 6), 16), ((7, 3), 4),
+                                              ((128, 520), 64)])
+def test_scatter_save_kernel_sweep(shape, block_rows):
+    dst = jnp.asarray(RNG.normal(size=shape), jnp.float32)
+    src = jnp.asarray(RNG.normal(size=shape), jnp.float32)
+    n_blocks = -(-shape[0] // block_rows)
+    k = max(1, n_blocks // 2)
+    rows = np.sort(RNG.choice(n_blocks, k, replace=False)).astype(np.int32)
+    got = scatter_save_pallas(jnp.array(dst), src, jnp.asarray(rows),
+                              block_rows, interpret=True)
+    want = scatter_save_ref(dst, src, rows, block_rows)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_scatter_save_kernel_duplicate_rows_idempotent():
+    dst = jnp.asarray(RNG.normal(size=(20, 8)), jnp.float32)
+    src = jnp.asarray(RNG.normal(size=(20, 8)), jnp.float32)
+    rows = jnp.asarray([1, 1, 3, 3], jnp.int32)   # bucket-padding pattern
+    got = scatter_save_pallas(jnp.array(dst), src, rows, 4, interpret=True)
+    want = scatter_save_ref(dst, src, np.asarray([1, 3]), 4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# tree-level drivers vs the seed-path oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_tree_fused_maintain_matches_oracles(use_pallas):
+    params = _params()
+    ck = jax.tree_util.tree_map(
+        lambda x: x + jnp.asarray(RNG.normal(size=x.shape), x.dtype), params)
+    part = partition_pytree(params, 16)
+    codec = _codec(params, part)
+    fn = make_fused_maintain_fn(part, codec.layout, codec.group_of,
+                                codec.n_groups, use_pallas=use_pallas,
+                                interpret=True)
+    rep, sc, par = fn(params, ck)
+    _tree_equal(rep, params)                               # replica == copy
+    np.testing.assert_array_equal(np.asarray(par),         # parity bit-exact
+                                  np.asarray(codec.parity))
+    want = block_scores(params, ck, part, get_norm("l2"))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_tree_fused_maintain_colocated_leaves():
+    """Colocated leaves share block ids: scores accumulate per group and
+    every colocated payload folds into the same parity rows at its own
+    frame columns — exactly like the seed pack_frames/encode path."""
+    tree = {"net": {"w": jnp.asarray(RNG.normal(size=(16, 3)), jnp.float32)},
+            "mu": {"w": jnp.asarray(RNG.normal(size=(16, 3)), jnp.float32)},
+            "t": jnp.float32(1.0)}
+    ck = jax.tree_util.tree_map(
+        lambda x: x + jnp.asarray(RNG.normal(size=x.shape), x.dtype), tree)
+    part = partition_pytree(tree, 8, colocate=("net", "mu"))
+    codec = _codec(tree, part, group_size=2)
+    for use_pallas in (False, True):
+        fn = make_fused_maintain_fn(part, codec.layout, codec.group_of,
+                                    codec.n_groups, use_pallas=use_pallas,
+                                    interpret=True)
+        rep, sc, par = fn(tree, ck)
+        _tree_equal(rep, tree)
+        np.testing.assert_array_equal(np.asarray(par),
+                                      np.asarray(codec.parity))
+        want = block_scores(tree, ck, part, get_norm("l2"))
+        np.testing.assert_allclose(np.asarray(sc), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_leaf_group_metas_cover_all_blocks():
+    params = _params()
+    part = partition_pytree(params, 16)
+    codec = _codec(params, part)
+    metas = leaf_group_metas(part, codec.layout, codec.group_of)
+    for leaf, meta in zip(part.leaves, metas):
+        assert sorted(meta.perm.tolist()) == list(range(leaf.n_blocks))
+        assert meta.first[0] == 1
+        # members matrix lists every block exactly once
+        listed = meta.members[meta.members >= 0]
+        assert sorted(listed.tolist()) == list(range(leaf.n_blocks))
+
+
+def test_maintain_traffic_model_fused_wins():
+    params = _params()
+    part = partition_pytree(params, 16)
+    codec = _codec(params, part)
+    t = maintain_traffic(part, codec.layout, codec.group_of, codec.n_groups,
+                         codec.members.shape[1])
+    assert t["fused"] < t["seed"]
+    assert t["staging_fused"] < t["staging_seed"]
+
+
+# ---------------------------------------------------------------------------
+# fabric integration
+# ---------------------------------------------------------------------------
+
+def test_fabric_fused_matches_seed_maintain():
+    params = _params()
+    part = partition_pytree(params, 16)
+    fused = CheckpointFabric(part, FabricConfig(fused=True))
+    seed = CheckpointFabric(part, FabricConfig(fused=False))
+    fused.maintain(3, params)
+    seed.maintain(3, params)
+    assert fused.stats["fused_maintains"] == 1
+    assert seed.stats["fused_maintains"] == 0
+    _tree_equal(fused.replicas.values, seed.replicas.values)
+    np.testing.assert_array_equal(np.asarray(fused.parity.parity),
+                                  np.asarray(seed.parity.parity))
+    assert fused.replicas.is_fresh(3) and fused.parity.is_fresh(3)
+    assert fused.stats["maintain_bytes_moved"] < \
+        seed.stats["maintain_bytes_moved"]
+
+
+def test_fabric_fused_recovery_after_domain_loss():
+    """A host loss recovered from fused-maintained tiers is exact, and the
+    fused program rebuilds against the re-striped topology."""
+    params = _params()
+    part = partition_pytree(params, 16)
+    fab = CheckpointFabric(part, FabricConfig(elastic=True, fused=True))
+    ck = init_running_checkpoint(params, part)
+    fab.maintain(5, params)
+    lost, failed = fab.domain_failure("host", 0)
+    assert failed.size
+    recovered, stats = fab.on_failure(params, ck.values, lost,
+                                      failed_devices=failed, step=5)
+    assert float(tree_sq_norm(recovered, params)) == 0.0
+    # elastic replan re-striped: next fused maintain must rebuild and stay
+    # bit-consistent with a fresh seed encode on the same topology
+    fab.maintain(6, params, force=True)
+    want = jnp.array(fab.parity.parity)
+    fab.parity.encode(6, params)
+    np.testing.assert_array_equal(np.asarray(want),
+                                  np.asarray(fab.parity.parity))
+
+
+def test_fabric_scores_cache_lifecycle():
+    params = _params()
+    part = partition_pytree(params, 16)
+    fab = CheckpointFabric(part, FabricConfig(fused=True))
+    ck = init_running_checkpoint(params, part)
+    drifted = jax.tree_util.tree_map(lambda x: x + 1, params)
+    fab.maintain(2, drifted, ckpt_values=ck.values)
+    assert fab.last_scores_step == 2
+    want = block_scores(drifted, ck.values, part, get_norm("l2"))
+    np.testing.assert_allclose(np.asarray(fab.last_scores),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+    fab.invalidate_scores()
+    assert fab.last_scores is None and fab.last_scores_step == -1
+    # without ckpt_values the sweep still maintains but caches no scores
+    fab.maintain(3, drifted, force=True)
+    assert fab.last_scores is None
+
+
+def test_checkpoint_forces_freshness_despite_off_interval_maintain():
+    """An off-interval maintain() must not mask the post-checkpoint force
+    refresh: with replicate_interval=2 a checkpoint at an odd step still
+    leaves every tier fresh (regression: the force was skipped whenever
+    maintain ran the same step, even as a no-op)."""
+    params = _params()
+    pol = CheckpointPolicy(fraction=0.25, full_interval=1,
+                           strategy=SelectionStrategy.ROUND_ROBIN,
+                           recovery=RecoveryMode.PARTIAL, block_rows=16)
+    ctl = FTController(params, pol,
+                       fabric=FabricConfig(replicate_interval=2,
+                                           parity_interval=2, fused=True))
+    live = jax.tree_util.tree_map(lambda x: x + 1, params)
+    ctl.maintain(3, live)                      # 3 % 2 != 0: refreshes nothing
+    assert not ctl.fabric.is_fresh(3)
+    ctl.maybe_checkpoint(3, live)
+    assert ctl.fabric.is_fresh(3)
+    assert ctl.fabric.replicas.is_fresh(3)
+    assert ctl.fabric.parity.is_fresh(3)
+
+
+# ---------------------------------------------------------------------------
+# in-place partial save
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_tree_scatter_save_matches_select_blocks(use_pallas):
+    params = _params()
+    part = partition_pytree(params, 16)
+    ck = jax.tree_util.tree_map(
+        lambda x: x + jnp.asarray(RNG.normal(size=x.shape), x.dtype), params)
+    mask = np.asarray(RNG.random(part.total_blocks) < 0.4)
+    mask[0] = True
+    want = select_blocks(ck, params, jnp.asarray(mask), part)
+    got, moved = tree_scatter_save(
+        jax.tree_util.tree_map(jnp.array, ck), params,
+        np.nonzero(mask)[0], part, use_pallas=use_pallas, interpret=True)
+    _tree_equal(got, want)
+    assert 0 < moved < sum(x.size * x.dtype.itemsize
+                           for x in jax.tree_util.tree_leaves(params))
+
+
+def test_tree_scatter_save_untouched_leaves_pass_through():
+    params = _params()
+    part = partition_pytree(params, 16)
+    ck = jax.tree_util.tree_map(jnp.array, params)
+    w_leaf = next(l for l in part.leaves if l.name == "['w']")
+    idx = np.asarray([w_leaf.offset])
+    got, moved = tree_scatter_save(ck, params, idx, part, use_pallas=False)
+    # only w was touched; every other leaf is the same buffer object
+    for leaf, a, b in zip(part.leaves, jax.tree_util.tree_leaves(got),
+                          jax.tree_util.tree_leaves(ck)):
+        if leaf.name != "['w']":
+            assert a is b
+    assert moved == 16 * w_leaf.row_width * 4
+
+
+def test_controller_inplace_save_matches_rewrite_path():
+    """The donation-scatter save path is bit-equivalent to the seed
+    jnp.where rewrite over a multi-save PRIORITY run."""
+    params = _params()
+    pol = CheckpointPolicy(fraction=0.25, full_interval=4,
+                           strategy=SelectionStrategy.PRIORITY,
+                           recovery=RecoveryMode.PARTIAL, block_rows=16)
+    a = FTController(params, pol, inplace_save=True,
+                     rng=jax.random.PRNGKey(3))
+    b = FTController(params, pol, inplace_save=False,
+                     rng=jax.random.PRNGKey(3))
+    live = params
+    for step in (1, 2, 3):
+        live = jax.tree_util.tree_map(
+            lambda x: x + jnp.asarray(RNG.normal(size=x.shape) * step,
+                                      x.dtype), live)
+        ma = a.checkpoint_now(step, live)
+        mb = b.checkpoint_now(step, live)
+        np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+    _tree_equal(a.ckpt.values, b.ckpt.values)
+    np.testing.assert_array_equal(np.asarray(a.ckpt.saved_iter),
+                                  np.asarray(b.ckpt.saved_iter))
+    assert a.stats["save_bytes_moved"] > 0
+    assert b.stats["save_bytes_moved"] == 0
+
+
+def test_controller_fused_scores_reused_for_priority():
+    """maintain() before a PRIORITY save caches fused scores; the save
+    consumes them (no third pass) and still selects the same blocks."""
+    params = _params()
+    pol = CheckpointPolicy(fraction=0.25, full_interval=1,
+                           strategy=SelectionStrategy.PRIORITY,
+                           recovery=RecoveryMode.PARTIAL, block_rows=16)
+    fab = FabricConfig(fused=True)
+    ctl = FTController(params, pol, fabric=fab, rng=jax.random.PRNGKey(0))
+    plain = FTController(params, pol, rng=jax.random.PRNGKey(0))
+    live = jax.tree_util.tree_map(lambda x: x + 1, params)
+    ctl.maintain(1, live)
+    assert ctl.fabric.last_scores_step == 1
+    m1 = ctl.checkpoint_now(1, live)
+    m2 = plain.checkpoint_now(1, live)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    _tree_equal(ctl.ckpt.values, plain.ckpt.values)
+    assert ctl.fabric.last_scores is None   # consumed + invalidated
+
+
+def test_incremental_inplace_save_property():
+    """Hypothesis: a sequence of random partial saves applied through the
+    in-place scatter equals the seed select_blocks fold, mask by mask."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    params = _params()
+    part = partition_pytree(params, 16)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.lists(st.integers(0, part.total_blocks - 1),
+                             min_size=1, max_size=part.total_blocks),
+                    min_size=1, max_size=4),
+           st.integers(0, 2 ** 31 - 1))
+    def prop(mask_seq, seed):
+        r = np.random.default_rng(seed)
+        inplace = jax.tree_util.tree_map(jnp.array, params)
+        fold = jax.tree_util.tree_map(jnp.array, params)
+        for ids in mask_seq:
+            src = jax.tree_util.tree_map(
+                lambda x: x + jnp.asarray(r.normal(size=x.shape), x.dtype),
+                params)
+            idx = np.unique(np.asarray(ids))
+            mask = np.zeros((part.total_blocks,), bool)
+            mask[idx] = True
+            inplace, _ = tree_scatter_save(inplace, src, idx, part,
+                                           use_pallas=False)
+            fold = select_blocks(fold, src, jnp.asarray(mask), part)
+        _tree_equal(inplace, fold)
+
+    prop()

@@ -409,10 +409,16 @@ def test_store_domain_keyed_layout_and_partial_read(tmp_path):
     store = ShardedCheckpointStore(str(tmp_path))
     store.init(params, part, homes=homes, domains=dm)
     hosts = np.asarray(dm.host_of(homes))
+    # packed layout: one append-mode shard per home host, and every block
+    # indexed into its own host's shard
+    for h in np.unique(hosts):
+        host_dir = os.path.join(str(tmp_path), f"host_{h:04d}")
+        shards = [f for f in os.listdir(host_dir)
+                  if f.startswith("blocks.") and f.endswith(".shard")]
+        assert shards, f"host {h} has no packed shard"
     for gid in range(part.total_blocks):
-        p = os.path.join(str(tmp_path), f"host_{hosts[gid]:04d}",
-                         f"block_{gid:08d}.npy")
-        assert os.path.exists(p), f"block {gid} not keyed by its domain"
+        assert os.path.dirname(store._shard_path(gid)).endswith(
+            f"host_{hosts[gid]:04d}"), f"block {gid} not keyed by its domain"
     assert store.saved_iters().shape == (part.total_blocks,)
     # partial read: only the masked blocks come back
     mask = np.zeros((part.total_blocks,), bool)
