@@ -79,11 +79,13 @@ def _soak_rows(model, policy, clean, max_iters: int) -> list[str]:
     rows = []
     fallthrough = {}
     costs = {}
+    avail = {}
     for name, kw in (("elastic", dict(elastic=True)),
                      ("inplace", dict(elastic=False))):
         r = run_with_trace(model, policy, fabric=_fabric_cfg(**kw),
                            max_iters=max_iters, seed=0, clean_losses=clean,
                            trace=trace)
+        avail[name] = r["availability"]
         events = [e for e in r["events"] if not e.get("skipped")]
         later = events[1:]
         ckpt_disk = sum(e["tier_counts"]["RUNNING_CKPT"]
@@ -105,6 +107,26 @@ def _soak_rows(model, policy, clean, max_iters: int) -> list[str]:
         f"inplace_fellthrough_blocks={fallthrough['inplace']};"
         f"elastic_iter_cost={costs['elastic']:.1f};"
         f"inplace_iter_cost={costs['inplace']:.1f}"))
+    # availability/goodput report aggregated from the per-event tier
+    # accounting + per-step redundancy flags (ROADMAP "soak-run
+    # availability report"): elastic re-planning restores full redundancy
+    # within the failure step, recover-in-place never does
+    for name, av in avail.items():
+        ttf = av["mean_time_to_full"]
+        rows.append(csv_row(
+            f"tier_soak_availability_{name}", 0.0,
+            f"frac_steps_full={av['frac_steps_full']:.3f};"
+            f"mean_steps_to_full_redundancy="
+            f"{'censored' if ttf is None else format(ttf, '.1f')};"
+            f"censored_events={av['censored_events']};"
+            f"cheap_tier_blocks={av['cheap_tier_blocks']};"
+            f"ckpt_disk_blocks={av['ckpt_disk_blocks']}"))
+    rows.append(csv_row(
+        "tier_soak_availability", 0.0,
+        f"elastic_frac_full={avail['elastic']['frac_steps_full']:.3f};"
+        f"inplace_frac_full={avail['inplace']['frac_steps_full']:.3f};"
+        f"elastic_more_available="
+        f"{bool(avail['elastic']['frac_steps_full'] > avail['inplace']['frac_steps_full'])}"))
     return rows
 
 

@@ -66,6 +66,11 @@ class ShardedCheckpointStore:
         self.partition: Optional[BlockPartition] = None
         self.must_reload = False
         self.host_of_block: Optional[np.ndarray] = None
+        # flat-arena layout (optional): segments are keyed by arena-block
+        # id — one row per (leaf, block), so colocated leaves (which share
+        # global block ids) each persist their own payload
+        self.arena_layout = None
+        self._leaf_first_seg: Optional[np.ndarray] = None
         # per shard-directory compaction generation (segments index offsets
         # are only valid within their generation's file)
         self._gen: dict = {}
@@ -78,21 +83,37 @@ class ShardedCheckpointStore:
 
     def init(self, params: PyTree, partition: BlockPartition,
              homes: Optional[np.ndarray] = None,
-             domains: Optional[Any] = None) -> None:
+             domains: Optional[Any] = None,
+             arena_layout=None,
+             arena_values: Optional[np.ndarray] = None) -> None:
         """``homes``/``domains`` (a block→device map + ``FailureDomainMap``)
         switch on the domain-keyed layout. The keying snapshots the homes at
         init — the *initial* placement; elastic re-homing moves the in-memory
-        tiers, while the disk mirror keeps its stable layout (a block's
-        shard never migrates, so recovery readers need no re-homing
-        history)."""
+        tiers, while the disk mirror keeps its stable layout until a
+        re-keying :meth:`compact` migrates segments to their current homes.
+
+        ``arena_layout`` (+ ``arena_values``, the packed float32 arena of
+        ``params``) switches on the **arena segment layout**: segments are
+        the arena block table's rows (float32 payloads, one per
+        (leaf, block)), a save appends one contiguous buffer per host
+        shard, and partial reads memmap exactly the needed byte ranges."""
         self.partition = partition
+        self.arena_layout = arena_layout
         self._gen = {}
+        if arena_layout is not None:
+            first, n = [], 0
+            for leaf in partition.leaves:
+                first.append(n)
+                n += leaf.n_blocks
+            self._leaf_first_seg = np.asarray(first, np.int64)
         if homes is not None and domains is not None:
             self.host_of_block = np.asarray(
                 domains.host_of(np.asarray(homes)), np.int32)
             for h in np.unique(self.host_of_block):
                 os.makedirs(os.path.join(self.root, f"host_{int(h):04d}"),
                             exist_ok=True)
+        n_segments = (len(arena_layout.blocks) if arena_layout is not None
+                      else partition.total_blocks)
         manifest = {
             "block_rows": partition.block_rows,
             "leaves": [
@@ -102,14 +123,36 @@ class ShardedCheckpointStore:
                 for l in partition.leaves
             ],
             "saved_iter": [0] * partition.total_blocks,
-            "segments": [None] * partition.total_blocks,
+            "segments": [None] * n_segments,
         }
+        if arena_layout is not None:
+            manifest["arena"] = {"n_segments": n_segments}
         if self.host_of_block is not None:
             manifest["host_of_block"] = [int(h) for h in self.host_of_block]
         self._write_manifest(manifest)
         # initial full mirror (x^(0)) — the running checkpoint's base
         full_mask = np.ones((partition.total_blocks,), bool)
-        self.write_blocks(full_mask, params, step=0, background=False)
+        if arena_layout is not None:
+            assert arena_values is not None, \
+                "arena-layout init needs the packed arena values"
+            from repro.core.arena import ARENA_TILE
+            tiles = arena_layout.tiles_for_blocks(
+                np.arange(partition.total_blocks))
+            data = np.asarray(arena_values, np.float32).reshape(
+                -1, ARENA_TILE)[tiles]
+            self.write_arena(full_mask, tiles, data, step=0,
+                             background=False)
+        else:
+            self.write_blocks(full_mask, params, step=0, background=False)
+
+    # -- arena segment helpers ----------------------------------------------
+
+    def _seg_gid(self, seg: int) -> int:
+        """Global block id owning segment ``seg`` (identity without an
+        arena layout)."""
+        if self.arena_layout is None:
+            return int(seg)
+        return int(self.arena_layout.blocks[seg].gid)
 
     def _manifest_path(self) -> str:
         return os.path.join(self.root, "MANIFEST.json")
@@ -122,14 +165,17 @@ class ShardedCheckpointStore:
             json.dump(manifest, f)
         os.replace(tmp, self._manifest_path())
 
-    def _shard_dir(self, gid: int) -> str:
+    def _shard_dir(self, seg: int) -> str:
+        """Shard directory of a segment (arena-block id in arena mode,
+        global block id otherwise)."""
         if self.host_of_block is not None:
+            gid = self._seg_gid(seg)
             host_dir = f"host_{int(self.host_of_block[gid]):04d}"
             return os.path.join(self.root, host_dir)
         return self.root
 
-    def _shard_path(self, gid: int) -> str:
-        d = self._shard_dir(gid)
+    def _shard_path(self, seg: int) -> str:
+        d = self._shard_dir(seg)
         return os.path.join(d, _shard_name(self._gen.get(d, 0)))
 
     # -- write path ---------------------------------------------------------
@@ -144,16 +190,79 @@ class ShardedCheckpointStore:
         jobs: list[tuple[int, np.ndarray]] = []
         nbytes = 0
         br = self.partition.block_rows
-        for leaf_meta, x in zip(self.partition.leaves, leaves):
-            seg = mask_np[leaf_meta.offset:leaf_meta.offset + leaf_meta.n_blocks]
-            if not seg.any():
-                continue
-            arr = np.asarray(x).reshape(max(leaf_meta.rows, 1), -1)
-            for b in np.nonzero(seg)[0]:
-                lo, hi = b * br, min((b + 1) * br, leaf_meta.rows)
-                blk = arr[lo:hi] if hi > lo else arr[:1]
-                jobs.append((leaf_meta.offset + int(b), blk))
-                nbytes += blk.nbytes
+        if self.arena_layout is not None:
+            # arena-layout store fed from a PyTree: convert each selected
+            # (leaf, block) to its float32 arena payload so the on-disk
+            # format stays uniform (and colocated leaves each keep their
+            # own segment instead of overwriting a shared gid key)
+            for li, (leaf_meta, x) in enumerate(
+                    zip(self.partition.leaves, leaves)):
+                seg = mask_np[leaf_meta.offset:
+                              leaf_meta.offset + leaf_meta.n_blocks]
+                if not seg.any():
+                    continue
+                arr = np.asarray(x, np.float32).reshape(
+                    max(leaf_meta.rows, 1), -1)
+                payload = self.arena_layout.payload_words[li]
+                for b in np.nonzero(seg)[0]:
+                    lo = int(b) * br
+                    hi = min(lo + br, max(leaf_meta.rows, 1))
+                    blk = np.ascontiguousarray(arr[lo:hi]).reshape(-1)
+                    if blk.size < payload:   # ragged tail: zero-pad like
+                        full = np.zeros((payload,), np.float32)  # the arena
+                        full[:blk.size] = blk
+                        blk = full
+                    ab = int(self._leaf_first_seg[li]) + int(b)
+                    jobs.append((ab, blk))
+                    nbytes += blk.nbytes
+        else:
+            for leaf_meta, x in zip(self.partition.leaves, leaves):
+                seg = mask_np[leaf_meta.offset:leaf_meta.offset + leaf_meta.n_blocks]
+                if not seg.any():
+                    continue
+                arr = np.asarray(x).reshape(max(leaf_meta.rows, 1), -1)
+                for b in np.nonzero(seg)[0]:
+                    lo, hi = b * br, min((b + 1) * br, leaf_meta.rows)
+                    blk = arr[lo:hi] if hi > lo else arr[:1]
+                    jobs.append((leaf_meta.offset + int(b), blk))
+                    nbytes += blk.nbytes
+        if background:
+            self._ensure_worker()
+            self._q.put(("write", jobs, step))
+        else:
+            self._do_write(jobs, step)
+        return nbytes
+
+    def write_arena(self, mask, tiles: np.ndarray, data: np.ndarray,
+                    step: int, background: bool = True) -> int:
+        """Persist arena segments straight from gathered arena tiles.
+
+        ``tiles``/``data``: the ascending tile indices covering the
+        selected blocks and their ``(len(tiles), ARENA_TILE)`` float32
+        payloads (the controller gathers them off-device in one O(k)
+        transfer). Each selected arena block's payload is sliced out
+        contiguously; the write path batches all of a host's payloads
+        into **one** append write per shard file."""
+        assert self.arena_layout is not None, "store not in arena mode"
+        mask_np = np.asarray(mask, bool)
+        tiles = np.asarray(tiles, np.int64)
+        from repro.core.arena import ARENA_TILE
+        flat = np.asarray(data, np.float32).reshape(-1)
+        jobs: list[tuple[int, np.ndarray]] = []
+        nbytes = 0
+        # O(selected): only the masked gids' arena blocks are visited
+        for ab_index in self.arena_layout.blocks_for_gids(
+                np.nonzero(mask_np)[0]):
+            ab = self.arena_layout.blocks[ab_index]
+            t0 = ab.offset // ARENA_TILE
+            nt = ab.words // ARENA_TILE
+            pos = int(np.searchsorted(tiles, t0))
+            assert pos + nt <= tiles.size and tiles[pos] == t0, \
+                "gathered tiles do not cover the selected blocks"
+            payload = flat[pos * ARENA_TILE:
+                           pos * ARENA_TILE + ab.payload]
+            jobs.append((int(ab_index), payload))
+            nbytes += payload.nbytes
         if background:
             self._ensure_worker()
             self._q.put(("write", jobs, step))
@@ -233,26 +342,31 @@ class ShardedCheckpointStore:
                 self._q.task_done()
 
     def _do_write(self, jobs, step: int) -> None:
-        """Append the blocks' payloads to their shards, then publish the
-        new offset index atomically — the log-structured write path."""
+        """Append the segments' payloads to their shards, then publish the
+        new offset index atomically — the log-structured write path.
+        Each shard's payloads are coalesced into one buffer first, so a
+        partial save costs ONE append write per touched host shard."""
         by_shard: dict[str, list[tuple[int, np.ndarray]]] = {}
-        for gid, blk in jobs:
-            by_shard.setdefault(self._shard_path(gid), []).append((gid, blk))
+        for seg, blk in jobs:
+            by_shard.setdefault(self._shard_path(seg), []).append((seg, blk))
         new_segments: dict[int, list[int]] = {}
         for path, batch in by_shard.items():
             with open(path, "ab") as f:
-                for gid, blk in batch:
-                    off = f.tell()
+                off = f.tell()
+                chunks = []
+                for seg, blk in batch:
                     payload = np.ascontiguousarray(blk)
-                    f.write(payload.tobytes())
-                    new_segments[gid] = [off, int(payload.nbytes)]
+                    new_segments[seg] = [off, int(payload.nbytes)]
+                    off += int(payload.nbytes)
+                    chunks.append(payload.tobytes())
+                f.write(b"".join(chunks))
                 f.flush()
                 os.fsync(f.fileno())
         with open(self._manifest_path()) as f:
             manifest = json.load(f)
-        for gid, _ in jobs:
-            manifest["saved_iter"][gid] = int(step)
-            manifest["segments"][gid] = new_segments[gid]
+        for seg, _ in jobs:
+            manifest["saved_iter"][self._seg_gid(seg)] = int(step)
+            manifest["segments"][seg] = new_segments[seg]
         self._write_manifest(manifest)
 
     def flush(self) -> None:
@@ -268,7 +382,8 @@ class ShardedCheckpointStore:
             err, self._worker_error = self._worker_error, None
             raise RuntimeError("background checkpoint write failed") from err
 
-    def compact(self) -> int:
+    def compact(self, rekey_homes: Optional[np.ndarray] = None,
+                domains: Optional[Any] = None) -> int:
         """Rewrite every shard keeping only the live (indexed) segments.
 
         The append log grows by the write volume of overwritten blocks;
@@ -276,54 +391,96 @@ class ShardedCheckpointStore:
         and exclusive — callers stop writing around it (the background
         queue is flushed first).
 
+        ``rekey_homes`` (+ ``domains``) re-keys the domain layout during
+        the same generational rewrite: each live segment is copied into
+        the shard of its block's *current* home host, so after long
+        elastic degradation the on-disk locality matches the placement
+        engine's view again — the move rides the rewrite the compaction
+        was paying for anyway. Subsequent writes land on the new homes.
+
         Crash-safe ordering: the live segments are copied into the *next
-        generation's* file, the manifest (new offsets + generation) is
-        published atomically, and only then are older generation files
-        unlinked — stale offsets never point into a rewritten file; a
-        crash before the unlink merely leaves an orphan generation that
-        the next compaction sweeps up."""
+        generation's* files, the manifest (new offsets + generation +
+        re-keyed ``host_of_block``) is published atomically, and only
+        then are older generation files unlinked — stale offsets never
+        point into a rewritten file; a crash before the unlink merely
+        leaves an orphan generation that the next compaction sweeps up."""
         assert self.partition is not None
         self.flush()
         with open(self._manifest_path()) as f:
             manifest = json.load(f)
         segments = manifest["segments"]
+        # source paths are resolved under the OLD keying, targets under
+        # the new one — a re-key changes host_of_block between the two
+        src_path = {seg: self._shard_path(seg)
+                    for seg in range(len(segments))
+                    if segments[seg] is not None}
+        old_dirs = {self._shard_dir(seg) for seg in src_path}
+        if rekey_homes is not None:
+            assert domains is not None, "re-keying needs the domain map"
+            self.host_of_block = np.asarray(
+                domains.host_of(np.asarray(rekey_homes)), np.int32)
+            manifest["host_of_block"] = [int(h) for h in self.host_of_block]
+            for h in np.unique(self.host_of_block):
+                os.makedirs(os.path.join(self.root, f"host_{int(h):04d}"),
+                            exist_ok=True)
         by_dir: dict[str, list[int]] = {}
-        for gid in range(self.partition.total_blocks):
-            if segments[gid] is not None:
-                by_dir.setdefault(self._shard_dir(gid), []).append(gid)
-        reclaimed = 0
-        cleanup: list[tuple[str, str]] = []
-        for d, gids in by_dir.items():
-            old_path = os.path.join(d, _shard_name(self._gen.get(d, 0)))
-            if not os.path.exists(old_path):
-                continue
-            old_size = os.path.getsize(old_path)
+        for seg in src_path:
+            by_dir.setdefault(self._shard_dir(seg), []).append(seg)
+        old_sizes = {d: (os.path.getsize(os.path.join(
+            d, _shard_name(self._gen.get(d, 0)))) if os.path.exists(
+            os.path.join(d, _shard_name(self._gen.get(d, 0)))) else 0)
+            for d in old_dirs | set(by_dir)}
+        mmaps: dict[str, Optional[np.memmap]] = {}
+        new_size = 0
+        cleanup: list[str] = []
+        for d, segs in by_dir.items():
             new_gen = self._gen.get(d, 0) + 1
             new_path = os.path.join(d, _shard_name(new_gen))
-            mm = np.memmap(old_path, np.uint8, mode="r")
+            os.makedirs(d, exist_ok=True)   # source dir may have vanished
             with open(new_path, "wb") as f:
-                # preserve on-disk order so compaction is a single
-                # sequential read of the live bytes
-                for gid in sorted(gids, key=lambda g: segments[g][0]):
-                    off, n = segments[gid]
+                # preserve source order so compaction stays a sequential
+                # read of the live bytes per source shard
+                for seg in sorted(segs,
+                                  key=lambda s: (src_path[s],
+                                                 segments[s][0])):
+                    path = src_path[seg]
+                    if path not in mmaps:
+                        ok = os.path.exists(path) and os.path.getsize(path)
+                        mmaps[path] = (np.memmap(path, np.uint8, mode="r")
+                                       if ok else None)
+                    mm = mmaps[path]
+                    if mm is None:
+                        # source shard unreachable (crash orphan / dead
+                        # host): the segment's data is gone — drop it from
+                        # the index. Keeping the old offset would resolve
+                        # inside the NEW generation file after the bump
+                        # below and read another segment's bytes.
+                        segments[seg] = None
+                        continue
+                    off, n = segments[seg]
                     new_off = f.tell()
                     f.write(mm[off:off + n].tobytes())
-                    segments[gid] = [new_off, n]
+                    segments[seg] = [new_off, n]
                 f.flush()
                 os.fsync(f.fileno())
-            del mm
             self._gen[d] = new_gen
-            reclaimed += old_size - os.path.getsize(new_path)
-            cleanup.append((d, _shard_name(new_gen)))
+            new_size += os.path.getsize(new_path)
+            cleanup.append(d)
+        mmaps.clear()
         manifest["segments"] = segments
         manifest["shard_gen"] = {os.path.relpath(d, self.root): g
                                  for d, g in self._gen.items()}
         self._write_manifest(manifest)
-        for d, keep in cleanup:     # old gens (and crash orphans) die last
-            for name in os.listdir(d):
-                if _is_shard_name(name) and name != keep:
-                    os.unlink(os.path.join(d, name))
-        return int(reclaimed)
+        keep = {os.path.join(d, _shard_name(self._gen[d]))
+                for d in cleanup}
+        for d in set(cleanup) | old_dirs:   # old gens (and crash orphans)
+            if not os.path.isdir(d):        # vanished with its host
+                continue
+            for name in os.listdir(d):      # die last
+                p = os.path.join(d, name)
+                if _is_shard_name(name) and p not in keep:
+                    os.unlink(p)
+        return int(sum(old_sizes.values()) - new_size)
 
     def disk_nbytes(self) -> dict[str, int]:
         """On-disk footprint: shard bytes (the append log), the subset of
@@ -360,8 +517,23 @@ class ShardedCheckpointStore:
             segments = json.load(f)["segments"]
         br = self.partition.block_rows
         mmaps: dict[str, Optional[np.memmap]] = {}
+
+        def _payload(seg, dtype):
+            if segments[seg] is None:
+                return None
+            path = self._shard_path(seg)
+            if path not in mmaps:
+                ok = os.path.exists(path) and os.path.getsize(path) > 0
+                mmaps[path] = (np.memmap(path, np.uint8, mode="r")
+                               if ok else None)
+            mm = mmaps[path]
+            if mm is None:
+                return None
+            off, n = segments[seg]
+            return np.frombuffer(mm[off:off + n].tobytes(), dtype)
+
         out = []
-        for leaf_meta in self.partition.leaves:
+        for li, leaf_meta in enumerate(self.partition.leaves):
             rows = max(leaf_meta.rows, 1)
             width = max(leaf_meta.row_width, 1)
             dtype = np.dtype(leaf_meta.dtype)
@@ -370,20 +542,25 @@ class ShardedCheckpointStore:
                 gid = leaf_meta.offset + b
                 if block_mask is not None and not block_mask[gid]:
                     continue
-                if segments[gid] is None:
-                    continue
-                path = self._shard_path(gid)
-                if path not in mmaps:
-                    ok = os.path.exists(path) and os.path.getsize(path) > 0
-                    mmaps[path] = (np.memmap(path, np.uint8, mode="r")
-                                   if ok else None)
-                mm = mmaps[path]
-                if mm is None:
-                    continue
-                off, n = segments[gid]
-                blk = np.frombuffer(mm[off:off + n].tobytes(), dtype)
-                blk = blk.reshape(-1, width)
-                arr[b * br:b * br + blk.shape[0]] = blk
+                if self.arena_layout is not None:
+                    # arena segment: float32 payload keyed by arena-block
+                    # id — decode back to the leaf dtype, trimming the
+                    # padding the ragged tail block carries
+                    seg = int(self._leaf_first_seg[li]) + b
+                    blk = _payload(seg, np.float32)
+                    if blk is None:
+                        continue
+                    lo = b * br
+                    n_rows = min(br, rows - lo) if leaf_meta.n_blocks > 1 \
+                        else rows
+                    blk = blk[:n_rows * width].reshape(-1, width)
+                    arr[lo:lo + blk.shape[0]] = blk.astype(dtype)
+                else:
+                    blk = _payload(gid, dtype)
+                    if blk is None:
+                        continue
+                    blk = blk.reshape(-1, width)
+                    arr[b * br:b * br + blk.shape[0]] = blk
             out.append(arr.reshape(leaf_meta.shape))
         return jax.tree_util.tree_unflatten(self.partition.treedef, out)
 

@@ -1,0 +1,274 @@
+"""Flat parameter arena: one contiguous per-host buffer for all leaves.
+
+The fabric's hot loop (replica refresh + parity encode + PRIORITY scoring
++ in-place partial save) previously operated on a *forest* of leaves: one
+kernel dispatch per touched leaf, `(1, BE)` row tiles that waste TPU
+sublanes, and per-leaf eager dispatch overhead that dominates wall-clock
+at small scale (see ``BENCH_maintain.json``: the donation save moved 7.7×
+fewer bytes than the rewrite yet ran ~18× slower).
+
+The arena collapses the forest to a single contiguous ``float32`` buffer:
+
+  - every leaf is cast to float32 (value-exact for f32/bf16/f16 — the same
+    convention the parity frames already use) and laid out block-major:
+    leaf segments in flatten order, each block's payload zero-padded to a
+    multiple of ``ARENA_TILE`` = 8·128 words, so every block covers whole
+    ``(8, 128)`` sublane-aligned tiles of the 2D ``(rows, 128)`` retiling;
+  - the **block table** maps ``(leaf, block) → (offset, words, payload)``
+    — ``payload`` is the live words, the tail up to ``words`` is zero
+    padding (XOR-neutral for parity, diff-neutral for scores);
+  - colocated leaves (shared global block ids) get *separate* segments —
+    the table is keyed by arena-block id, so a partial save or disk
+    mirror of one gid moves every colocated payload for that gid;
+  - per-leaf arena column starts equal the (tile-aligned) parity
+    ``FrameLayout`` columns, so an XOR over arena tiles lands bit-exactly
+    in the codec's ``(n_groups, frame_elems)`` parity frames.
+
+Invariants (relied on by kernels, the store, and the property tests):
+
+  I1  ``offset`` and ``words`` of every table row are multiples of
+      ``ARENA_TILE``; ``total_words`` too.
+  I2  segments are disjoint and cover ``[0, total_words)`` exactly.
+  I3  ``unpack(pack(tree)) == tree`` bit-exactly for every supported
+      dtype (f32/bf16/f16), any shape (including scalars and ragged
+      tail blocks).
+  I4  pad words are 0.0f (bit pattern 0x00000000) after ``pack`` and are
+      *kept* zero by every arena mutation (scatter saves copy whole
+      segments, so pads are overwritten with source pads — also zero).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import (BlockPartition, expand_block_mask,
+                               leaf_block_view, leaf_frame_width)
+
+PyTree = Any
+
+ARENA_LANES = 128          # lane width of the 2D retiling
+ARENA_SUBLANES = 8         # f32 sublane tile height
+ARENA_TILE = ARENA_LANES * ARENA_SUBLANES   # words per (8, 128) tile
+
+# dtypes whose values survive a float32 round trip bit-exactly — the same
+# contract the parity frames have always assumed, now checked explicitly
+ARENA_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+
+def _align(n: int, a: int = ARENA_TILE) -> int:
+    return -(-max(int(n), 1) // a) * a
+
+
+def leaf_payload_words(leaf, block_rows: int) -> int:
+    """Live f32 words per block of this leaf — the parity frame payload
+    width (:func:`repro.core.blocks.leaf_frame_width`)."""
+    return leaf_frame_width(leaf, block_rows)
+
+
+def arena_compatible(partition: BlockPartition) -> bool:
+    """True when every leaf dtype round-trips float32 bit-exactly."""
+    names = {np.dtype(d).name for d in
+             ("float32", "bfloat16", "float16")}
+    return all(np.dtype(l.dtype).name in names for l in partition.leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaBlock:
+    """One block-table row: where block ``b`` of leaf ``li`` lives."""
+    leaf: int          # leaf index in flatten order
+    gid: int           # global block id (colocated leaves share gids)
+    offset: int        # word offset of the segment (ARENA_TILE aligned)
+    words: int         # aligned segment length (ARENA_TILE multiple)
+    payload: int       # live words; [payload, words) is zero padding
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaLayout:
+    """Static block table + tile routing for one partition.
+
+    ``ab_t0``/``ab_nt`` (first tile / tile count per arena block) and the
+    gid→arena-block CSR (``gid_ab``/``gid_ptr``) make the per-save
+    lookups O(selected) — the save hot path never scans the full table."""
+    partition: BlockPartition
+    blocks: tuple[ArenaBlock, ...]      # leaf-major, block-minor
+    leaf_offset: tuple[int, ...]        # word offset of each leaf's segment
+    seg_words: tuple[int, ...]          # aligned words per block, per leaf
+    payload_words: tuple[int, ...]      # live words per block, per leaf
+    total_words: int                    # ARENA_TILE multiple
+    ab_t0: np.ndarray                   # (n_ab,) first tile per arena block
+    ab_nt: np.ndarray                   # (n_ab,) tiles per arena block
+    gid_ab: np.ndarray                  # arena blocks sorted by gid (CSR)
+    gid_ptr: np.ndarray                 # (total_blocks + 1,) CSR pointers
+
+    @property
+    def n_tiles(self) -> int:
+        return self.total_words // ARENA_TILE
+
+    @property
+    def rows_2d(self) -> int:
+        return self.total_words // ARENA_LANES
+
+    @property
+    def nbytes(self) -> int:
+        return self.total_words * 4
+
+    # -- host-side routing (O(selected), not O(table)) -----------------------
+
+    def tile_gids(self) -> np.ndarray:
+        """(n_tiles,) global block id owning each (8, 128) tile."""
+        gids = np.asarray([ab.gid for ab in self.blocks], np.int32)
+        return np.repeat(gids, self.ab_nt)
+
+    def blocks_for_gids(self, global_ids) -> np.ndarray:
+        """Ascending arena-block indices covering the given gids — every
+        colocated leaf's segment rides along (they share gids)."""
+        gids = np.unique(np.asarray(global_ids, np.int64).ravel())
+        if gids.size == 0:
+            return np.empty((0,), np.int64)
+        parts = [self.gid_ab[self.gid_ptr[g]:self.gid_ptr[g + 1]]
+                 for g in gids]
+        return np.sort(np.concatenate(parts))
+
+    def tiles_for_blocks(self, global_ids) -> np.ndarray:
+        """Ascending (8-row-) tile indices covered by the given gids."""
+        abs_ = self.blocks_for_gids(global_ids)
+        if abs_.size == 0:
+            return np.empty((0,), np.int32)
+        t0, nt = self.ab_t0[abs_], self.ab_nt[abs_]
+        total = int(nt.sum())
+        starts = np.cumsum(nt) - nt
+        return (np.repeat(t0, nt)
+                + (np.arange(total) - np.repeat(starts, nt))).astype(np.int32)
+
+    def seg_bytes_for_blocks(self, global_ids) -> int:
+        """Aligned bytes a scatter of these gids actually moves."""
+        abs_ = self.blocks_for_gids(global_ids)
+        return 4 * ARENA_TILE * int(self.ab_nt[abs_].sum())
+
+
+def build_arena_layout(partition: BlockPartition) -> ArenaLayout:
+    blocks: list[ArenaBlock] = []
+    leaf_offset, seg_words, payload_words = [], [], []
+    off = 0
+    for li, leaf in enumerate(partition.leaves):
+        payload = leaf_payload_words(leaf, partition.block_rows)
+        seg = _align(payload)
+        leaf_offset.append(off)
+        seg_words.append(seg)
+        payload_words.append(payload)
+        for b in range(leaf.n_blocks):
+            blocks.append(ArenaBlock(leaf=li, gid=leaf.offset + b,
+                                     offset=off, words=seg,
+                                     payload=payload))
+            off += seg
+    ab_gid = np.asarray([ab.gid for ab in blocks], np.int64)
+    order = np.argsort(ab_gid, kind="stable")
+    gid_ptr = np.searchsorted(ab_gid[order],
+                              np.arange(partition.total_blocks + 1))
+    return ArenaLayout(partition=partition, blocks=tuple(blocks),
+                       leaf_offset=tuple(leaf_offset),
+                       seg_words=tuple(seg_words),
+                       payload_words=tuple(payload_words), total_words=off,
+                       ab_t0=np.asarray([ab.offset // ARENA_TILE
+                                         for ab in blocks], np.int64),
+                       ab_nt=np.asarray([ab.words // ARENA_TILE
+                                         for ab in blocks], np.int64),
+                       gid_ab=order, gid_ptr=gid_ptr)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack / restore (pure, jittable; layout is static)
+# ---------------------------------------------------------------------------
+
+def pack_arena(values: PyTree, layout: ArenaLayout) -> jnp.ndarray:
+    """Pack a tree into the flat (total_words,) float32 arena.
+
+    One read of every leaf, one write of the arena — this *is* the replica
+    refresh cost when the fabric snapshots into arena form."""
+    part = layout.partition
+    parts = []
+    for x, leaf, seg, payload in zip(jax.tree_util.tree_leaves(values),
+                                     part.leaves, layout.seg_words,
+                                     layout.payload_words):
+        view = leaf_block_view(x.astype(jnp.float32), part.block_rows)
+        if view.shape[1] < seg:
+            view = jnp.pad(view, ((0, 0), (0, seg - view.shape[1])))
+        parts.append(view.reshape(-1))
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def _decode_leaf(arena: jnp.ndarray, layout: ArenaLayout, li: int):
+    """Contiguous slice of leaf ``li``'s segment, decoded to leaf shape."""
+    leaf = layout.partition.leaves[li]
+    seg, payload = layout.seg_words[li], layout.payload_words[li]
+    off = layout.leaf_offset[li]
+    flat = jax.lax.dynamic_slice(arena, (off,), (leaf.n_blocks * seg,))
+    vals = flat.reshape(leaf.n_blocks, seg)[:, :payload]
+    rows = max(leaf.rows, 1)
+    vals = vals.reshape(-1, max(leaf.row_width, 1))[:rows]
+    return vals.reshape(leaf.shape).astype(leaf.dtype)
+
+
+def unpack_arena(arena: jnp.ndarray, layout: ArenaLayout) -> PyTree:
+    """Inverse of :func:`pack_arena`, bit-exact (invariant I3)."""
+    out = [_decode_leaf(arena, layout, li)
+           for li in range(len(layout.partition.leaves))]
+    return jax.tree_util.tree_unflatten(layout.partition.treedef, out)
+
+
+def arena_restore(dst: PyTree, arena: jnp.ndarray, global_mask,
+                  layout: ArenaLayout) -> PyTree:
+    """Overwrite the masked blocks of ``dst`` from the arena.
+
+    The arena-source counterpart of ``select_blocks`` /
+    ``tree_masked_restore``: each touched leaf decodes one contiguous
+    arena slice; untouched leaves pass through as the same buffer."""
+    part = layout.partition
+    mask = np.asarray(global_mask, bool)
+    out = []
+    for li, (x, leaf) in enumerate(zip(jax.tree_util.tree_leaves(dst),
+                                       part.leaves)):
+        seg = mask[leaf.offset:leaf.offset + leaf.n_blocks]
+        if not seg.any():
+            out.append(x)
+            continue
+        decoded = _decode_leaf(arena, layout, li).astype(x.dtype)
+        em = expand_block_mask(jnp.asarray(seg), leaf, part.block_rows)
+        out.append(jnp.where(em, decoded, x))
+    return jax.tree_util.tree_unflatten(part.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# parity frame bridge
+# ---------------------------------------------------------------------------
+
+def frames_gather_index(layout: ArenaLayout, frame_layout) -> np.ndarray:
+    """(total_blocks, frame_elems) arena word index per frame position
+    (-1 where the frame is zero padding) — ``frames_from_arena``'s map.
+
+    Valid because the arena's per-leaf columns match the (tile-aligned)
+    ``FrameLayout`` columns: frame row ``gid`` is the side-by-side concat
+    of every colocated leaf's segment for that gid."""
+    part = layout.partition
+    idx = np.full((part.total_blocks, frame_layout.frame_elems), -1,
+                  np.int64)
+    for ab in layout.blocks:
+        col = frame_layout.cols[ab.leaf]
+        idx[ab.gid, col:col + ab.payload] = np.arange(
+            ab.offset, ab.offset + ab.payload)
+    return idx
+
+
+def frames_from_arena(arena: jnp.ndarray, gather_idx: np.ndarray,
+                      ) -> jnp.ndarray:
+    """(total_blocks, frame_elems) int32 bit-pattern frames — bit-exact
+    vs ``pack_frames`` of the unpacked tree (one gather, no per-leaf
+    pass)."""
+    idx = jnp.asarray(np.where(gather_idx >= 0, gather_idx, 0))
+    vals = jnp.where(jnp.asarray(gather_idx >= 0), arena[idx],
+                     jnp.float32(0.0))
+    return jax.lax.bitcast_convert_type(vals, jnp.int32)

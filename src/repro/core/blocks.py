@@ -120,6 +120,16 @@ def partition_pytree(params: PyTree, block_rows: int = 128,
 # Runtime (jittable) block ops
 # ---------------------------------------------------------------------------
 
+def leaf_frame_width(leaf: LeafMeta, block_rows: int) -> int:
+    """Payload elements per block of this leaf — the width of its
+    :func:`leaf_block_view` rows (single-block leaves are unpadded), and
+    therefore the per-block payload of both the parity frames and the
+    flat parameter arena (which zero-pad it to their own alignments)."""
+    if leaf.n_blocks == 1:
+        return max(leaf.rows, 1) * max(leaf.row_width, 1)
+    return block_rows * leaf.row_width
+
+
 def leaf_block_view(x: jnp.ndarray, block_rows: int) -> jnp.ndarray:
     """Reshape a leaf to (n_blocks, elems_per_block), zero-padded.
 

@@ -10,11 +10,20 @@ saved at different iterations — exactly the paper's construction.
 current checkpoint it returns the new checkpoint plus the selected block
 mask — the ``jnp.where`` fold rewrites every leaf, so it moves O(model)
 bytes per save. It remains the reference semantics (and the
-``FTController(inplace_save=False)`` path); the controller's default save
-now runs ``select_save_mask`` for the mask and then scatters only the
-selected blocks into the donated checkpoint buffers
-(:func:`repro.kernels.fused_maintain.ops.tree_scatter_save`), moving
-O(k·block_bytes) — bit-equivalent, measured in ``bench_maintain``.
+``FTController(inplace_save=False)`` path). The controller has two
+faster, bit-equivalent save paths above it (both measured in
+``bench_maintain``):
+
+- **tree scatter** (no fabric): ``select_save_mask`` picks the mask, then
+  :func:`repro.kernels.fused_maintain.ops.tree_scatter_save` scatters
+  only the selected blocks into the donated checkpoint buffers —
+  O(k·block_bytes), one dispatch per touched leaf;
+- **arena scatter** (arena-capable fabric, the default): the checkpoint
+  values live as a flat parameter arena (:mod:`repro.core.arena`) and the
+  save is ONE donated tile scatter from the maintenance sweep's replica
+  arena — O(k·seg_bytes) and a single dispatch for the whole model, which
+  also wins on wall-clock where per-leaf dispatch overhead used to
+  dominate.
 
 Selection strategies:
 

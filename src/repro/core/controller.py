@@ -68,7 +68,17 @@ class FTController:
                                           colocate=colocate)
         self.norm_fn = get_norm(policy.norm, aux=norm_aux,
                                 block_rows=policy.block_rows)
-        self.ckpt = init_running_checkpoint(params, self.partition)
+        # flat-arena checkpoint state (set up after the fabric below):
+        # when active, _ckpt_arena is the canonical running-checkpoint
+        # value store and _ckpt.values may be stale (_ckpt_dirty) until
+        # the ckpt property re-materializes the tree on demand
+        self._arena_layout = None
+        self._ckpt_arena = None
+        self._ckpt_dirty = False
+        self._pack_jit = None
+        self._unpack_jit = None
+        self._arena_score_jit = None
+        self._ckpt = init_running_checkpoint(params, self.partition)
         self.store = store
         self._score_fn = score_fn  # optional kernel-backed scorer
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -101,15 +111,57 @@ class FTController:
         self._jit_select = jax.jit(partial(
             select_save_mask, policy=self.policy, partition=self.partition,
             norm_fn=self.norm_fn))
+        # arena checkpoint mode: the running checkpoint's values live as
+        # the fabric's flat parameter arena — every partial save is ONE
+        # donated tile scatter sourced from the maintenance sweep's
+        # replica arena. Requires an arena-capable fabric, the in-place
+        # save, and (for PRIORITY) squared-L2 scoring — custom scorers
+        # and norms keep the tree-path save.
+        if (inplace_save and self.fabric is not None
+                and getattr(self.fabric, "arena_layout", None) is not None
+                and score_fn is None
+                and (policy.strategy != SelectionStrategy.PRIORITY
+                     or policy.norm == "l2")):
+            from repro.core.arena import pack_arena, unpack_arena
+            layout = self.fabric.arena_layout
+            self._arena_layout = layout
+            self._pack_jit = jax.jit(lambda t: pack_arena(t, layout))
+            self._unpack_jit = jax.jit(lambda a: unpack_arena(a, layout))
+            self._ckpt_arena = self._pack_jit(params)
         if store is not None:
+            kw = {}
             if self.fabric is not None:
                 # domain-keyed disk layout: DISK-tier reads after a domain
                 # loss touch only the needed blocks' files
-                store.init(params, self.partition,
-                           homes=self.fabric.view.homes,
-                           domains=self.fabric.domains)
-            else:
-                store.init(params, self.partition)
+                kw = dict(homes=self.fabric.view.homes,
+                          domains=self.fabric.domains)
+            if self._arena_layout is not None:
+                # arena-segment store layout: one append write per host
+                # per save, sourced straight from the checkpoint arena
+                kw["arena_layout"] = self._arena_layout
+                kw["arena_values"] = np.asarray(self._ckpt_arena)
+            store.init(params, self.partition, **kw)
+
+    # -- running checkpoint (arena-backed when the fabric has an arena) ------
+
+    @property
+    def ckpt(self) -> RunningCheckpoint:
+        """The running checkpoint. In arena mode the canonical values are
+        ``_ckpt_arena``; the tree form is re-materialized here on demand
+        (recovery/analysis paths — never the per-save hot path)."""
+        if self._ckpt_dirty:
+            values = self._unpack_jit(self._ckpt_arena)
+            self._ckpt = RunningCheckpoint(values, self._ckpt.saved_iter,
+                                           self._ckpt.rr_cursor)
+            self._ckpt_dirty = False
+        return self._ckpt
+
+    @ckpt.setter
+    def ckpt(self, new: RunningCheckpoint) -> None:
+        self._ckpt = new
+        self._ckpt_dirty = False
+        if self._arena_layout is not None:
+            self._ckpt_arena = self._pack_jit(new.values)
 
     # -- checkpoint path ----------------------------------------------------
 
@@ -128,7 +180,13 @@ class FTController:
     def checkpoint_now(self, step: int, params: PyTree) -> jnp.ndarray:
         """Update the running checkpoint; returns the saved block mask."""
         t0 = time.perf_counter()
-        if self.policy.fraction >= 1.0 and \
+        arena_hot = (self._arena_layout is not None
+                     and not (self.policy.fraction >= 1.0 and
+                              self.policy.strategy
+                              != SelectionStrategy.PRIORITY))
+        if arena_hot:
+            mask = self._arena_checkpoint(step, params)
+        elif self.policy.fraction >= 1.0 and \
                 self.policy.strategy != SelectionStrategy.PRIORITY:
             self.ckpt = full_save(self.ckpt, params, jnp.int32(step))
             mask = jnp.ones((self.partition.total_blocks,), bool)
@@ -164,15 +222,29 @@ class FTController:
             # the save invalidated the drift the cached scores measured
             self.fabric.invalidate_scores()
         # block until the in-memory cache is consistent (paper: training may
-        # resume now), then mirror to disk
-        jax.block_until_ready(self.ckpt.values)
+        # resume now), then mirror to disk. In arena mode the arena IS the
+        # cache — the tree form stays lazily dirty (never materialized on
+        # the hot path).
+        jax.block_until_ready(self._ckpt_arena if self._arena_layout
+                              is not None else self.ckpt.values)
         self.stats["saves"] += 1
         self.stats["blocks_saved"] += int(jnp.sum(mask))
         self.stats["save_seconds"] += time.perf_counter() - t0
         if self.store is not None:
-            self.stats["bytes_mirrored"] += self.store.write_blocks(
-                mask, self.ckpt.values, step,
-                background=self.policy.async_persist)
+            if self._arena_layout is not None:
+                mask_np = np.asarray(mask)
+                tiles = self._arena_layout.tiles_for_blocks(
+                    np.nonzero(mask_np)[0])
+                from repro.core.arena import ARENA_TILE
+                data = np.asarray(
+                    self._ckpt_arena.reshape(-1, ARENA_TILE)[tiles])
+                self.stats["bytes_mirrored"] += self.store.write_arena(
+                    mask_np, tiles, data, step,
+                    background=self.policy.async_persist)
+            else:
+                self.stats["bytes_mirrored"] += self.store.write_blocks(
+                    mask, self.ckpt.values, step,
+                    background=self.policy.async_persist)
         if self.fabric is not None:
             if not self.fabric.is_fresh(int(step)):
                 # keep the redundancy tiers at least as fresh as the
@@ -192,6 +264,72 @@ class FTController:
                     members=self.fabric.parity.members)
         return mask
 
+    def _arena_checkpoint(self, step: int, params: PyTree) -> jnp.ndarray:
+        """Partial save in arena mode: select blocks, then ONE donated
+        tile scatter into the checkpoint arena, sourced from the
+        maintenance sweep's replica arena (this step's live snapshot —
+        zero extra reads of the live tree) or, off-schedule, a fresh
+        pack. O(k·seg_bytes) moved, a single dispatch either way."""
+        from repro.kernels.fused_maintain.ops import arena_scatter_save
+        pol = self.policy
+        total = self.partition.total_blocks
+        k = self.partition.blocks_for_k(pol.fraction)
+        ck = self._ckpt
+        cursor = ck.rr_cursor
+        self._rng, sub = jax.random.split(self._rng)
+        if pol.strategy == SelectionStrategy.PRIORITY:
+            if (self.fabric.last_scores_step == int(step)
+                    and self.fabric.last_scores is not None):
+                scores = self.fabric.last_scores
+            else:
+                scores = self._arena_scores(params)
+            _, idx = jax.lax.top_k(scores, k)
+            idx = np.asarray(idx)
+        elif pol.strategy == SelectionStrategy.ROUND_ROBIN:
+            c = int(ck.rr_cursor)
+            idx = (c + np.arange(k)) % total
+            cursor = jnp.int32((c + k) % total)
+        elif pol.strategy == SelectionStrategy.RANDOM:
+            idx = np.asarray(jax.random.choice(sub, total, (k,),
+                                               replace=False))
+        else:
+            raise ValueError(f"unknown strategy {pol.strategy}")
+        mask = np.zeros((total,), bool)
+        mask[idx] = True
+        rep = self.fabric.replicas
+        if rep is not None and rep.arena is not None \
+                and rep.is_fresh(int(step)):
+            src = rep.arena
+        else:
+            src = self._pack_jit(params)
+        self._ckpt_arena, moved = arena_scatter_save(
+            self._ckpt_arena, src, self._arena_layout, idx,
+            use_pallas=self.fabric.cfg.use_pallas)
+        new_saved = jnp.where(jnp.asarray(mask), jnp.int32(step),
+                              ck.saved_iter)
+        self._ckpt = RunningCheckpoint(ck.values, new_saved, cursor)
+        self._ckpt_dirty = True
+        self.stats["save_bytes_moved"] += moved
+        return jnp.asarray(mask)
+
+    def _arena_scores(self, params: PyTree) -> jnp.ndarray:
+        """Squared-L2 drift per block, computed arena-native (pack live +
+        tile diff + segment-sum) — the PRIORITY fallback when this step's
+        maintenance sweep didn't already cache the scores."""
+        if self._arena_score_jit is None:
+            from repro.core.arena import ARENA_TILE, pack_arena
+            layout = self._arena_layout
+            tile_gid = jnp.asarray(layout.tile_gids())
+            total = self.partition.total_blocks
+
+            def _scores(p, z):
+                rep = pack_arena(p, layout)
+                d = rep.reshape(-1, ARENA_TILE) - z.reshape(-1, ARENA_TILE)
+                return jax.ops.segment_sum(jnp.sum(d * d, axis=1),
+                                           tile_gid, num_segments=total)
+            self._arena_score_jit = jax.jit(_scores)
+        return self._arena_score_jit(params, self._ckpt_arena)
+
     def maintain(self, step: int, params: PyTree) -> None:
         """Per-iteration fabric upkeep (replica refresh / parity re-encode
         on their configured intervals). No-op without a fabric.
@@ -207,9 +345,15 @@ class FTController:
                        and self.policy.norm == "l2"
                        and self._score_fn is None
                        and self.should_checkpoint(int(step)))
-        self.fabric.maintain(
-            int(step), params,
-            ckpt_values=self.ckpt.values if want_scores else None)
+        if not want_scores:
+            ckpt_values = None
+        elif self._arena_layout is not None:
+            # arena mode: the checkpoint arena feeds the sweep directly —
+            # no tree materialization on the hot path
+            ckpt_values = self._ckpt_arena
+        else:
+            ckpt_values = self.ckpt.values
+        self.fabric.maintain(int(step), params, ckpt_values=ckpt_values)
 
     # -- recovery path ------------------------------------------------------
 

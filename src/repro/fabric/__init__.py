@@ -13,6 +13,7 @@ the engine re-homes blocks, re-seeds replicas, and re-stripes parity across
 the survivors so training continues degraded at full redundancy. See
 DESIGN.md.
 """
+from repro.fabric.availability import summarize_availability
 from repro.fabric.domains import FailureDomainMap, FailureEvent
 from repro.fabric.fabric import CheckpointFabric, FabricConfig
 from repro.fabric.parity import ParityCodec
@@ -26,4 +27,4 @@ __all__ = ["FailureDomainMap", "FailureEvent", "CheckpointFabric",
            "FabricConfig", "ParityCodec", "ReplicaSet", "RecoveryTier",
            "TieredRecovery", "TierPlan", "ClusterView",
            "anti_affine_replica_homes", "rebalance_homes", "rehome_blocks",
-           "stripe_parity_groups"]
+           "stripe_parity_groups", "summarize_availability"]

@@ -30,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blocks import BlockPartition
@@ -55,6 +57,7 @@ class FabricConfig:
     parity_interval: int = 1       # steps between parity re-encodes
     elastic: bool = False          # post-failure re-homing/re-seeding
     fused: bool = True             # single-sweep maintenance pipeline
+    arena: bool = True             # flat-arena single-dispatch maintenance
     use_pallas: Optional[bool] = None   # None = auto: Pallas on TPU only
 
     def __post_init__(self):
@@ -87,16 +90,32 @@ class CheckpointFabric:
                                       replicas=self.replicas,
                                       parity=self.parity)
         self.last_maintained_step = -1
-        # fused maintenance program: (re)built lazily against the view's
-        # current striping (see _fused_maintain_fn)
+        # fused maintenance programs: (re)built lazily against the view's
+        # current striping (see _fused_maintain_fn / _arena_maintain_fn)
         self._fused_fn = None
         self._fused_version = -1
+        self._arena_fn = None
+        self._arena_version = -1
+        self._pack_fn = None
         self._traffic = None
         self.last_scores = None
         self.last_scores_step = -1
+        # flat parameter arena: the canonical hot-path representation —
+        # requires the single-sweep pipeline (``fused=False`` is the seed
+        # baseline), both tiers (the sweep's pack is the replica write,
+        # its XOR routing needs the parity striping), and
+        # f32-round-trippable leaf dtypes; otherwise fall back to the
+        # per-leaf fused path
+        self.arena_layout = None
+        if self.cfg.arena and self.cfg.fused and self.replicas is not None \
+                and self.parity is not None:
+            from repro.core.arena import arena_compatible, build_arena_layout
+            if arena_compatible(partition):
+                self.arena_layout = build_arena_layout(partition)
         self.stats = {"replica_refreshes": 0, "parity_encodes": 0,
                       "recoveries": 0, "rehomes": 0, "heals": 0,
-                      "fused_maintains": 0, "maintain_bytes_moved": 0}
+                      "fused_maintains": 0, "arena_maintains": 0,
+                      "maintain_bytes_moved": 0}
 
     @property
     def homes(self) -> np.ndarray:
@@ -127,7 +146,9 @@ class CheckpointFabric:
         due_parity = self.parity is not None and (
             force or step % self.cfg.parity_interval == 0
             or self.parity.parity is None)
-        if self.cfg.fused and due_replica and due_parity:
+        if self.arena_layout is not None and due_replica and due_parity:
+            self._arena_maintain(step, params, ckpt_values)
+        elif self.cfg.fused and due_replica and due_parity:
             self._fused_maintain(step, params, ckpt_values)
         else:
             t = self._traffic_model()
@@ -158,6 +179,56 @@ class CheckpointFabric:
         self.stats["parity_encodes"] += 1
         self.stats["fused_maintains"] += 1
         self.stats["maintain_bytes_moved"] += self._traffic_model()["fused"]
+
+    def _arena_maintain(self, step: int, params: PyTree,
+                        ckpt_values) -> None:
+        """One pack + ONE kernel dispatch for the whole model: the pack
+        is the replica write (arena form), the sweep emits group-sorted
+        XOR parity and PRIORITY score partials. ``ckpt_values`` may be
+        the running checkpoint as an arena (the controller's canonical
+        form — zero conversion), a PyTree (packed once), or None (no
+        scoring this step)."""
+        fn = self._arena_maintain_fn()
+        z = self._as_arena(ckpt_values)
+        rep, scores, parity = fn(params, z)
+        self.replicas.ingest_arena(step, rep, self.arena_layout)
+        self.parity.ingest(step, parity)
+        if z is not None:
+            self.last_scores = scores
+            self.last_scores_step = step
+        self.stats["replica_refreshes"] += 1
+        self.stats["parity_encodes"] += 1
+        self.stats["fused_maintains"] += 1
+        self.stats["arena_maintains"] += 1
+        self.stats["maintain_bytes_moved"] += self._traffic_model()["arena"]
+
+    def _as_arena(self, ckpt_values):
+        """Coerce checkpoint values to arena form (None passes through)."""
+        if ckpt_values is None:
+            return None
+        if isinstance(ckpt_values, (jnp.ndarray, np.ndarray)) \
+                and getattr(ckpt_values, "ndim", None) == 1:
+            assert ckpt_values.size == self.arena_layout.total_words, \
+                "checkpoint arena does not match this fabric's layout"
+            return ckpt_values
+        if self._pack_fn is None:
+            from repro.core.arena import pack_arena
+            self._pack_fn = jax.jit(
+                lambda t: pack_arena(t, self.arena_layout))
+        return self._pack_fn(ckpt_values)
+
+    def _arena_maintain_fn(self):
+        """The arena sweep program, rebuilt whenever the placement engine
+        re-striped since the last build."""
+        if self._arena_fn is None or self._arena_version != self.view.version:
+            from repro.kernels.fused_maintain.ops import ArenaMaintainProgram
+            self._arena_fn = ArenaMaintainProgram(
+                self.partition, self.arena_layout, self.parity.layout,
+                self.parity.group_of, self.parity.n_groups,
+                use_pallas=self.cfg.use_pallas)
+            self._arena_version = self.view.version
+            self._traffic = None
+        return self._arena_fn
 
     def _fused_maintain_fn(self):
         """The jitted single-sweep program, rebuilt whenever the placement
@@ -201,7 +272,8 @@ class CheckpointFabric:
                 from repro.kernels.fused_maintain.ops import maintain_traffic
                 t = dict(maintain_traffic(
                     self.partition, self.parity.layout, self.parity.group_of,
-                    self.parity.n_groups, self.parity.members.shape[1]))
+                    self.parity.n_groups, self.parity.members.shape[1],
+                    arena_layout=self.arena_layout))
                 # per-component splits for off-interval steps: the scoring
                 # pass (2·model) only happens at PRIORITY checkpoint time
                 # on the seed path, so it is excluded from both
@@ -213,6 +285,37 @@ class CheckpointFabric:
             t["replica_pass"] = 2 * t["model"]
             self._traffic = t
         return self._traffic
+
+    def redundancy_state(self) -> dict:
+        """Cheap per-step health snapshot of the redundancy tiers under
+        the view's *current* placement (pure metadata — no tensor data is
+        touched, safe to call every step of a soak):
+
+        - ``replica_alive_frac`` — fraction of replicas homed on alive
+          devices;
+        - ``parity_groups_ok_frac`` — fraction of parity groups whose
+          parity home and every member's primary home are alive (the
+          precondition for a free single-erasure reconstruction of the
+          next failure);
+        - ``full`` — every configured tier fully placed on live hardware,
+          i.e. the next domain loss is guaranteed to recover from the
+          live-value tiers.
+        """
+        rep_frac = par_frac = 1.0
+        if self.replicas is not None:
+            rep_frac = float(np.mean(
+                self.view.alive[self.replicas.replica_homes]))
+        if self.parity is not None:
+            members = self.parity.members
+            valid = members >= 0
+            homes_ok = np.where(
+                valid, self.view.alive[self.view.homes[
+                    np.where(valid, members, 0)]], True).all(axis=1)
+            ok = self.view.alive[self.parity.parity_homes] & homes_ok
+            par_frac = float(np.mean(ok)) if ok.size else 1.0
+        return {"replica_alive_frac": rep_frac,
+                "parity_groups_ok_frac": par_frac,
+                "full": bool(rep_frac >= 1.0 and par_frac >= 1.0)}
 
     def redundancy_nbytes(self, store: Optional[Any] = None) -> dict[str, int]:
         """Real memory/disk footprint of the redundancy machinery: replica
@@ -226,11 +329,16 @@ class CheckpointFabric:
             # maintain actually takes the fused branch — mismatched tier
             # intervals route off-interval steps through the seed encode,
             # whose frames+gather footprint is the real peak
-            all_fused = (self.cfg.fused and self.cfg.replicate
+            all_fused = ((self.cfg.fused or self.arena_layout is not None)
+                         and self.cfg.replicate
                          and self.cfg.replicate_interval
                          == self.cfg.parity_interval)
-            staging = (self._traffic_model()["staging_fused"] if all_fused
-                       else self.parity.staging_nbytes())
+            if not all_fused:
+                staging = self.parity.staging_nbytes()
+            elif self.arena_layout is not None:
+                staging = self._traffic_model()["staging_arena"]
+            else:
+                staging = self._traffic_model()["staging_fused"]
         out = {
             "replica": self.replicas.nbytes() if self.replicas else 0,
             "parity": self.parity.nbytes() if self.parity else 0,
@@ -311,14 +419,22 @@ class CheckpointFabric:
         replicas, re-stripe parity — all against the recovered params, so
         every tier is fresh on the new placement."""
         displaced = rehome_blocks(self.view)
-        if self.replicas is not None:
+        if self.arena_layout is not None:
+            # arena mode: re-seed + re-stripe, then one arena sweep
+            # refreshes both tiers against the new striping (the program
+            # rebuild rides the view-version check)
             self.replicas.reseed()
-            self.replicas.refresh(step, params)
-            self.stats["replica_refreshes"] += 1
-        if self.parity is not None:
             self.parity.restripe()
-            self.parity.encode(step, params)
-            self.stats["parity_encodes"] += 1
+            self._arena_maintain(step, params, None)
+        else:
+            if self.replicas is not None:
+                self.replicas.reseed()
+                self.replicas.refresh(step, params)
+                self.stats["replica_refreshes"] += 1
+            if self.parity is not None:
+                self.parity.restripe()
+                self.parity.encode(step, params)
+                self.stats["parity_encodes"] += 1
         self.planner.rehome()
         self.last_maintained_step = step
         self.stats["rehomes"] += 1
@@ -347,14 +463,19 @@ class CheckpointFabric:
             return info
         at = int(step) if step is not None else self.last_maintained_step
         moved = rebalance_homes(self.view)
-        if self.replicas is not None:
+        if self.arena_layout is not None and params is not None:
             self.replicas.reseed()
-            if params is not None:
-                self.replicas.refresh(at, params)
-        if self.parity is not None:
             self.parity.restripe()
-            if params is not None:
-                self.parity.encode(at, params)
+            self._arena_maintain(at, params, None)
+        else:
+            if self.replicas is not None:
+                self.replicas.reseed()
+                if params is not None:
+                    self.replicas.refresh(at, params)
+            if self.parity is not None:
+                self.parity.restripe()
+                if params is not None:
+                    self.parity.encode(at, params)
         self.planner.rehome()
         info["rebalanced_blocks"] = int(moved.size)
         info["alive_hosts"] = self.view.n_alive_hosts

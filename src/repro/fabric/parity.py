@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blocks import (BlockPartition, LeafMeta, expand_block_mask,
-                               leaf_block_view)
+                               leaf_block_view, leaf_frame_width)
 from repro.fabric.placement import (ClusterView, effective_parity_group,
                                     parity_group_homes, stripe_parity_groups)
 from repro.kernels.parity_xor.ops import parity_encode, parity_reconstruct
@@ -43,22 +43,26 @@ PyTree = Any
 # Block frames: fixed-width bit-pattern rows, one per global block id
 # ---------------------------------------------------------------------------
 
-def _leaf_frame_width(leaf: LeafMeta, block_rows: int) -> int:
-    # matches leaf_block_view: single-block leaves are unpadded
-    if leaf.n_blocks == 1:
-        return max(leaf.rows, 1) * leaf.row_width
-    return block_rows * leaf.row_width
+# canonical definition lives with the block partition (the arena shares
+# it); kept under the old name for in-package callers
+_leaf_frame_width = leaf_frame_width
 
 
 @dataclasses.dataclass(frozen=True)
 class FrameLayout:
-    """Column placement of each leaf's payload inside its blocks' frames."""
-    cols: tuple[int, ...]      # per-leaf start column
+    """Column placement of each leaf's payload inside its blocks' frames.
+
+    Column starts (and the total frame width) are aligned to the arena
+    tile (``repro.core.arena.ARENA_TILE`` words) so a group-sorted XOR
+    over ``(8, 128)`` arena tiles lands on whole-tile frame columns —
+    the padding columns are zero on every path (XOR-neutral)."""
+    cols: tuple[int, ...]      # per-leaf start column (tile-aligned)
     widths: tuple[int, ...]    # per-leaf payload width
-    frame_elems: int           # int32 words per frame
+    frame_elems: int           # int32 words per frame (tile-aligned)
 
 
 def frame_layout(partition: BlockPartition) -> FrameLayout:
+    from repro.core.arena import _align
     cols, widths = [], []
     used: dict[int, int] = {}  # block-id offset -> columns consumed so far
     for leaf in partition.leaves:
@@ -66,8 +70,9 @@ def frame_layout(partition: BlockPartition) -> FrameLayout:
         start = used.get(leaf.offset, 0)   # colocated leaves share offsets
         cols.append(start)
         widths.append(w)
-        used[leaf.offset] = start + w
-    return FrameLayout(tuple(cols), tuple(widths), max(used.values()))
+        used[leaf.offset] = start + _align(w)
+    return FrameLayout(tuple(cols), tuple(widths),
+                       _align(max(used.values())))
 
 
 def pack_frames(values: PyTree, partition: BlockPartition,
@@ -135,6 +140,11 @@ class ParityCodec:
         self.layout = frame_layout(partition)
         self.parity: Optional[jnp.ndarray] = None
         self.encoded_step = -1
+        # arena → frame gather index, built lazily per arena layout (the
+        # arena-path reconstruction sources member frames straight from
+        # the maintenance sweep's snapshot arena)
+        self._arena_gather: Optional[np.ndarray] = None
+        self._arena_gather_layout = None
         self._build()
 
     def _build(self) -> None:
@@ -241,8 +251,34 @@ class ParityCodec:
         ``values`` must hold live frames for every available member
         (survivors and fresh-replica-restored blocks).
         """
-        assert self.parity is not None
         frames = pack_frames(values, self.partition, self.layout)
+        return self._reconstruct_frames(frames, recover_mask,
+                                        available_mask)
+
+    def reconstruct_from_arena(self, arena: jnp.ndarray, arena_layout,
+                               recover_mask: np.ndarray,
+                               available_mask: np.ndarray) -> jnp.ndarray:
+        """Arena-path reconstruction: member frames come from the flat
+        snapshot arena via one gather (``frames_from_arena``) instead of
+        a full-tree ``pack_frames`` pass. Valid when the arena is the
+        encode-time snapshot — in arena maintenance mode the replica
+        arena and the parity are emitted by the same sweep, so the tier
+        planner checks ``refreshed_step == encoded_step`` and routes
+        here."""
+        from repro.core.arena import frames_from_arena, frames_gather_index
+        if self._arena_gather is None \
+                or self._arena_gather_layout is not arena_layout:
+            self._arena_gather = frames_gather_index(arena_layout,
+                                                     self.layout)
+            self._arena_gather_layout = arena_layout
+        frames = frames_from_arena(arena, self._arena_gather)
+        return self._reconstruct_frames(frames, recover_mask,
+                                        available_mask)
+
+    def _reconstruct_frames(self, frames: jnp.ndarray,
+                            recover_mask: np.ndarray,
+                            available_mask: np.ndarray) -> jnp.ndarray:
+        assert self.parity is not None
         grouped = frames[jnp.asarray(self._gather_ids)]
         survivors = self.valid & np.asarray(available_mask, bool)[
             self._gather_ids]

@@ -11,6 +11,12 @@ of the last refresh — refreshing is a device-to-device copy (no host trip,
 no disk), cheap enough to run every iteration, so a replica-recovered block
 is restored to its *live* value: zero perturbation in the Thm 4.1
 accounting (see DESIGN.md).
+
+The snapshot lives in one of two forms: a PyTree (the seed/per-leaf fused
+paths) or a flat **parameter arena** (:mod:`repro.core.arena`) ingested by
+the arena maintenance sweep — the canonical hot-path form. Recovery reads
+whichever is present; ``values`` materializes a tree from the arena on
+demand (recovery-path only, never the hot loop).
 """
 from __future__ import annotations
 
@@ -34,27 +40,55 @@ class ReplicaSet:
         self.view = view
         self.domains = view.domains
         self.replica_homes = anti_affine_replica_homes(view)
-        self.values: Optional[PyTree] = None
+        self._tree: Optional[PyTree] = None
+        self._arena: Optional[jnp.ndarray] = None
+        self.arena_layout = None
         self.refreshed_step = -1
 
     # -- maintenance ---------------------------------------------------------
 
     def refresh(self, step: int, params: PyTree) -> None:
         """Snapshot live params into the replicas (device copy)."""
-        self.values = jax.tree_util.tree_map(jnp.array, params)
+        self._tree = jax.tree_util.tree_map(jnp.array, params)
+        self._arena = None
         self.refreshed_step = int(step)
 
     def ingest(self, step: int, values: PyTree) -> None:
         """Adopt a snapshot already produced elsewhere (the fused
         maintenance sweep emits the replica copy in the same pass that
         encodes parity — no second read of the live params)."""
-        self.values = values
+        self._tree = values
+        self._arena = None
         self.refreshed_step = int(step)
+
+    def ingest_arena(self, step: int, arena: jnp.ndarray,
+                     arena_layout) -> None:
+        """Adopt an arena-form snapshot (the arena sweep's pack output —
+        the pack IS the replica write). The tree form is materialized
+        lazily and only on the recovery path."""
+        self._arena = arena
+        self.arena_layout = arena_layout
+        self._tree = None
+        self.refreshed_step = int(step)
+
+    @property
+    def arena(self) -> Optional[jnp.ndarray]:
+        """The arena-form snapshot, or None when tree-form (or empty)."""
+        return self._arena
+
+    @property
+    def values(self) -> Optional[PyTree]:
+        """Tree-form snapshot; decodes the arena on first access."""
+        if self._tree is None and self._arena is not None:
+            from repro.core.arena import unpack_arena
+            self._tree = unpack_arena(self._arena, self.arena_layout)
+        return self._tree
 
     def is_fresh(self, step: int) -> bool:
         """True when replicas hold the *current* live values (no parameter
         update has happened since the refresh)."""
-        return self.values is not None and self.refreshed_step == int(step)
+        return (self._tree is not None or self._arena is not None) \
+            and self.refreshed_step == int(step)
 
     def reseed(self) -> None:
         """Recompute replica placement in the view's current (possibly
@@ -67,14 +101,16 @@ class ReplicaSet:
     def surviving(self, failed_devices) -> np.ndarray:
         """(total_blocks,) bool — replicas whose home device is alive in the
         view and not among this event's failed devices."""
-        if self.values is None:
+        if self._tree is None and self._arena is None:
             return np.zeros((self.partition.total_blocks,), bool)
         failed = np.asarray(failed_devices, np.int32)
         return (self.view.alive[self.replica_homes]
                 & ~np.isin(self.replica_homes, failed))
 
     def nbytes(self) -> int:
-        if self.values is None:
+        if self._arena is not None:
+            return int(self._arena.nbytes)
+        if self._tree is None:
             return 0
         return sum(x.size * x.dtype.itemsize
-                   for x in jax.tree_util.tree_leaves(self.values))
+                   for x in jax.tree_util.tree_leaves(self._tree))

@@ -167,8 +167,17 @@ class TieredRecovery:
 
         m_rep = plan.mask(RecoveryTier.PEER_REPLICA)
         if m_rep.any():
-            out = select_blocks(out, self.replicas.values,
-                                np.asarray(m_rep), part)
+            if self.replicas.arena is not None:
+                # arena-form snapshot: each touched leaf decodes one
+                # contiguous arena slice — no full-tree materialization
+                from repro.kernels.masked_restore.ops import \
+                    arena_masked_restore
+                out = arena_masked_restore(out, self.replicas.arena,
+                                           np.asarray(m_rep),
+                                           self.replicas.arena_layout)
+            else:
+                out = select_blocks(out, self.replicas.values,
+                                    np.asarray(m_rep), part)
 
         m_par = plan.mask(RecoveryTier.PARITY)
         if m_par.any():
@@ -179,7 +188,18 @@ class TieredRecovery:
             home_alive = self.view.alive[self.view.homes]
             available = (plan.tiers < int(RecoveryTier.PARITY)) & (
                 home_alive | (plan.tiers == int(RecoveryTier.PEER_REPLICA)))
-            frames = self.parity.reconstruct(out, m_par, available)
+            if (self.replicas is not None
+                    and self.replicas.arena is not None
+                    and self.replicas.refreshed_step
+                    == self.parity.encoded_step):
+                # the sweep that encoded this parity also packed the
+                # snapshot arena, so the arena IS the encode-time frame
+                # source — one gather, no full-tree pack_frames pass
+                frames = self.parity.reconstruct_from_arena(
+                    self.replicas.arena, self.replicas.arena_layout,
+                    m_par, available)
+            else:
+                frames = self.parity.reconstruct(out, m_par, available)
             out = unpack_frames_into(out, frames, m_par, part,
                                      self.parity.layout)
 

@@ -122,6 +122,121 @@ def fused_maintain_pallas(x: jnp.ndarray, z: jnp.ndarray,
 # scatter_save: donation-based in-place partial checkpoint write
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# arena_maintain: parity XOR + priority scores over the flat arena,
+# ONE dispatch for the whole model (not one per leaf)
+# ---------------------------------------------------------------------------
+
+# (8, 128) f32 sublane tile of the 2D-retiled arena — the single source
+# of truth is the arena layout module; desyncing block shapes from the
+# block table would corrupt routing silently
+from repro.core.arena import ARENA_LANES, ARENA_SUBLANES  # noqa: E402
+
+
+def _arena_maintain_kernel(perm_ref, dest_ref, first_ref, x_ref, z_ref,
+                           sc_ref, par_ref):
+    s = pl.program_id(0)
+    x = x_ref[...]                               # (8, 128) f32 arena tile
+    d = x - z_ref[...]
+    sc_ref[0, 0] = jnp.sum(d * d)                # per-tile score partial
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+
+    @pl.when(first_ref[s] == 1)
+    def _init():                                 # first member tile: seed
+        par_ref[...] = bits
+
+    @pl.when(first_ref[s] == 0)
+    def _fold():                                 # later member tile: fold
+        par_ref[...] ^= bits
+
+
+def arena_maintain_pallas(x2d: jnp.ndarray, z2d: jnp.ndarray,
+                          perm: jnp.ndarray, dest: jnp.ndarray,
+                          first: jnp.ndarray, n_dest_tiles: int,
+                          interpret: bool = False,
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One maintenance sweep over the whole 2D-retiled arena.
+
+    x2d, z2d: ``(R, 128)`` float32 — live (replica) arena and running-
+    checkpoint arena, ``R`` a multiple of 8. The grid walks ``(8, 128)``
+    sublane-aligned tiles in an order sorted by parity destination:
+
+    perm:  (T,) int32 — arena tile visited at grid step ``s`` (all tiles
+           XOR-ing into one parity tile arrive consecutively).
+    dest:  (T,) int32 — compact parity output tile per sorted step.
+    first: (T,) int32 — 1 at the first step of its destination (seed vs
+           fold, exactly the per-leaf kernel's revisit accumulation).
+
+    Returns ``(sc (T, 1) f32 per-step score partials, par
+    (n_dest_tiles·8, 128) int32 compact parity tiles)``. The caller
+    segment-sums ``sc`` by block id and scatters ``par`` into the
+    ``(n_groups, frame_elems)`` codec layout (both O(output) epilogues —
+    the O(model) sweep is this single dispatch).
+    """
+    t = perm.shape[0]
+    br = ARENA_SUBLANES
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((br, ARENA_LANES), lambda s, p, d, f: (p[s], 0)),
+            pl.BlockSpec((br, ARENA_LANES), lambda s, p, d, f: (p[s], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda s, p, d, f: (s, 0)),
+            pl.BlockSpec((br, ARENA_LANES), lambda s, p, d, f: (d[s], 0)),
+        ],
+    )
+    sc, par = pl.pallas_call(
+        _arena_maintain_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_dest_tiles * br, ARENA_LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(perm, dest, first, x2d, z2d)
+    return sc, par
+
+
+# ---------------------------------------------------------------------------
+# arena_scatter: in-place partial save over the flat arena, ONE dispatch
+# ---------------------------------------------------------------------------
+
+def _arena_scatter_kernel(tiles_ref, src_ref, dst_ref, out_ref):
+    del tiles_ref, dst_ref                       # routing/alias only
+    out_ref[...] = src_ref[...]
+
+
+def arena_scatter_pallas(dst2d: jnp.ndarray, src2d: jnp.ndarray,
+                         tiles: jnp.ndarray,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Copy the selected ``(8, 128)`` tiles of ``src2d`` into ``dst2d``
+    in place (``dst2d`` donated/aliased — unselected tiles are never
+    DMA'd). ``tiles``: (k,) int32 tile indices, duplicates idempotent
+    (bucket padding). The whole-model partial save is this one dispatch —
+    the per-leaf ``scatter_save`` launched one program per touched leaf.
+    """
+    k = tiles.shape[0]
+    br = ARENA_SUBLANES
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((br, ARENA_LANES), lambda i, t: (t[i], 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),     # aliased, untouched
+        ],
+        out_specs=pl.BlockSpec((br, ARENA_LANES), lambda i, t: (t[i], 0)),
+    )
+    return pl.pallas_call(
+        _arena_scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst2d.shape, dst2d.dtype),
+        input_output_aliases={2: 0},             # dst (after scalars) -> out
+        interpret=interpret,
+    )(tiles, src2d, dst2d)
+
+
 def _scatter_save_kernel(rows_ref, src_ref, dst_ref, out_ref):
     del rows_ref, dst_ref                        # routing/alias only
     out_ref[...] = src_ref[...]

@@ -163,6 +163,211 @@ def make_fused_maintain_fn(partition: BlockPartition, layout: FrameLayout,
 
 
 # ---------------------------------------------------------------------------
+# Arena maintenance: ONE dispatch over the flat parameter arena
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArenaRouting:
+    """Host-side tile routing for the arena sweep (static per striping)."""
+    perm: np.ndarray          # (T,) arena tile visited at sorted step s
+    dest: np.ndarray          # (T,) compact parity tile per sorted step
+    first: np.ndarray         # (T,) 1 at the first step of its dest
+    touched: np.ndarray       # (n_dest,) full parity tile index, ascending
+    members: np.ndarray       # (n_dest, m_hat) arena tile ids, -1 padded
+    tile_gid: np.ndarray      # (T,) global block id per arena tile
+    frame_tiles: int          # parity frame width in arena tiles
+
+
+def arena_routing(arena_layout, frame_layout: FrameLayout,
+                  group_of: np.ndarray) -> ArenaRouting:
+    """Map every (8, 128) arena tile to its parity destination tile.
+
+    Tile ``k`` of block ``gid`` (leaf ``l``) lands in parity frame row
+    ``group_of[gid]`` at columns ``cols[l] + k·ARENA_TILE`` — whole tiles
+    because the frame layout is arena-tile aligned. Sorting tiles by
+    destination makes every parity output tile's contributors consecutive
+    grid steps (seed on ``first``, XOR-fold after), exactly the per-leaf
+    kernel's revisit accumulation but across the entire model at once."""
+    from repro.core.arena import ARENA_TILE
+    group_of = np.asarray(group_of, np.int32)
+    n_tiles = arena_layout.n_tiles
+    ftiles = frame_layout.frame_elems // ARENA_TILE
+    dest_full = np.empty((n_tiles,), np.int64)
+    tile_gid = np.empty((n_tiles,), np.int32)
+    for ab in arena_layout.blocks:
+        g = group_of[ab.gid]
+        assert g >= 0, f"arena block gid={ab.gid} outside any parity group"
+        t0 = ab.offset // ARENA_TILE
+        nt = ab.words // ARENA_TILE
+        col_t = frame_layout.cols[ab.leaf] // ARENA_TILE
+        dest_full[t0:t0 + nt] = g * ftiles + col_t + np.arange(nt)
+        tile_gid[t0:t0 + nt] = ab.gid
+    perm = np.argsort(dest_full, kind="stable").astype(np.int32)
+    dest_sorted = dest_full[perm]
+    touched, inverse = np.unique(dest_sorted, return_inverse=True)
+    dest = inverse.astype(np.int32)
+    first = np.ones_like(dest)
+    first[1:] = (dest[1:] != dest[:-1]).astype(np.int32)
+    m_hat = int(np.bincount(dest).max())
+    members = np.full((touched.size, m_hat), -1, np.int32)
+    fill = np.zeros((touched.size,), np.int64)
+    for pos, row in zip(perm, dest):
+        members[row, fill[row]] = pos
+        fill[row] += 1
+    return ArenaRouting(perm=perm, dest=dest, first=first,
+                       touched=touched.astype(np.int32), members=members,
+                       tile_gid=tile_gid, frame_tiles=int(ftiles))
+
+
+class ArenaMaintainProgram:
+    """The jitted single-sweep maintenance program over the flat arena.
+
+    ``program(params, ckpt_arena)`` packs the live tree into arena form
+    (the pack IS the replica refresh — one read of every leaf, one write
+    of the snapshot) and runs ONE kernel dispatch over the 2D-retiled
+    arena emitting the group-sorted XOR parity and per-tile PRIORITY
+    score partials; tiny O(output) epilogues fold partials into
+    per-block scores and scatter the compact parity tiles into the
+    codec's ``(n_groups, frame_elems)`` layout.
+
+    Returns ``(replica_arena, scores, parity)`` — parity bit-identical
+    to :meth:`ParityCodec.encode` under the same striping, scores
+    allclose to :func:`repro.core.blocks.block_scores` (different
+    association order). With ``ckpt_arena=None`` the sweep still
+    refreshes replica + parity; scores are zeros (nothing to diff)."""
+
+    def __init__(self, partition: BlockPartition, arena_layout,
+                 frame_layout: FrameLayout, group_of: np.ndarray,
+                 n_groups: int, use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
+        from repro.core.arena import ARENA_TILE, pack_arena
+        if use_pallas is None:
+            use_pallas = _is_tpu()
+        if interpret is None:
+            interpret = not _is_tpu()
+        self.layout = arena_layout
+        self.routing = arena_routing(arena_layout, frame_layout, group_of)
+        r = self.routing
+        total = partition.total_blocks
+        n_dest = int(r.touched.size)
+        full_tiles = n_groups * r.frame_tiles
+        frame_elems = frame_layout.frame_elems
+        perm = jnp.asarray(r.perm)
+        dest = jnp.asarray(r.dest)
+        first = jnp.asarray(r.first)
+        touched = jnp.asarray(r.touched)
+        members = jnp.asarray(np.where(r.members >= 0, r.members, 0))
+        valid = jnp.asarray(r.members >= 0)
+        gid_nat = jnp.asarray(r.tile_gid)
+        gid_sorted = jnp.asarray(r.tile_gid[r.perm])
+
+        def _sweep(rep, z_arena):
+            if use_pallas:
+                from repro.kernels.fused_maintain.kernel import \
+                    arena_maintain_pallas
+                sc, par = arena_maintain_pallas(
+                    rep.reshape(-1, 128), z_arena.reshape(-1, 128),
+                    perm, dest, first, n_dest, interpret=interpret)
+                partials, seg_ids = sc[:, 0], gid_sorted
+                par_c = par.reshape(n_dest, ARENA_TILE)
+            else:
+                xt = rep.reshape(-1, ARENA_TILE)
+                d = xt - z_arena.reshape(-1, ARENA_TILE)
+                partials, seg_ids = jnp.sum(d * d, axis=1), gid_nat
+                bits = jax.lax.bitcast_convert_type(xt, jnp.int32)
+                gathered = bits[members]          # (n_dest, m_hat, TILE)
+                par_c = jax.lax.reduce(
+                    jnp.where(valid[..., None], gathered, 0),
+                    jnp.int32(0), jax.lax.bitwise_xor, (1,))
+            scores = jax.ops.segment_sum(partials, seg_ids,
+                                         num_segments=total)
+            full = jnp.zeros((full_tiles, ARENA_TILE), jnp.int32)
+            parity = full.at[touched].set(par_c).reshape(n_groups,
+                                                         frame_elems)
+            return scores, parity
+
+        def _scored(params, z_arena):
+            rep = pack_arena(params, arena_layout)
+            scores, parity = _sweep(rep, z_arena)
+            return rep, scores, parity
+
+        def _unscored(params):
+            rep = pack_arena(params, arena_layout)
+            _, parity = _sweep(rep, rep)
+            return rep, jnp.zeros((total,), jnp.float32), parity
+
+        self._scored = jax.jit(_scored)
+        self._unscored = jax.jit(_unscored)
+
+    def __call__(self, params: PyTree,
+                 ckpt_arena: Optional[jnp.ndarray] = None):
+        if ckpt_arena is None:
+            return self._unscored(params)
+        return self._scored(params, ckpt_arena)
+
+
+# ---------------------------------------------------------------------------
+# Arena in-place partial save: ONE donated scatter for the whole model
+# ---------------------------------------------------------------------------
+
+_ARENA_SCATTER_CACHE: dict = {}
+
+
+def _arena_scatter_fn(total_words: int, k_hat: int, use_pallas: bool,
+                      interpret: bool):
+    from repro.core.arena import ARENA_TILE
+    key = (total_words, k_hat, use_pallas, interpret)
+    fn = _ARENA_SCATTER_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    def _scatter(dst, src, tiles):
+        if use_pallas:
+            from repro.kernels.fused_maintain.kernel import \
+                arena_scatter_pallas
+            out = arena_scatter_pallas(dst.reshape(-1, 128),
+                                       src.reshape(-1, 128), tiles,
+                                       interpret=interpret)
+        else:
+            d = dst.reshape(-1, ARENA_TILE)
+            out = d.at[tiles].set(src.reshape(-1, ARENA_TILE)[tiles])
+        return out.reshape(total_words)
+
+    fn = jax.jit(_scatter, donate_argnums=(0,))
+    _ARENA_SCATTER_CACHE[key] = fn
+    return fn
+
+
+def arena_scatter_save(dst_arena: jnp.ndarray, src_arena: jnp.ndarray,
+                       arena_layout, global_idx: np.ndarray,
+                       use_pallas: Optional[bool] = None,
+                       interpret: Optional[bool] = None,
+                       ) -> tuple[jnp.ndarray, int]:
+    """Overwrite the selected blocks' arena segments of ``dst_arena``
+    from ``src_arena`` in place — one donated dispatch total, O(k·seg)
+    bytes, vs ``tree_scatter_save``'s one dispatch per touched leaf.
+
+    ``global_idx``: host-resident selected global block ids (colocated
+    leaves' segments ride along — they share gids). Returns
+    ``(updated_arena, bytes_moved)``; ``dst_arena`` is donated."""
+    if use_pallas is None:
+        use_pallas = _is_tpu()
+    if interpret is None:
+        interpret = not _is_tpu()
+    tiles = arena_layout.tiles_for_blocks(global_idx)
+    if tiles.size == 0:
+        return dst_arena, 0
+    k_hat = _bucket(tiles.size, arena_layout.n_tiles)
+    padded = np.full((k_hat,), tiles[0], np.int32)
+    padded[:tiles.size] = tiles
+    fn = _arena_scatter_fn(int(arena_layout.total_words), k_hat,
+                           use_pallas, interpret)
+    out = fn(dst_arena, src_arena, jnp.asarray(padded))
+    from repro.core.arena import ARENA_TILE
+    return out, int(tiles.size) * ARENA_TILE * 4
+
+
+# ---------------------------------------------------------------------------
 # In-place partial save
 # ---------------------------------------------------------------------------
 
@@ -259,7 +464,7 @@ def _tree_nbytes(partition: BlockPartition) -> int:
 
 def maintain_traffic(partition: BlockPartition, layout: FrameLayout,
                      group_of: np.ndarray, n_groups: int,
-                     group_width: int) -> dict[str, int]:
+                     group_width: int, arena_layout=None) -> dict[str, int]:
     """Analytic HBM bytes moved by one full maintenance step (replica
     refresh + parity encode + priority scoring), seed path vs fused path.
 
@@ -289,6 +494,25 @@ def maintain_traffic(partition: BlockPartition, layout: FrameLayout,
         + contrib                # write compact parity contributions
         + 2 * contrib + parity   # combine: read contribs, rmw parity cols
     )
-    return {"seed": int(seed), "fused": int(fused), "model": int(model),
-            "parity": int(parity), "staging_seed": int(frames + gathered),
-            "staging_fused": int(contrib)}
+    out = {"seed": int(seed), "fused": int(fused), "model": int(model),
+           "parity": int(parity), "staging_seed": int(frames + gathered),
+           "staging_fused": int(contrib)}
+    if arena_layout is not None:
+        # arena path: the pack (read live + write the arena snapshot) IS
+        # the replica refresh; the single-dispatch sweep then reads the
+        # snapshot and the checkpoint arena once and writes compact
+        # parity tiles + per-tile score partials; a tiny epilogue
+        # scatters the compact tiles into the codec parity layout
+        from repro.core.arena import ARENA_TILE
+        a = arena_layout.nbytes
+        r = arena_routing(arena_layout, layout, group_of)
+        compact = int(r.touched.size) * ARENA_TILE * 4
+        partials = arena_layout.n_tiles * 4
+        out["arena_bytes"] = int(a)
+        out["staging_arena"] = int(compact + partials)
+        out["arena"] = int(
+            model + a                # pack: read live, write snapshot
+            + a + a                  # sweep: read snapshot + ckpt arena
+            + compact + partials     # sweep outputs
+            + compact + parity)      # epilogue: compact -> codec layout
+    return out

@@ -31,6 +31,18 @@ def masked_restore(dst: jnp.ndarray, src: jnp.ndarray, mask: jnp.ndarray,
     return masked_restore_pallas(dst, src, mask, interpret=interpret)
 
 
+def arena_masked_restore(dst: PyTree, src_arena: jnp.ndarray, global_mask,
+                         arena_layout) -> PyTree:
+    """Partial restore whose *source* is a flat parameter arena
+    (:mod:`repro.core.arena`) instead of a PyTree: each touched leaf
+    decodes one contiguous arena slice, untouched leaves pass through as
+    the same buffer. The arena-native sibling of
+    :func:`tree_masked_restore` — the tier planner uses it when the
+    replica snapshot is arena-form."""
+    from repro.core.arena import arena_restore
+    return arena_restore(dst, src_arena, global_mask, arena_layout)
+
+
 def tree_masked_restore(dst: PyTree, src: PyTree, global_mask: jnp.ndarray,
                         partition: BlockPartition,
                         interpret: bool | None = None) -> PyTree:

@@ -2,6 +2,12 @@
 
 Same backend-selection contract as masked_restore.ops: Pallas compiled on
 TPU, Pallas interpret elsewhere, with the jnp oracle as an opt-out.
+
+Role note: on the maintenance hot loop the per-group XOR encode is now
+folded into the flat-arena sweep (``kernels/fused_maintain`` — one
+dispatch for the whole model, bit-identical output), so these wrappers
+serve the recovery paths: re-encode after an elastic restripe/heal, and
+the single-erasure ``parity_reconstruct`` fold at recovery time.
 """
 from __future__ import annotations
 

@@ -194,6 +194,7 @@ def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
     heal_at: dict[int, list] = {}
     events_out: list[dict] = []
     losses = []
+    redundancy_full: list[bool] = []
     for i in range(1, max_iters + 1):
         p = model.step(p, key(i), i)
         ctl.maintain(i, p)
@@ -206,11 +207,17 @@ def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
                 heal_at.setdefault(i + heal_after, []).append(ev)
         for ev in heal_at.pop(i, []):
             ctl.heal_domain(ev.kind, ev.index, p, step=i)
+        # placement-health flag AFTER this step's events/heals — the
+        # availability report turns these into time-to-full-redundancy
+        redundancy_full.append(ctl.fabric.redundancy_state()["full"])
         losses.append(float(model.loss(p)))
     if clean_losses is None:
         clean_losses = run_clean(model, max_iters, seed)["losses"]
     cost = empirical_iteration_cost(losses, clean_losses, model.eps)
+    from repro.fabric.availability import summarize_availability
     return {"losses": losses, "iteration_cost": cost,
             "events": events_out, "controller_stats": ctl.stats,
+            "availability": summarize_availability(events_out,
+                                                   redundancy_full),
             "kappa_perturbed": iterations_to_eps(losses, model.eps),
             "kappa_clean": iterations_to_eps(clean_losses, model.eps)}

@@ -81,6 +81,7 @@ class TrainLoop:
         self._rng = np.random.default_rng(self.loop_cfg.seed)
         self.controller: Optional[FTController] = None
         self.metrics: list[dict] = []
+        self._redundancy_flags: list[bool] = []
 
         from repro.training.step import make_train_step
         self._train_step = jax.jit(
@@ -149,10 +150,25 @@ class TrainLoop:
                     new_params, info = self._inject(state)
                     state = TrainState(new_params, state.opt_state, state.step)
                     rec["failure"] = info
+                if self.controller.fabric is not None:
+                    # per-step placement health — availability_summary()
+                    # folds these into the soak goodput report
+                    full = self.controller.fabric.redundancy_state()["full"]
+                    rec["redundancy_full"] = full
+                    self._redundancy_flags.append(full)
             self.metrics.append(rec)
             if on_step is not None:
                 on_step(i, loss)
         return state
+
+    def availability_summary(self) -> dict:
+        """Aggregate this loop's soak accounting (per-event tier counts +
+        per-step redundancy flags) into the availability/goodput report —
+        see :func:`repro.fabric.availability.summarize_availability`."""
+        from repro.fabric.availability import summarize_availability
+        events = (self.controller.stats["events"]
+                  if self.controller is not None else [])
+        return summarize_availability(events, self._redundancy_flags)
 
     def _sample_trace(self, n_steps: int) -> dict[int, list]:
         """MTBF-driven soak schedule for one run(): loop-iteration → events.

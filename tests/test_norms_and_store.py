@@ -106,3 +106,45 @@ def test_store_packed_append_log_and_compaction():
             np.asarray(params["w"])[:8] * 4)
         iters = store.saved_iters()
         assert iters[w_leaf.offset] == 3
+
+
+def test_compact_drops_segments_of_missing_shards(tmp_path):
+    """A source shard that vanished (crash orphan / dead host) must have
+    its segments dropped from the index during compact() — keeping the
+    old offsets would resolve inside the bumped-generation file and read
+    another segment's bytes."""
+    import json
+    import os
+    import shutil
+
+    import jax.numpy as jnp
+
+    from repro.checkpoint_io import ShardedCheckpointStore
+    from repro.core.blocks import partition_pytree
+    from repro.fabric.domains import FailureDomainMap
+    from repro.sharding.partition import block_device_homes
+
+    params = {"w": jnp.arange(64, dtype=jnp.float32).reshape(16, 4)}
+    part = partition_pytree(params, 4)
+    dm = FailureDomainMap(n_devices=8, devices_per_host=2, hosts_per_rack=2)
+    homes = block_device_homes(part, 8)
+    store = ShardedCheckpointStore(str(tmp_path))
+    store.init(params, part, homes=homes, domains=dm)
+    lost_host = int(dm.host_of(homes[0]))
+    shutil.rmtree(os.path.join(str(tmp_path), f"host_{lost_host:04d}"))
+    store.compact()
+    with open(os.path.join(str(tmp_path), "MANIFEST.json")) as f:
+        segments = json.load(f)["segments"]
+    lost_gids = [g for g in range(part.total_blocks)
+                 if int(dm.host_of(homes[g])) == lost_host]
+    assert lost_gids
+    for g in lost_gids:
+        assert segments[g] is None          # dropped, not stale
+    vals = store.read_all()                 # lost blocks read back zero,
+    arr = np.asarray(jax.tree_util.tree_leaves(vals)[0])  # never garbage
+    for g in lost_gids:
+        assert not arr[g * 4:(g + 1) * 4].any()
+    survivors = [g for g in range(part.total_blocks) if g not in lost_gids]
+    for g in survivors:
+        np.testing.assert_array_equal(arr[g * 4:(g + 1) * 4],
+                                      np.asarray(params["w"])[g * 4:(g + 1) * 4])
