@@ -21,6 +21,14 @@ not the model):
                        partial save, live index bytes, compaction reclaim.
   maint_kernel       — interpret-mode bit-exactness of the fused_maintain
                        kernel vs its jnp oracles.
+  e2e_step_maintain  — full trainer pipeline (train step + maintain +
+                       partial save) on the reduced LM, PyTree-pack path
+                       vs arena-resident training state: accounted
+                       bytes/step of the fault-tolerance machinery (the
+                       resident path drops the per-step pack — exactly
+                       the live tree's bytes fewer), maintenance
+                       wall-clock, and bit-equality of the two paths'
+                       training losses.
 
 Bytes are the roofline currency here: on this CPU host the in-place save's
 per-leaf eager dispatch overhead exceeds the memcpy it saves at the
@@ -128,30 +136,37 @@ def _kernel_check_rows(quick: bool) -> list[str]:
 
 
 def _sweep_rows(params, quick: bool) -> tuple[list[str], dict]:
-    """Arena vs per-leaf-fused vs seed maintenance sweep: analytic bytes
-    + wall clock. The arena path is the default (one pack + ONE kernel
-    dispatch for the whole model); ``arena=False`` gives the per-leaf
-    fused path (one dispatch per leaf), ``fused=False`` the seed
-    three-pass path."""
+    """Arena-resident vs arena-pack vs per-leaf-fused vs seed maintenance
+    sweep: analytic bytes + wall clock. ``arena_resident`` feeds the
+    sweep the live flat arena itself (the trainer default — pack-free,
+    pure 2-read/1-write); ``arena`` packs a live tree first (one pack +
+    ONE kernel dispatch); ``arena=False`` gives the per-leaf fused path
+    (one dispatch per leaf), ``fused=False`` the seed three-pass path."""
     part = partition_pytree(params, 128)
     ck_values = _drift(params)
     reps = 2 if quick else 4
     out = {}
     rows = []
-    variants = (("arena", FabricConfig()),
+    variants = (("arena_resident", FabricConfig()),
+                ("arena", FabricConfig()),
                 ("fused", FabricConfig(arena=False)),
                 ("seed", FabricConfig(fused=False)))
     for name, cfg in variants:
         fab = CheckpointFabric(part, cfg)
         ck_arg = ck_values
-        if name == "arena":
+        live_arg = params
+        if name in ("arena", "arena_resident"):
             from repro.core.arena import pack_arena
-            ck_arg = jax.jit(lambda t: pack_arena(
-                t, fab.arena_layout))(ck_values)
-        fab.maintain(0, params, ckpt_values=ck_arg, force=True)  # compile
+            pack = jax.jit(lambda t: pack_arena(t, fab.arena_layout))
+            ck_arg = pack(ck_values)
+            if name == "arena_resident":
+                # arena-resident live state: the sweep's input IS the
+                # flat arena — no pack inside the maintain at all
+                live_arg = pack(params)
+        fab.maintain(0, live_arg, ckpt_values=ck_arg, force=True)  # compile
         t0 = time.perf_counter()
         for i in range(1, reps + 1):
-            fab.maintain(i, params, ckpt_values=ck_arg, force=True)
+            fab.maintain(i, live_arg, ckpt_values=ck_arg, force=True)
             if name == "seed":
                 # the seed path scores separately (the third full pass the
                 # fused sweep folds in)
@@ -160,9 +175,11 @@ def _sweep_rows(params, quick: bool) -> tuple[list[str], dict]:
         jax.block_until_ready(fab.parity.parity)
         wall_us = (time.perf_counter() - t0) / reps * 1e6
         t = fab._traffic_model()
-        bytes_step = {"arena": t.get("arena"), "fused": t["fused"],
+        bytes_step = {"arena_resident": t.get("arena_resident"),
+                      "arena": t.get("arena"), "fused": t["fused"],
                       "seed": t["seed"]}[name]
-        staging = {"arena": t.get("staging_arena"),
+        staging = {"arena_resident": t.get("staging_arena"),
+                   "arena": t.get("staging_arena"),
                    "fused": t["staging_fused"],
                    "seed": t["staging_seed"]}[name]
         out[name] = {"bytes": bytes_step, "us": wall_us, "staging": staging,
@@ -183,7 +200,9 @@ def _sweep_rows(params, quick: bool) -> tuple[list[str], dict]:
         f"meets_2x={bool(ratio >= 2.0)};"
         f"wall_ratio_seed_over_fused={wall_ratio:.2f};"
         f"arena_wall_vs_leaf_fused="
-        f"{out['fused']['us'] / max(out['arena']['us'], 1e-9):.2f}"))
+        f"{out['fused']['us'] / max(out['arena']['us'], 1e-9):.2f};"
+        f"resident_bytes_vs_pack="
+        f"{out['arena_resident']['bytes'] / max(out['arena']['bytes'], 1):.3f}"))
     return rows, out
 
 
@@ -364,6 +383,79 @@ def _arena_store_rows(params, quick: bool) -> list[str]:
         shutil.rmtree(store_dir, ignore_errors=True)
 
 
+def _e2e_rows(quick: bool) -> list[str]:
+    """Full step+maintain pipeline: PyTree-pack vs arena-resident state.
+
+    Bytes/step is the fault-tolerance machinery's accounted traffic
+    (fabric ``maintain_bytes_moved`` + controller ``save_bytes_moved``
+    per step) — the resident path must move strictly fewer bytes (the
+    pack is gone). Wall-clock: the maintenance overhead (maintain +
+    save, ``overhead_seconds``) robustly wins on the resident path; the
+    *total* step+maintain wall-clock also rides along but on this CPU
+    the arena step itself pays tile-padding overhead in the optimizer's
+    elementwise passes, so the total is recorded, never gated (bytes
+    are the roofline currency — see the module docstring)."""
+    from repro.data.pipeline import ShardedLMDataset
+    from repro.sharding import single_device_ctx
+    from repro.training import ArenaTrainState, TrainLoop, TrainLoopConfig
+
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    warm = 2 if quick else 3
+    steps = 5 if quick else 12
+    out = {}
+    rows = []
+    for name, arena_state in (("arena", True), ("pytree", False)):
+        ctx = single_device_ctx()
+        pol = CheckpointPolicy.scar(fraction=0.125, interval=4)
+        loop = TrainLoop(cfg, ctx, loop_cfg=TrainLoopConfig(
+            policy=pol, fabric=FabricConfig(), arena_state=arena_state))
+        state = loop.init_state()
+        assert isinstance(state, ArenaTrainState) == arena_state
+        ds = ShardedLMDataset(cfg, batch=2, seq=64, ctx=ctx)
+        it = iter(ds)
+        state = loop.run(state, it, warm)          # compile everything
+        ctl = loop.controller
+        b0 = (ctl.fabric.stats["maintain_bytes_moved"]
+              + ctl.stats["save_bytes_moved"])
+        t0 = time.perf_counter()
+        state = loop.run(state, it, steps)
+        total_us = (time.perf_counter() - t0) / steps * 1e6
+        bytes_step = (ctl.fabric.stats["maintain_bytes_moved"]
+                      + ctl.stats["save_bytes_moved"] - b0) / steps
+        ms = loop.metrics[warm:]
+        # medians: single OS-scheduler spikes otherwise dominate the
+        # handful of quick-mode steps and flip the recorded wall flags
+        overhead_us = float(np.median(
+            [m["overhead_seconds"] for m in ms])) * 1e6
+        step_us = float(np.median([m["seconds"] for m in ms])) * 1e6
+        out[name] = {"bytes": bytes_step, "total_us": total_us,
+                     "overhead_us": overhead_us,
+                     "losses": [m["loss"] for m in loop.metrics],
+                     "resident":
+                         ctl.fabric.stats["arena_resident_maintains"]}
+        rows.append(csv_row(
+            f"e2e_step_maintain_{name}", total_us,
+            f"bytes_per_step={bytes_step:.0f};"
+            f"overhead_us_per_step={overhead_us:.0f};"
+            f"step_us={step_us:.0f};steps={steps};"
+            f"resident_maintains={out[name]['resident']}"))
+    ratio = out["pytree"]["bytes"] / max(out["arena"]["bytes"], 1)
+    over_ratio = (out["pytree"]["overhead_us"]
+                  / max(out["arena"]["overhead_us"], 1e-9))
+    rows.append(csv_row(
+        "e2e_step_maintain_headline", 0.0,
+        f"bytes_ratio_pack_over_resident={ratio:.3f};"
+        f"arena_fewer_bytes="
+        f"{bool(out['arena']['bytes'] < out['pytree']['bytes'])};"
+        f"loss_bit_equal="
+        f"{bool(out['arena']['losses'] == out['pytree']['losses'])};"
+        f"overhead_wall_ratio_pack_over_resident={over_ratio:.2f};"
+        f"resident_overhead_faster={bool(over_ratio > 1.0)};"
+        f"total_wall_ratio_pack_over_resident="
+        f"{out['pytree']['total_us'] / max(out['arena']['total_us'], 1e-9):.2f}"))
+    return rows
+
+
 def run(trials: int = 4, quick: bool = False) -> list[str]:
     rows = _kernel_check_rows(quick)
     params = _reduced_params()
@@ -371,6 +463,7 @@ def run(trials: int = 4, quick: bool = False) -> list[str]:
     rows.extend(sweep_rows)
     rows.extend(_partial_save_rows(params, quick))
     rows.extend(_store_rows(params, quick))
+    rows.extend(_e2e_rows(quick))
     return rows
 
 

@@ -3,11 +3,15 @@
 Compares a fresh ``bench_maintain --quick`` JSON against the committed
 baseline (``BENCH_maintain.json`` at the repo root) and **fails** when the
 analytic bytes-per-step of any guarded row regresses by more than the
-allowed ratio (default 1.5×). Wall-clock ratios are *recorded* alongside
-(CI machines are too noisy to gate on, but the trajectory should be
-visible in the job log and artifact), and the headline invariants
-(bit-exactness, the ≥2× seed-over-fused floor, near-r byte budget, the
-wall-clock inversion of the in-place save) are asserted.
+allowed ratio (default 1.5×). Cross-row gates additionally pin the
+arena-resident paths at ≤1.0× the committed *pack-path* baselines — the
+per-step ``pack_arena`` the arena-resident training state eliminated must
+stay eliminated. Wall-clock ratios are *recorded* alongside (CI machines
+are too noisy to gate on, but the trajectory should be visible in the job
+log and artifact), and the headline invariants (bit-exactness, the ≥2×
+seed-over-fused floor, near-r byte budget, the e2e bit-equality of the
+arena-resident and PyTree training paths, the wall-clock inversion of the
+in-place save) are asserted.
 
 Standalone::
 
@@ -23,10 +27,23 @@ import sys
 
 # rows whose derived "bytes" field is the guarded per-step byte cost
 GUARDED_BYTES = {
+    "maint_sweep_arena_resident": "bytes_per_step",
     "maint_sweep_arena": "bytes_per_step",
     "maint_sweep_fused": "bytes_per_step",
     "maint_partial_save_inplace": "bytes_moved_per_save",
+    "e2e_step_maintain_arena": "bytes_per_step",
+    "e2e_step_maintain_pytree": "bytes_per_step",
 }
+# cross-row gates: (fresh row, key, BASELINE row, max ratio) — the fresh
+# arena-resident e2e bytes/step must stay at or below the committed
+# pytree-pack baseline (the pack must stay eliminated: the resident path
+# may never regress back to pack-path traffic)
+CROSS_GUARDS = [
+    ("e2e_step_maintain_arena", "bytes_per_step",
+     "e2e_step_maintain_pytree", 1.0),
+    ("maint_sweep_arena_resident", "bytes_per_step",
+     "maint_sweep_arena", 1.0),
+]
 # headline flags that must stay true on every run (exactness + analytic
 # byte floors only — deterministic on any machine)
 REQUIRED_FLAGS = [
@@ -40,11 +57,14 @@ REQUIRED_FLAGS = [
     ("maint_partial_save_headline", "near_r=True"),
     ("maint_store_packed", "compaction_exact=True"),
     ("maint_store_arena", "rekeyed_read_exact=True"),
+    ("e2e_step_maintain_headline", "arena_fewer_bytes=True"),
+    ("e2e_step_maintain_headline", "loss_bit_equal=True"),
 ]
 # wall-clock flags: recorded loudly, never gated (shared CI runners are
 # too noisy — the committed baseline documents the local inversion)
 RECORDED_FLAGS = [
     ("maint_partial_save_headline", "inplace_beats_rewrite_wallclock=True"),
+    ("e2e_step_maintain_headline", "resident_overhead_faster=True"),
 ]
 
 
@@ -87,6 +107,25 @@ def check(baseline_path: str, fresh_path: str,
         if ratio > max_ratio:
             failures.append(
                 f"{name}: {key} regressed {ratio:.2f}x (> {max_ratio}x)")
+    for name, key, base_name, limit in CROSS_GUARDS:
+        if base_name not in base:
+            print(f"[cross] {name}: baseline row {base_name} missing — "
+                  "skipped")
+            continue
+        if name not in fresh:
+            failures.append(f"{name}: missing from fresh run")
+            continue
+        b = _derived_num(base[base_name], key)
+        f = _derived_num(fresh[name], key)
+        ratio = f / max(b, 1.0)
+        status = "OK" if ratio <= limit else "REGRESSION"
+        print(f"[cross] {name}: {key} {f:.0f} vs baseline "
+              f"{base_name} {b:.0f} ({ratio:.3f}x, limit {limit}x) "
+              f"[{status}]")
+        if ratio > limit:
+            failures.append(
+                f"{name}: {key} {ratio:.3f}x of baseline {base_name} "
+                f"(> {limit}x — the eliminated pack came back)")
     for name, flag in REQUIRED_FLAGS:
         if name not in fresh:
             failures.append(f"{name}: row missing from fresh run")

@@ -86,13 +86,18 @@ class ArenaBlock:
     payload: int       # live words; [payload, words) is zero padding
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class ArenaLayout:
     """Static block table + tile routing for one partition.
 
     ``ab_t0``/``ab_nt`` (first tile / tile count per arena block) and the
     gid→arena-block CSR (``gid_ab``/``gid_ptr``) make the per-save
-    lookups O(selected) — the save hot path never scans the full table."""
+    lookups O(selected) — the save hot path never scans the full table.
+
+    ``eq=False``: identity comparison/hash, so a layout can ride as a
+    static (meta) field of a registered pytree (``ArenaTrainState``) —
+    the numpy tables would make the generated ``__eq__`` ill-defined, and
+    every consumer shares the one instance its fabric built anyway."""
     partition: BlockPartition
     blocks: tuple[ArenaBlock, ...]      # leaf-major, block-minor
     leaf_offset: tuple[int, ...]        # word offset of each leaf's segment
@@ -148,6 +153,24 @@ class ArenaLayout:
         """Aligned bytes a scatter of these gids actually moves."""
         abs_ = self.blocks_for_gids(global_ids)
         return 4 * ARENA_TILE * int(self.ab_nt[abs_].sum())
+
+
+def as_live_arena(x: Any, layout: Optional[ArenaLayout]):
+    """Return ``x`` when it is a live flat arena for ``layout``, else None.
+
+    The training stack's arena-native hot path passes the flat ``(N,)``
+    f32 buffer where tree-form params used to flow; consumers
+    (FTController, CheckpointFabric, ArenaMaintainProgram) use this one
+    predicate so the two forms share every entry point. A 1-D leaf tree
+    can only be mistaken for an arena if it is a single bare f32 array of
+    exactly ``total_words`` (a tile-aligned size no real model hits) —
+    and the arena path is only reachable with a fabric-built layout."""
+    if layout is None:
+        return None
+    if getattr(x, "ndim", None) == 1 and getattr(x, "size", 0) \
+            == layout.total_words and x.dtype == jnp.float32:
+        return x
+    return None
 
 
 def build_arena_layout(partition: BlockPartition) -> ArenaLayout:

@@ -20,10 +20,14 @@ faster, bit-equivalent save paths above it (both measured in
   O(k·block_bytes), one dispatch per touched leaf;
 - **arena scatter** (arena-capable fabric, the default): the checkpoint
   values live as a flat parameter arena (:mod:`repro.core.arena`) and the
-  save is ONE donated tile scatter from the maintenance sweep's replica
-  arena — O(k·seg_bytes) and a single dispatch for the whole model, which
-  also wins on wall-clock where per-leaf dispatch overhead used to
-  dominate.
+  save is ONE donated tile scatter — O(k·seg_bytes) and a single dispatch
+  for the whole model, which also wins on wall-clock where per-leaf
+  dispatch overhead used to dominate. With **arena-resident training
+  state** (the default trainer path) the scatter sources straight from
+  the live arena itself — the training state IS this step's values, so
+  there is no pack and no replica freshness gating; tree-stepping callers
+  source from the maintenance sweep's replica arena instead (same
+  values when fresh, else a one-off pack).
 
 Selection strategies:
 

@@ -78,6 +78,7 @@ class FTController:
         self._pack_jit = None
         self._unpack_jit = None
         self._arena_score_jit = None
+        self._arena_score_live_jit = None
         self._ckpt = init_running_checkpoint(params, self.partition)
         self.store = store
         self._score_fn = score_fn  # optional kernel-backed scorer
@@ -142,6 +143,60 @@ class FTController:
                 kw["arena_values"] = np.asarray(self._ckpt_arena)
             store.init(params, self.partition, **kw)
 
+    # -- arena-native live state --------------------------------------------
+
+    @property
+    def arena_layout(self):
+        """The flat-arena layout of the hot path (None = tree-only)."""
+        return self._arena_layout
+
+    @property
+    def arena_ready(self) -> bool:
+        """True when the hot path is arena-native — the training loops
+        may then feed :meth:`maintain`/:meth:`maybe_checkpoint` (and the
+        recovery entry points) the live flat arena instead of the tree,
+        eliminating the per-step ``pack_arena``."""
+        return self._arena_layout is not None
+
+    def pack_live(self, params: PyTree, account: bool = False) -> jnp.ndarray:
+        """Pack a live tree into arena form (jitted; used once at
+        training-state init and by tree-stepping runners that keep the
+        controller interface arena-native).
+
+        ``account=True`` books the pack's traffic (read the live tree,
+        write the arena) onto the fabric's maintenance byte counter —
+        tree-stepping runners pass it so their per-iteration pack is not
+        silently dropped from the accounting when the downstream sweep
+        runs at the pack-free resident rate. Truly resident callers
+        (``ArenaTrainState`` init) leave it False: that pack happens once,
+        not per step."""
+        assert self.arena_ready, "controller has no arena layout"
+        if account and self.fabric is not None:
+            t = self.fabric._traffic_model()
+            self.fabric.stats["maintain_bytes_moved"] += \
+                t["model"] + t["arena_bytes"]
+            self.fabric.stats["live_packs"] += 1
+        return self._pack_jit(params)
+
+    def unpack_live(self, arena: jnp.ndarray) -> PyTree:
+        """Decode an arena back to tree form (recovery/analysis paths)."""
+        assert self.arena_ready, "controller has no arena layout"
+        return self._unpack_jit(arena)
+
+    def live_value_needed(self, step: int) -> bool:
+        """True when this step's :meth:`maintain` or
+        :meth:`maybe_checkpoint` will actually read the live value —
+        tree-stepping runners skip their shared per-iteration pack (a
+        full model+arena memcpy) on steps where nothing consumes it."""
+        if self.should_checkpoint(int(step)):
+            return True
+        return (self.fabric is not None
+                and any(self.fabric.maintenance_due(int(step))))
+
+    def _live_arena(self, params):
+        from repro.core.arena import as_live_arena
+        return as_live_arena(params, self._arena_layout)
+
     # -- running checkpoint (arena-backed when the fabric has an arena) ------
 
     @property
@@ -171,26 +226,46 @@ class FTController:
                     else self.policy.partial_interval)
         return step > 0 and step % interval == 0
 
-    def maybe_checkpoint(self, step: int, params: PyTree) -> bool:
+    def maybe_checkpoint(self, step: int, params: PyTree,
+                         own_live: bool = False) -> bool:
         if not self.should_checkpoint(step):
             return False
-        self.checkpoint_now(step, params)
+        self.checkpoint_now(step, params, own_live=own_live)
         return True
 
-    def checkpoint_now(self, step: int, params: PyTree) -> jnp.ndarray:
-        """Update the running checkpoint; returns the saved block mask."""
+    def checkpoint_now(self, step: int, params: PyTree,
+                      own_live: bool = False) -> jnp.ndarray:
+        """Update the running checkpoint; returns the saved block mask.
+
+        ``params`` may be the live flat arena (arena-resident training
+        state, requires :attr:`arena_ready`): the partial save then
+        sources straight from the training state — no pack, no replica
+        freshness gating — and a full save is one contiguous copy.
+        ``own_live`` rides along to the post-save freshness maintain (see
+        :meth:`maintain`) so a tree-stepping runner's throwaway pack is
+        adopted, not re-copied, when that forced sweep runs."""
         t0 = time.perf_counter()
-        arena_hot = (self._arena_layout is not None
-                     and not (self.policy.fraction >= 1.0 and
-                              self.policy.strategy
-                              != SelectionStrategy.PRIORITY))
-        if arena_hot:
+        live = self._live_arena(params)
+        full_plain = (self.policy.fraction >= 1.0 and
+                      self.policy.strategy != SelectionStrategy.PRIORITY)
+        arena_hot = self._arena_layout is not None and not full_plain
+        if live is not None and full_plain:
+            # full save from the live arena: ONE contiguous device copy
+            ck = self._ckpt
+            self._ckpt_arena = jnp.array(live)
+            self._ckpt = RunningCheckpoint(
+                ck.values, jnp.full_like(ck.saved_iter, jnp.int32(step)),
+                ck.rr_cursor)
+            self._ckpt_dirty = True
+            mask = jnp.ones((self.partition.total_blocks,), bool)
+        elif arena_hot:
             mask = self._arena_checkpoint(step, params)
-        elif self.policy.fraction >= 1.0 and \
-                self.policy.strategy != SelectionStrategy.PRIORITY:
+        elif full_plain:
             self.ckpt = full_save(self.ckpt, params, jnp.int32(step))
             mask = jnp.ones((self.partition.total_blocks,), bool)
         else:
+            assert live is None, ("live-arena saves need the arena "
+                                  "checkpoint path (arena-capable fabric)")
             self._rng, sub = jax.random.split(self._rng)
             scores = None
             if self.policy.strategy == SelectionStrategy.PRIORITY:
@@ -250,7 +325,8 @@ class FTController:
                 # keep the redundancy tiers at least as fresh as the
                 # checkpoint (a same-step maintain() may have skipped an
                 # off-interval tier — force refreshes every tier)
-                self.fabric.maintain(int(step), params, force=True)
+                self.fabric.maintain(int(step), params, force=True,
+                                     own_live=own_live)
             if (self.store is not None
                     and getattr(self.fabric, "parity", None) is not None
                     and self.fabric.parity.parity is not None
@@ -266,16 +342,19 @@ class FTController:
 
     def _arena_checkpoint(self, step: int, params: PyTree) -> jnp.ndarray:
         """Partial save in arena mode: select blocks, then ONE donated
-        tile scatter into the checkpoint arena, sourced from the
-        maintenance sweep's replica arena (this step's live snapshot —
-        zero extra reads of the live tree) or, off-schedule, a fresh
-        pack. O(k·seg_bytes) moved, a single dispatch either way."""
+        tile scatter into the checkpoint arena, sourced from the live
+        arena itself when the training state is arena-resident (it *is*
+        this step's values — no pack and no replica freshness gating),
+        else from the maintenance sweep's replica arena (this step's
+        snapshot — zero extra reads of the live tree) or, off-schedule,
+        a fresh pack. O(k·seg_bytes) moved, a single dispatch each way."""
         from repro.kernels.fused_maintain.ops import arena_scatter_save
         pol = self.policy
         total = self.partition.total_blocks
         k = self.partition.blocks_for_k(pol.fraction)
         ck = self._ckpt
         cursor = ck.rr_cursor
+        live = self._live_arena(params)
         self._rng, sub = jax.random.split(self._rng)
         if pol.strategy == SelectionStrategy.PRIORITY:
             if (self.fabric.last_scores_step == int(step)
@@ -297,7 +376,9 @@ class FTController:
         mask = np.zeros((total,), bool)
         mask[idx] = True
         rep = self.fabric.replicas
-        if rep is not None and rep.arena is not None \
+        if live is not None:
+            src = live
+        elif rep is not None and rep.arena is not None \
                 and rep.is_fresh(int(step)):
             src = rep.arena
         else:
@@ -313,24 +394,31 @@ class FTController:
         return jnp.asarray(mask)
 
     def _arena_scores(self, params: PyTree) -> jnp.ndarray:
-        """Squared-L2 drift per block, computed arena-native (pack live +
-        tile diff + segment-sum) — the PRIORITY fallback when this step's
-        maintenance sweep didn't already cache the scores."""
+        """Squared-L2 drift per block, computed arena-native (tile diff +
+        segment-sum; a pack first when the live state arrives as a tree)
+        — the PRIORITY fallback when this step's maintenance sweep didn't
+        already cache the scores."""
         if self._arena_score_jit is None:
             from repro.core.arena import ARENA_TILE, pack_arena
             layout = self._arena_layout
             tile_gid = jnp.asarray(layout.tile_gids())
             total = self.partition.total_blocks
 
-            def _scores(p, z):
-                rep = pack_arena(p, layout)
+            def _tile_scores(rep, z):
                 d = rep.reshape(-1, ARENA_TILE) - z.reshape(-1, ARENA_TILE)
                 return jax.ops.segment_sum(jnp.sum(d * d, axis=1),
                                            tile_gid, num_segments=total)
-            self._arena_score_jit = jax.jit(_scores)
+
+            self._arena_score_jit = jax.jit(
+                lambda p, z: _tile_scores(pack_arena(p, layout), z))
+            self._arena_score_live_jit = jax.jit(_tile_scores)
+        live = self._live_arena(params)
+        if live is not None:
+            return self._arena_score_live_jit(live, self._ckpt_arena)
         return self._arena_score_jit(params, self._ckpt_arena)
 
-    def maintain(self, step: int, params: PyTree) -> None:
+    def maintain(self, step: int, params: PyTree,
+                 own_live: bool = False) -> None:
         """Per-iteration fabric upkeep (replica refresh / parity re-encode
         on their configured intervals). No-op without a fabric.
 
@@ -338,7 +426,14 @@ class FTController:
         (squared-L2 drift, no custom scorer), the running-checkpoint
         values ride along so the fused sweep scores blocks in the same
         read — the loops call maintain() *before* maybe_checkpoint() so a
-        same-step save reuses them."""
+        same-step save reuses them.
+
+        ``params`` may be the live flat arena (arena-resident training
+        state): the sweep then runs pack-free against it directly.
+        ``own_live=True`` additionally hands the buffer over as the
+        replica itself (no copy) — only for throwaway packs the caller
+        will never donate or mutate (see
+        :meth:`CheckpointFabric.maintain`)."""
         if self.fabric is None:
             return
         want_scores = (self.policy.strategy == SelectionStrategy.PRIORITY
@@ -353,7 +448,8 @@ class FTController:
             ckpt_values = self._ckpt_arena
         else:
             ckpt_values = self.ckpt.values
-        self.fabric.maintain(int(step), params, ckpt_values=ckpt_values)
+        self.fabric.maintain(int(step), params, ckpt_values=ckpt_values,
+                             own_live=own_live)
 
     # -- recovery path ------------------------------------------------------
 
@@ -407,7 +503,21 @@ class FTController:
         (see :meth:`CheckpointFabric.on_failure`) keeps the devices dead in
         the cluster view — the trace-driven path sets it; one-shot
         experiments default to the fabric's ``elastic`` flag.
+
+        ``params`` may be the live flat arena (arena-resident training
+        state): recovery then decodes it once, runs the tier-planned tree
+        recovery, and returns the recovered state re-packed as an arena —
+        ONE contiguous write the caller drops straight back into its
+        ``ArenaTrainState`` (the cold path pays the two conversions; the
+        hot path never does).
         """
+        live = self._live_arena(params)
+        if live is not None:
+            recovered, info = self.on_failure(
+                self.unpack_live(live), lost_mask,
+                failed_devices=failed_devices, step=step,
+                persist_failure=persist_failure)
+            return self.pack_live(recovered), info
         ckpt = self.ckpt
         if self.store is not None and getattr(self.store, "must_reload", False):
             values = self.store.read_all()

@@ -112,9 +112,14 @@ class CheckpointFabric:
             from repro.core.arena import arena_compatible, build_arena_layout
             if arena_compatible(partition):
                 self.arena_layout = build_arena_layout(partition)
+        # True once a maintain has been fed the live arena itself
+        # (arena-resident training state): every sweep from then on is
+        # pack-free and the accounting switches to the resident model
+        self.live_arena_mode = False
         self.stats = {"replica_refreshes": 0, "parity_encodes": 0,
                       "recoveries": 0, "rehomes": 0, "heals": 0,
                       "fused_maintains": 0, "arena_maintains": 0,
+                      "arena_resident_maintains": 0, "live_packs": 0,
                       "maintain_bytes_moved": 0}
 
     @property
@@ -126,7 +131,7 @@ class CheckpointFabric:
 
     def maintain(self, step: int, params: PyTree,
                  ckpt_values: Optional[PyTree] = None,
-                 force: bool = False) -> None:
+                 force: bool = False, own_live: bool = False) -> None:
         """Refresh redundancy tiers from live params (idempotent per step).
 
         With ``cfg.fused`` (default) and both tiers due, the refresh runs
@@ -137,17 +142,36 @@ class CheckpointFabric:
         controller's next partial save. Off-interval steps and
         partial-tier configs fall back to the independent per-component
         passes.
+
+        ``params`` may be the live flat arena itself (arena-resident
+        training state, requires ``arena_layout``): the sweep then runs
+        pack-free — pure 2-read/1-write — and an off-interval step with
+        only one tier due still takes the full sweep (the live state has
+        no tree form for the per-component passes; refreshing the other
+        tier early is strictly fresher, never stale).
+
+        ``own_live=True`` (arena input only) transfers ownership of that
+        buffer to the fabric: it becomes the replica directly, no copy —
+        for tree-stepping callers whose per-iteration pack is throwaway.
+        The caller must never donate or mutate the arena afterwards;
+        truly resident state (donated through the train step) must leave
+        this False so the sweep emits an independent replica copy.
         """
+        from repro.core.arena import as_live_arena
         step = int(step)
         if step == self.last_maintained_step and not force:
             return
-        due_replica = self.replicas is not None and (
-            force or step % self.cfg.replicate_interval == 0)
-        due_parity = self.parity is not None and (
-            force or step % self.cfg.parity_interval == 0
-            or self.parity.parity is None)
-        if self.arena_layout is not None and due_replica and due_parity:
-            self._arena_maintain(step, params, ckpt_values)
+        # note: without an arena layout a 1-D input is treated as what it
+        # always was — a bare single-leaf param tree on the per-component
+        # paths (a genuine live arena can only come from an arena-capable
+        # controller, which implies the layout exists here)
+        live = as_live_arena(params, self.arena_layout)
+        due_replica, due_parity = self.maintenance_due(step, force=force)
+        if self.arena_layout is not None and (
+                (due_replica and due_parity)
+                or (live is not None and (due_replica or due_parity))):
+            self._arena_maintain(step, params, ckpt_values,
+                                 own_live=own_live)
         elif self.cfg.fused and due_replica and due_parity:
             self._fused_maintain(step, params, ckpt_values)
         else:
@@ -181,16 +205,25 @@ class CheckpointFabric:
         self.stats["maintain_bytes_moved"] += self._traffic_model()["fused"]
 
     def _arena_maintain(self, step: int, params: PyTree,
-                        ckpt_values) -> None:
+                        ckpt_values, own_live: bool = False) -> None:
         """One pack + ONE kernel dispatch for the whole model: the pack
         is the replica write (arena form), the sweep emits group-sorted
         XOR parity and PRIORITY score partials. ``ckpt_values`` may be
         the running checkpoint as an arena (the controller's canonical
         form — zero conversion), a PyTree (packed once), or None (no
-        scoring this step)."""
+        scoring this step).
+
+        With arena-resident live state (``params`` already the flat
+        arena) there is no pack at all: the sweep reads the live and
+        checkpoint arenas once each and emits the replica copy from the
+        same read — the accounted bytes drop by the live tree's size."""
+        from repro.core.arena import as_live_arena
         fn = self._arena_maintain_fn()
         z = self._as_arena(ckpt_values)
-        rep, scores, parity = fn(params, z)
+        is_arena = as_live_arena(params, self.arena_layout) is not None
+        owned = own_live and is_arena
+        resident = is_arena and not owned
+        rep, scores, parity = fn(params, z, own_live=owned)
         self.replicas.ingest_arena(step, rep, self.arena_layout)
         self.parity.ingest(step, parity)
         if z is not None:
@@ -200,7 +233,15 @@ class CheckpointFabric:
         self.stats["parity_encodes"] += 1
         self.stats["fused_maintains"] += 1
         self.stats["arena_maintains"] += 1
-        self.stats["maintain_bytes_moved"] += self._traffic_model()["arena"]
+        if is_arena:
+            # either way every maintain from here on is an arena sweep —
+            # the seed staging never materializes (redundancy_nbytes)
+            self.live_arena_mode = True
+        if resident:
+            self.stats["arena_resident_maintains"] += 1
+        self.stats["maintain_bytes_moved"] += self._traffic_model()[
+            "arena_owned" if owned else
+            "arena_resident" if resident else "arena"]
 
     def _as_arena(self, ckpt_values):
         """Coerce checkpoint values to arena form (None passes through)."""
@@ -242,6 +283,30 @@ class CheckpointFabric:
             self._fused_version = self.view.version
             self._traffic = None
         return self._fused_fn
+
+    def block_until_maintained(self) -> None:
+        """Block until the last maintenance sweep's device work is done
+        (dispatch returns early under async execution). Timing-attribution
+        helper for loops that report per-step maintenance overhead — owns
+        the knowledge of which tensor represents the sweep's completion."""
+        if self.parity is not None and self.parity.parity is not None:
+            jax.block_until_ready(self.parity.parity)
+        elif self.replicas is not None and self.replicas.arena is not None:
+            jax.block_until_ready(self.replicas.arena)
+
+    def maintenance_due(self, step: int,
+                        force: bool = False) -> tuple[bool, bool]:
+        """(replica due, parity due) at ``step`` under the configured
+        intervals — what :meth:`maintain` would actually refresh. Lets
+        tree-stepping callers skip preparing a live value (e.g. the
+        classic runners' shared pack) on steps where nothing reads it."""
+        step = int(step)
+        due_replica = self.replicas is not None and (
+            force or step % self.cfg.replicate_interval == 0)
+        due_parity = self.parity is not None and (
+            force or step % self.cfg.parity_interval == 0
+            or self.parity.parity is None)
+        return due_replica, due_parity
 
     def is_fresh(self, step: int) -> bool:
         """True when every configured tier holds this step's live values —
@@ -328,12 +393,19 @@ class CheckpointFabric:
             # the fused sweep's compact staging applies only when every
             # maintain actually takes the fused branch — mismatched tier
             # intervals route off-interval steps through the seed encode,
-            # whose frames+gather footprint is the real peak
+            # whose frames+gather footprint is the real peak. In
+            # live-arena mode that fallback no longer exists: every
+            # maintain (on- or off-interval) is the resident arena sweep,
+            # so neither the seed frames+gather staging nor the pack's
+            # snapshot write ever materializes — only the sweep's compact
+            # outputs count, whatever the tier intervals are.
             all_fused = ((self.cfg.fused or self.arena_layout is not None)
                          and self.cfg.replicate
                          and self.cfg.replicate_interval
                          == self.cfg.parity_interval)
-            if not all_fused:
+            if self.live_arena_mode:
+                staging = self._traffic_model()["staging_arena"]
+            elif not all_fused:
                 staging = self.parity.staging_nbytes()
             elif self.arena_layout is not None:
                 staging = self._traffic_model()["staging_arena"]

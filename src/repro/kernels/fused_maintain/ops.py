@@ -234,7 +234,13 @@ class ArenaMaintainProgram:
     to :meth:`ParityCodec.encode` under the same striping, scores
     allclose to :func:`repro.core.blocks.block_scores` (different
     association order). With ``ckpt_arena=None`` the sweep still
-    refreshes replica + parity; scores are zeros (nothing to diff)."""
+    refreshes replica + parity; scores are zeros (nothing to diff).
+
+    ``params`` may also be the live flat arena itself (arena-resident
+    training state): the pack disappears entirely and the sweep is the
+    pure 2-read/1-write pass — read live + checkpoint arenas, write the
+    replica copy + compact outputs. Outputs are bit-identical to the
+    pack path on the same values (``pack ∘ unpack`` is the identity)."""
 
     def __init__(self, partition: BlockPartition, arena_layout,
                  frame_layout: FrameLayout, group_of: np.ndarray,
@@ -296,11 +302,56 @@ class ArenaMaintainProgram:
             _, parity = _sweep(rep, rep)
             return rep, jnp.zeros((total,), jnp.float32), parity
 
+        # arena-resident live state: the live params ARE already an
+        # arena, so there is nothing to pack — the sweep reads the live
+        # buffer and the replica snapshot is a plain copy of it, emitted
+        # from the same read (2 reads + 1 write + compact outputs). The
+        # optimization_barrier keeps the copy an op (not an identity the
+        # runtime could forward as an alias of the input): the replica
+        # must own its buffer because the live arena is donated into the
+        # very next train step.
+        def _scored_live(live, z_arena):
+            scores, parity = _sweep(live, z_arena)
+            return jax.lax.optimization_barrier(live), scores, parity
+
+        def _unscored_live(live):
+            _, parity = _sweep(live, live)
+            return (jax.lax.optimization_barrier(live),
+                    jnp.zeros((total,), jnp.float32), parity)
+
+        # owned live arena (``own_live=True``): a tree-stepping caller
+        # hands over the pack it just made — the buffer itself becomes
+        # the replica, so the sweep emits no copy at all (the caller
+        # guarantees the arena is never donated or mutated afterwards);
+        # total cost matches the internal-pack path exactly
+        def _scored_owned(live, z_arena):
+            return _sweep(live, z_arena)
+
+        def _unscored_owned(live):
+            _, parity = _sweep(live, live)
+            return jnp.zeros((total,), jnp.float32), parity
+
         self._scored = jax.jit(_scored)
         self._unscored = jax.jit(_unscored)
+        self._scored_live = jax.jit(_scored_live)
+        self._unscored_live = jax.jit(_unscored_live)
+        self._scored_owned = jax.jit(_scored_owned)
+        self._unscored_owned = jax.jit(_unscored_owned)
 
     def __call__(self, params: PyTree,
-                 ckpt_arena: Optional[jnp.ndarray] = None):
+                 ckpt_arena: Optional[jnp.ndarray] = None,
+                 own_live: bool = False):
+        from repro.core.arena import as_live_arena
+        live = as_live_arena(params, self.layout)
+        if live is not None and own_live:
+            if ckpt_arena is None:
+                scores, parity = self._unscored_owned(live)
+            else:
+                scores, parity = self._scored_owned(live, ckpt_arena)
+            return live, scores, parity
+        if live is not None:
+            return (self._unscored_live(live) if ckpt_arena is None
+                    else self._scored_live(live, ckpt_arena))
         if ckpt_arena is None:
             return self._unscored(params)
         return self._scored(params, ckpt_arena)
@@ -515,4 +566,19 @@ def maintain_traffic(partition: BlockPartition, layout: FrameLayout,
             + a + a                  # sweep: read snapshot + ckpt arena
             + compact + partials     # sweep outputs
             + compact + parity)      # epilogue: compact -> codec layout
+        # arena-resident live state: no pack — the sweep reads the live
+        # arena and the checkpoint arena once each and writes the replica
+        # copy from the same read (pure 2-read/1-write plus the compact
+        # outputs); the per-step saving vs the pack path is exactly the
+        # live tree's `model` bytes
+        out["arena_resident"] = int(
+            a + a                    # sweep: read live + ckpt arena
+            + a                      # write the replica copy
+            + compact + partials     # sweep outputs
+            + compact + parity)      # epilogue: compact -> codec layout
+        # owned live arena (tree-stepping callers hand their pack over
+        # as the replica): no copy — the caller's pack (model + a,
+        # booked by pack_live(account=True)) plus this equals the
+        # internal-pack "arena" total exactly
+        out["arena_owned"] = int(out["arena_resident"] - a)
     return out

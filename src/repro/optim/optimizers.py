@@ -5,6 +5,15 @@ Each optimizer is ``init(params) -> state`` + ``update(grads, state, params)
 -> (new_params, new_state)``. Optimizer state tensors mirror the parameter
 pytree so SCAR block partitioning / sharding specs apply unchanged. Adam
 moments are fp32 regardless of param dtype (TPU practice).
+
+**Arena-native apply**: every optimizer here is elementwise, so the same
+``update`` applies unchanged to the flat parameter arena
+(:mod:`repro.core.arena`) — the arena is a one-leaf pytree and the moment
+buffers become flat mirrors of it. :func:`arena_apply` wraps that call
+with the one step the flat form can't express on its own: the per-leaf
+dtype round trip (the arena stores the f32 *image* of the leaf-dtype
+value, so non-f32 segments must pass through their dtype after the f32
+update, exactly like the tree path's ``.astype(p.dtype)``).
 """
 from __future__ import annotations
 
@@ -14,6 +23,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 
@@ -111,3 +121,34 @@ def _adam_like(lr, b1, b2, eps, wd, name, moment_dtype=jnp.float32) -> Optimizer
         new = jax.tree_util.tree_map(upd, params, mu, nu)
         return new, OptState(t, mu, nu)
     return Optimizer(init, update, name)
+
+
+# ---------------------------------------------------------------------------
+# Arena-native apply (flat parameter arena as the live representation)
+# ---------------------------------------------------------------------------
+
+def arena_apply(optimizer: Optimizer, grads: jnp.ndarray, state: OptState,
+                arena: jnp.ndarray, layout) -> tuple[jnp.ndarray, OptState]:
+    """One optimizer step over the flat parameter arena.
+
+    ``arena``/``grads`` are ``(total_words,)`` f32 buffers laid out by
+    ``layout`` (:class:`repro.core.arena.ArenaLayout`); ``state``'s moment
+    buffers are flat mirrors (``optimizer.init(arena)``). The update is
+    the optimizer's own elementwise math — bit-identical to the per-leaf
+    tree apply — followed by a dtype round trip on non-f32 leaves'
+    segments so the arena keeps holding the f32 image of the leaf-dtype
+    value (pack convention, invariant I3). Pad words stay zero: zero
+    grads give zero moments and a zero step, and weight decay of 0 is 0
+    (invariant I4), so no masking pass is needed.
+    """
+    new_arena, new_state = optimizer.update(grads, state, arena)
+    f32 = np.dtype(np.float32)
+    for li, leaf in enumerate(layout.partition.leaves):
+        if np.dtype(leaf.dtype) == f32:
+            continue
+        off = layout.leaf_offset[li]
+        n = layout.seg_words[li] * leaf.n_blocks
+        seg = jax.lax.dynamic_slice(new_arena, (off,), (n,))
+        seg = seg.astype(leaf.dtype).astype(jnp.float32)
+        new_arena = jax.lax.dynamic_update_slice(new_arena, seg, (off,))
+    return new_arena, new_state

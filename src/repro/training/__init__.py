@@ -4,7 +4,8 @@ from repro.training.classic_runner import (run_clean, run_with_failure,
                                            run_with_trace,
                                            iterations_to_converge)
 from repro.training.train_loop import TrainLoop, TrainLoopConfig
+from repro.training.train_state import ArenaTrainState, TrainState
 
 __all__ = ["run_clean", "run_with_failure", "run_with_perturbation",
            "run_with_trace", "iterations_to_converge", "TrainLoop",
-           "TrainLoopConfig"]
+           "TrainLoopConfig", "TrainState", "ArenaTrainState"]

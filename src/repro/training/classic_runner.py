@@ -23,6 +23,7 @@ All return loss trajectories + the empirical iteration cost
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional
 
 import jax
@@ -111,7 +112,8 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
                      max_iters: int = 400, seed: int = 0,
                      clean_losses: Optional[list] = None,
                      store=None, fabric=None,
-                     fail_domain: str = "uniform") -> dict:
+                     fail_domain: str = "uniform",
+                     arena_state: bool = True) -> dict:
     """Full SCAR lifecycle on one classic model (Figures 7/8).
 
     The failure destroys ``fail_fraction`` of parameter blocks (uniformly at
@@ -119,6 +121,15 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
     ``fail_domain="host"``/``"rack"``/``"device"`` — one whole correlated
     failure domain. Recovery follows ``policy.recovery`` from the running
     checkpoint, or the fabric's tier planner when a fabric is given.
+
+    ``arena_state`` (default): when the controller is arena-capable, the
+    live params are packed ONCE per consuming iteration and every
+    controller call (maintain + save) uses that arena — with
+    ``own_live`` the fabric adopts the pack as the replica directly, so
+    the total cost matches the tree interface exactly (whose sweep made
+    the same one pack internally) while exercising the same arena-native
+    controller surface the LM trainer uses. ``False`` keeps the pure
+    PyTree interface (bit-identical results either way).
     """
     if fail_domain != "uniform" and fabric is None:
         raise ValueError("correlated fail_domain needs a fabric")
@@ -127,14 +138,29 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
     ctl = FTController(p, policy, norm_aux=model.norm_aux, store=store,
                        rng=jax.random.PRNGKey(seed + 13),
                        colocate=model.colocate, fabric=fabric)
+    use_arena = arena_state and ctl.arena_ready
     losses = []
     recovery_info = {}
+    maint_seconds = 0.0
     for i in range(1, max_iters + 1):
         p = model.step(p, key(i), i)
         # maintain before the checkpoint: the fused sweep's PRIORITY
         # scores are measured against the pre-save running checkpoint
-        ctl.maintain(i, p)
-        ctl.maybe_checkpoint(i, p)
+        t0 = time.perf_counter()
+        # pack only on iterations whose maintain/save reads the live
+        # value (always, under the default every-step tier intervals)
+        packed = use_arena and ctl.live_value_needed(i)
+        live = ctl.pack_live(p, account=True) if packed else p
+        # own_live: the throwaway pack becomes the replica directly (no
+        # copy inside the sweep) — same total cost as the tree interface
+        ctl.maintain(i, live, own_live=packed)
+        ctl.maybe_checkpoint(i, live, own_live=packed)
+        # block on the sweep's outputs so maint_seconds books the
+        # maintenance device work, not just its dispatch (same
+        # attribution TrainLoop.run uses for overhead_seconds)
+        if ctl.fabric is not None:
+            ctl.fabric.block_until_maintained()
+        maint_seconds += time.perf_counter() - t0
         if i == fail_iter:
             if fail_domain == "uniform":
                 lost = ctl.sample_failure(fail_fraction)
@@ -150,6 +176,10 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
     cost = empirical_iteration_cost(losses, clean_losses, model.eps)
     return {"losses": losses, "iteration_cost": cost,
             "recovery": recovery_info, "controller_stats": ctl.stats,
+            "fabric_stats": (ctl.fabric.stats if ctl.fabric is not None
+                             else None),
+            "arena_state": use_arena,
+            "maint_seconds_per_iter": maint_seconds / max_iters,
             "kappa_perturbed": iterations_to_eps(losses, model.eps),
             "kappa_clean": iterations_to_eps(clean_losses, model.eps)}
 
@@ -159,7 +189,7 @@ def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
                    mtbf: Optional[dict] = None, trace=None,
                    heal_after: Optional[int] = None,
                    clean_losses: Optional[list] = None,
-                   store=None) -> dict:
+                   store=None, arena_state: bool = True) -> dict:
     """Degraded-mode soak on one classic model: a multi-event failure trace
     (explicit ``trace`` list of :class:`FailureEvent`, or MTBF-sampled from
     ``mtbf``), recovered through the fabric's tier planner.
@@ -191,14 +221,21 @@ def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
     events_at: dict[int, list] = {}
     for ev in trace:
         events_at.setdefault(max(1, min(ev.step, max_iters)), []).append(ev)
+    use_arena = arena_state and ctl.arena_ready
     heal_at: dict[int, list] = {}
     events_out: list[dict] = []
     losses = []
     redundancy_full: list[bool] = []
     for i in range(1, max_iters + 1):
         p = model.step(p, key(i), i)
-        ctl.maintain(i, p)
-        ctl.maybe_checkpoint(i, p)
+        # arena-native controller interface: one shared pack feeds both
+        # maintain and the save (own_live: the pack IS the replica),
+        # skipped on iterations where neither reads the live value
+        # (see run_with_failure)
+        packed = use_arena and ctl.live_value_needed(i)
+        live = ctl.pack_live(p, account=True) if packed else p
+        ctl.maintain(i, live, own_live=packed)
+        ctl.maybe_checkpoint(i, live, own_live=packed)
         for ev in events_at.pop(i, []):
             p, info = ctl.on_domain_event(p, ev.kind, ev.index, step=i)
             info["step"] = i

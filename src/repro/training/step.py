@@ -1,11 +1,23 @@
-"""Shared train-step builder (used by TrainLoop and launch/dryrun).
+"""Shared train-step builders (used by TrainLoop and launch/dryrun).
 
-Implements microbatched gradient accumulation (``cfg.microbatch > 1``):
-the global batch is split into MB microbatches processed by a ``lax.scan``
-with an fp32 gradient accumulator sharded like the parameters. This is the
-standard memory lever for the largest dense architectures — per-step
-transient activation memory scales 1/MB while keeping the same global
-batch semantics.
+``make_train_step`` is the classic PyTree step. ``make_arena_train_step``
+is its arena-native twin: the live parameters enter and leave the step as
+the flat arena (:mod:`repro.core.arena`) — decoded to the leaf-shaped
+tree view at the top of the program for the forward pass, loss/grad taken
+w.r.t. that tree (NOT through the decode — see the function docstring for
+why), the gradient packed back to arena form in the same program, and the
+optimizer run as the flat elementwise apply
+(:func:`repro.optim.optimizers.arena_apply`). Jitted with donation, the
+arena buffer is reused across steps and never round-trips through a
+host-visible pack; the per-step fault-tolerance sweep then reads
+``state.arena`` directly.
+
+Both steps implement microbatched gradient accumulation
+(``cfg.microbatch > 1``): the global batch is split into MB microbatches
+processed by a ``lax.scan`` with an fp32-accumulated gradient buffer.
+This is the standard memory lever for the largest dense architectures —
+per-step transient activation memory scales 1/MB while keeping the same
+global batch semantics.
 """
 from __future__ import annotations
 
@@ -16,9 +28,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.api import ModelOps
-from repro.optim.optimizers import Optimizer
+from repro.optim.optimizers import Optimizer, arena_apply
 from repro.sharding.partition import DistContext
-from repro.training.train_state import TrainState
+from repro.training.train_state import ArenaTrainState, TrainState
 
 PyTree = Any
 
@@ -56,5 +68,68 @@ def make_train_step(ops: ModelOps, cfg: ModelConfig, ctx: DistContext,
         params, opt_state = optimizer.update(grads, state.opt_state,
                                              state.params)
         return TrainState(params, opt_state, state.step + 1), loss
+
+    return train_step
+
+
+def make_arena_train_step(ops: ModelOps, cfg: ModelConfig, ctx: DistContext,
+                          optimizer: Optimizer, layout):
+    """Arena-native train step: ``(ArenaTrainState, batch) -> (state', loss)``.
+
+    The arena is decoded to the leaf-shaped tree view once at the top of
+    the program (the model's forward pass needs shapes), the loss/grad is
+    the same tree computation as :func:`make_train_step`, and the
+    gradient is packed back to arena form in the same program before the
+    flat elementwise optimizer apply — the whole step is one jitted
+    function of ``(arena, moments) -> (arena', moments')``, meant to be
+    jitted with ``donate_argnums=(0,)`` so those buffers are reused in
+    place and never round-trip through a host-visible pack.
+
+    (The grad is deliberately taken w.r.t. the *tree*, not the arena:
+    differentiating through the decode would transpose each leaf's slice
+    into its own full-arena scatter — ~n_leaves arena-sized buffers —
+    where the explicit ``pack_arena`` of the grads is one model-sized
+    pass.)
+
+    Bit-equivalent to the PyTree step on an arena-compatible model: the
+    decode is value-preserving (invariant I3), ``pack_arena`` of the
+    grads is the f32 image of the same values the tree optimizer reads,
+    and the flat apply is the same elementwise math (with the non-f32
+    dtype round trip done per segment in :func:`arena_apply`).
+    """
+    from repro.core.arena import pack_arena, unpack_arena
+
+    loss_and_grad = jax.value_and_grad(ops.train_loss)
+
+    def train_step(state: ArenaTrainState, batch: PyTree):
+        params = unpack_arena(state.arena, layout)
+        mb = max(cfg.microbatch, 1)
+        if mb == 1:
+            loss, g = loss_and_grad(params, batch, cfg, ctx)
+            grads = pack_arena(g, layout)
+        else:
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + tuple(x.shape[1:]))
+
+            mbatch = jax.tree_util.tree_map(split, batch)
+            acc_dtype = jnp.dtype(cfg.opt_moment_dtype)
+            g0 = jnp.zeros((layout.total_words,), acc_dtype)
+
+            def body(carry, bx):
+                loss_sum, gacc = carry
+                l, g = loss_and_grad(params, bx, cfg, ctx)
+                gacc = (gacc.astype(jnp.float32)
+                        + pack_arena(g, layout)).astype(acc_dtype)
+                return (loss_sum + l, gacc), None
+
+            (loss, gacc), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), g0), mbatch)
+            loss = loss / mb
+            grads = gacc / mb     # acc_dtype division, like the tree path
+        new_arena, opt_state = arena_apply(optimizer, grads,
+                                           state.opt_state, state.arena,
+                                           layout)
+        return ArenaTrainState(new_arena, opt_state, state.step + 1,
+                               state.layout), loss
 
     return train_step

@@ -9,6 +9,15 @@
   PyTree (optimizer moments are recoverable state too — SCAR checkpoints
   params; Adam moments after a partial restore are simply kept, which is
   itself a perturbation the theory covers; see DESIGN.md);
+- **arena-resident training state** (the default when the controller's
+  fabric is arena-capable and no mesh is configured): the live params are
+  the flat parameter arena (:class:`~repro.training.train_state.ArenaTrainState`),
+  donated through the jitted step, and the per-step controller calls
+  (``maintain``/``maybe_checkpoint``) consume ``state.arena`` directly —
+  the maintenance sweep runs pack-free (pure 2-read/1-write) and the
+  partial save sources straight from the training state. The PyTree path
+  stays available via ``TrainLoopConfig(arena_state=False)`` for
+  non-arena-compatible models;
 - optional fault injection (iteration sampled from a geometric
   distribution, as in the paper's §5.3), either the paper's uniform
   block-loss model or correlated whole-domain loss
@@ -37,7 +46,7 @@ from repro.core.policy import CheckpointPolicy
 from repro.models import get_model
 from repro.optim.optimizers import Optimizer, adamw
 from repro.sharding.partition import DistContext, named_shardings
-from repro.training.train_state import TrainState
+from repro.training.train_state import ArenaTrainState, TrainState
 
 PyTree = Any
 
@@ -49,6 +58,17 @@ class TrainLoopConfig:
     fail_fraction: float = 0.5      # fraction of blocks lost per failure
     fail_domain: str = "uniform"    # "uniform" | "device" | "host" | "rack"
     fabric: Optional[Any] = None    # FabricConfig → tiered recovery fabric
+    # arena-resident training state: the live params ARE the flat arena
+    # (needs an arena-capable fabric + single-device ctx; silently falls
+    # back to the PyTree path otherwise — set False to force the tree
+    # path, e.g. for models with non-arena dtypes or custom scorers)
+    arena_state: bool = True
+    # record per-step maintenance overhead (``overhead_seconds`` in
+    # metrics): blocks on the sweep's device outputs each step so the
+    # number is the maintenance work, not its dispatch. Disable on
+    # accelerators when the sweep should overlap the next step's
+    # dispatch instead of being measured.
+    measure_overhead: bool = True
     # trace-driven soak mode: per-domain-kind MTBF means (in steps) sampled
     # into a multi-event failure schedule each run(); failed domains stay
     # dead in the cluster view, and optionally heal ``heal_after`` steps
@@ -82,15 +102,17 @@ class TrainLoop:
         self.controller: Optional[FTController] = None
         self.metrics: list[dict] = []
         self._redundancy_flags: list[bool] = []
+        self.arena_layout = None          # set when the arena path engages
 
         from repro.training.step import make_train_step
         self._train_step = jax.jit(
             make_train_step(self.ops, cfg, ctx, self.optimizer),
             donate_argnums=(0,))
+        self._arena_step = None           # built lazily by init_state
 
     # -- initialization ------------------------------------------------------
 
-    def init_state(self, rng: Optional[jax.Array] = None) -> TrainState:
+    def init_state(self, rng: Optional[jax.Array] = None):
         rng = rng if rng is not None else jax.random.PRNGKey(self.loop_cfg.seed)
         if self.ctx.mesh is not None:
             p_shape = jax.eval_shape(self.ops.init_params, rng, self.cfg)
@@ -99,24 +121,57 @@ class TrainLoop:
                              out_shardings=shardings)(rng, self.cfg)
         else:
             params = self.ops.init_params(rng, self.cfg)
-        state = TrainState.create(params, self.optimizer)
         if self.loop_cfg.policy is not None:
             self.controller = FTController(params, self.loop_cfg.policy,
                                            store=self._store,
                                            fabric=self.loop_cfg.fabric)
-        return state
+        if (self.loop_cfg.arena_state and self.controller is not None
+                and self.controller.arena_ready and self.ctx.mesh is None):
+            # arena-resident training state: pack once here, never again —
+            # every subsequent step donates the arena through the jitted
+            # update and the controller reads it in place
+            self.arena_layout = self.controller.arena_layout
+            if self._arena_step is None:
+                from repro.training.step import make_arena_train_step
+                self._arena_step = jax.jit(
+                    make_arena_train_step(self.ops, self.cfg, self.ctx,
+                                          self.optimizer,
+                                          self.arena_layout),
+                    donate_argnums=(0,))
+            arena = self.controller.pack_live(params)
+            return ArenaTrainState.create(arena, self.optimizer,
+                                          self.arena_layout)
+        return TrainState.create(params, self.optimizer)
+
+    # -- live-state plumbing (both representations) --------------------------
+
+    @staticmethod
+    def _live(state):
+        """The live parameter value in its canonical form: the flat arena
+        for ArenaTrainState, the tree for TrainState. Controller entry
+        points accept either."""
+        return state.arena if isinstance(state, ArenaTrainState) \
+            else state.params
+
+    @staticmethod
+    def _with_live(state, new_live):
+        if isinstance(state, ArenaTrainState):
+            return ArenaTrainState(new_live, state.opt_state, state.step,
+                                   state.layout)
+        return TrainState(new_live, state.opt_state, state.step)
 
     # -- run loop -------------------------------------------------------------
 
-    def run(self, state: TrainState, batches, n_steps: int,
-            on_step: Optional[Callable[[int, float], None]] = None,
-            ) -> TrainState:
+    def run(self, state, batches, n_steps: int,
+            on_step: Optional[Callable[[int, float], None]] = None):
         it = iter(batches)
         events_at = self._sample_trace(n_steps)
         heal_at: dict[int, list] = {}
+        step_fn = (self._arena_step if isinstance(state, ArenaTrainState)
+                   else self._train_step)
         for i in range(1, n_steps + 1):
             t0 = time.perf_counter()
-            state, loss = self._train_step(state, next(it))
+            state, loss = step_fn(state, next(it))
             loss = float(loss)
             dt = time.perf_counter() - t0
             rec = {"step": int(state.step), "loss": loss, "seconds": dt}
@@ -125,16 +180,28 @@ class TrainLoop:
                 # maintain first: the fused maintenance sweep scores the
                 # blocks against the running checkpoint in the same read,
                 # and a same-step partial save below reuses those scores
-                self.controller.maintain(int(state.step), state.params)
-                if self.controller.maybe_checkpoint(int(state.step),
-                                                    state.params):
+                tm0 = time.perf_counter()
+                live = self._live(state)
+                self.controller.maintain(int(state.step), live)
+                if self.controller.maybe_checkpoint(int(state.step), live):
                     rec["checkpointed"] = True
+                # per-step fault-tolerance overhead (maintain + save),
+                # excluding the rare failure/heal events timed below —
+                # the examples report this next to the step time. Block
+                # on the sweep's device outputs first: checkpoint_now
+                # only blocks on save steps, and under async dispatch a
+                # maintain-only step would otherwise book dispatch time
+                # here and push the sweep's compute into the NEXT step's
+                # "seconds". Gated by cfg.measure_overhead so production
+                # runs can keep the sweep overlapping the next dispatch.
+                if self.loop_cfg.measure_overhead:
+                    if self.controller.fabric is not None:
+                        self.controller.fabric.block_until_maintained()
+                    rec["overhead_seconds"] = time.perf_counter() - tm0
                 for ev in events_at.pop(i, []):
-                    new_params, info = self.controller.on_domain_event(
-                        state.params, ev.kind, ev.index,
-                        step=int(state.step))
-                    state = TrainState(new_params, state.opt_state,
-                                       state.step)
+                    live, info = self.controller.on_domain_event(
+                        live, ev.kind, ev.index, step=int(state.step))
+                    state = self._with_live(state, live)
                     rec.setdefault("failures", []).append(info)
                     if (self.loop_cfg.heal_after is not None
                             and not info.get("skipped")):
@@ -142,13 +209,12 @@ class TrainLoop:
                                            []).append(ev)
                 for ev in heal_at.pop(i, []):
                     heal = self.controller.heal_domain(
-                        ev.kind, ev.index, state.params,
-                        step=int(state.step))
+                        ev.kind, ev.index, live, step=int(state.step))
                     rec.setdefault("heals", []).append(heal)
                 if (self.loop_cfg.fail_prob > 0
                         and self._rng.random() < self.loop_cfg.fail_prob):
-                    new_params, info = self._inject(state)
-                    state = TrainState(new_params, state.opt_state, state.step)
+                    new_live, info = self._inject(state)
+                    state = self._with_live(state, new_live)
                     rec["failure"] = info
                 if self.controller.fabric is not None:
                     # per-step placement health — availability_summary()
@@ -170,6 +236,29 @@ class TrainLoop:
                   if self.controller is not None else [])
         return summarize_availability(events, self._redundancy_flags)
 
+    def overhead_summary(self) -> dict:
+        """Mean per-step wall-clock split (train step vs fault-tolerance
+        maintain+save) plus the fabric's accounted maintenance bytes —
+        what the arena-resident refactor is buying per step."""
+        steps = [m["seconds"] for m in self.metrics]
+        over = [m["overhead_seconds"] for m in self.metrics
+                if "overhead_seconds" in m]
+        out = {"steps": len(steps),
+               "step_seconds_mean": float(np.mean(steps)) if steps else 0.0,
+               "overhead_seconds_mean":
+                   float(np.mean(over)) if over else 0.0,
+               "arena_state": self.arena_layout is not None}
+        if self.controller is not None and self.controller.fabric is not None:
+            fab = self.controller.fabric
+            # one parity encode per maintained step (fused or not) under
+            # the default same-interval tiers — the per-step denominator
+            maintains = max(fab.stats["parity_encodes"], 1)
+            out["maintain_bytes_per_step"] = (
+                fab.stats["maintain_bytes_moved"] // maintains)
+            out["arena_resident_maintains"] = \
+                fab.stats["arena_resident_maintains"]
+        return out
+
     def _sample_trace(self, n_steps: int) -> dict[int, list]:
         """MTBF-driven soak schedule for one run(): loop-iteration → events.
         Empty without ``mtbf`` (or without a controller to recover)."""
@@ -184,27 +273,28 @@ class TrainLoop:
                                  []).append(ev)
         return events_at
 
-    def _inject(self, state: TrainState) -> tuple[PyTree, dict]:
-        """One failure event per the configured model (uniform/correlated)."""
+    def _inject(self, state) -> tuple[Any, dict]:
+        """One failure event per the configured model (uniform/correlated).
+        Returns the recovered live value in the state's own form."""
+        live = self._live(state)
         if self.loop_cfg.fail_domain == "uniform":
             lost = self.controller.sample_failure(self.loop_cfg.fail_fraction)
-            return self.controller.on_failure(state.params, lost,
+            return self.controller.on_failure(live, lost,
                                               step=int(state.step))
         lost, failed = self.controller.sample_domain_failure(
             self.loop_cfg.fail_domain)
-        return self.controller.on_failure(state.params, lost,
+        return self.controller.on_failure(live, lost,
                                           failed_devices=failed,
                                           step=int(state.step))
 
-    def inject_failure(self, state: TrainState,
-                       fraction: Optional[float] = None,
-                       ) -> tuple[TrainState, dict]:
+    def inject_failure(self, state, fraction: Optional[float] = None,
+                       ) -> tuple[Any, dict]:
         """Explicit failure injection (for experiments/examples)."""
         assert self.controller is not None, "enable a CheckpointPolicy first"
         if fraction is not None:
             lost = self.controller.sample_failure(fraction)
-            new_params, info = self.controller.on_failure(
-                state.params, lost, step=int(state.step))
+            new_live, info = self.controller.on_failure(
+                self._live(state), lost, step=int(state.step))
         else:
-            new_params, info = self._inject(state)
-        return TrainState(new_params, state.opt_state, state.step), info
+            new_live, info = self._inject(state)
+        return self._with_live(state, new_live), info

@@ -1,4 +1,22 @@
-"""Train state container for the SPMD LM trainer."""
+"""Train state containers for the SPMD LM trainer.
+
+Two live representations:
+
+- :class:`TrainState` — the classic PyTree form (params as a tree of
+  leaf-shaped arrays). Kept as the fallback for non-arena-compatible
+  models (exotic dtypes, custom scorers) behind
+  ``TrainLoopConfig(arena_state=False)``.
+- :class:`ArenaTrainState` — the arena-native form: the canonical live
+  parameters are ONE contiguous f32 buffer laid out by an
+  :class:`~repro.core.arena.ArenaLayout`, and the optimizer moments are
+  flat mirrors of it. The fault-tolerance hot path (the fabric's
+  maintenance sweep and the controller's partial save) consumes
+  ``state.arena`` directly — no per-step ``pack_arena`` — and the jitted
+  train step donates the arena through the optimizer update. The tree
+  form the model's forward pass needs is decoded *inside* the step
+  program; outside jit, :attr:`ArenaTrainState.params` materializes a
+  lazily-cached tree view for analysis/examples (never the hot loop).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -25,3 +43,44 @@ class TrainState:
     def create(cls, params: PyTree, optimizer) -> "TrainState":
         return cls(params=params, opt_state=optimizer.init(params),
                    step=jnp.zeros((), jnp.int32))
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["arena", "opt_state", "step"], meta_fields=["layout"])
+@dataclasses.dataclass
+class ArenaTrainState:
+    """Arena-resident training state: ``arena`` is the canonical live
+    parameter representation (flat f32, ``layout.total_words`` long);
+    ``opt_state`` moment buffers are flat mirrors of it.
+
+    ``layout`` is static metadata (the ArenaLayout is identity-hashed, so
+    the whole training run must thread the same instance — the one the
+    controller's fabric built)."""
+    arena: jnp.ndarray
+    opt_state: OptState
+    step: jnp.ndarray
+    layout: Any = None
+
+    @classmethod
+    def create(cls, arena: jnp.ndarray, optimizer,
+               layout) -> "ArenaTrainState":
+        # moments as flat arenas: the arena is a one-leaf pytree, so
+        # optimizer.init applies unchanged (zeros stay zero on pads)
+        return cls(arena=arena, opt_state=optimizer.init(arena),
+                   step=jnp.zeros((), jnp.int32), layout=layout)
+
+    @property
+    def params(self) -> PyTree:
+        """Lazily-cached tree view of the arena (decoded on first access;
+        analysis/recovery convenience — the hot loop never calls this).
+        The cache is keyed on the arena buffer itself, so reassigning
+        ``state.arena`` in place invalidates it rather than serving
+        stale values."""
+        assert self.layout is not None, \
+            "ArenaTrainState needs its layout to decode params"
+        cached = getattr(self, "_tree_view", None)
+        if cached is None or cached[0] is not self.arena:
+            from repro.core.arena import unpack_arena
+            cached = (self.arena, unpack_arena(self.arena, self.layout))
+            object.__setattr__(self, "_tree_view", cached)
+        return cached[1]
