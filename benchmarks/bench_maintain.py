@@ -29,6 +29,14 @@ not the model):
                        the live tree's bytes fewer), maintenance
                        wall-clock, and bit-equality of the two paths'
                        training losses.
+  maint_telemetry    — trace-driven soak with a live telemetry Recorder:
+                       events.jsonl + Chrome trace + run report (written
+                       under ``--telemetry-out`` when given), clean-step
+                       overhead p50/p95 from the recorded histogram, and
+                       a bit-exactness check of the perturbation ledger's
+                       Thm-3.2/4.1 bounds against ``core/iteration_cost``.
+                       The gated e2e rows above run with the default
+                       NullRecorder — their bytes/step are untouched.
 
 Bytes are the roofline currency here: on this CPU host the in-place save's
 per-leaf eager dispatch overhead exceeds the memcpy it saves at the
@@ -456,7 +464,73 @@ def _e2e_rows(quick: bool) -> list[str]:
     return rows
 
 
-def run(trials: int = 4, quick: bool = False) -> list[str]:
+def _telemetry_rows(quick: bool, out_dir: str = "") -> list[str]:
+    """Soak the reduced LM under an MTBF failure trace with a live
+    Recorder attached: streams ``events.jsonl``, exports the Perfetto
+    trace + run report (kept under ``out_dir`` when given), and asserts
+    the perturbation ledger's bounds are bit-identical to the theory
+    module's. Runs separately from the gated e2e rows, which keep the
+    default NullRecorder and therefore the committed byte baselines."""
+    import os
+
+    from repro.core.iteration_cost import (iteration_cost_bound,
+                                           single_perturbation_bound)
+    from repro.data.pipeline import ShardedLMDataset
+    from repro.sharding import single_device_ctx
+    from repro.telemetry import Recorder, format_report, run_report
+    from repro.training import TrainLoop, TrainLoopConfig
+
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    steps = 12 if quick else 30
+    tmp = None
+    if not out_dir:
+        tmp = tempfile.mkdtemp(prefix="bench_maintain_telemetry_")
+        out_dir = tmp
+    try:
+        rec = Recorder(out_dir=out_dir)
+        ctx = single_device_ctx()
+        loop = TrainLoop(cfg, ctx, loop_cfg=TrainLoopConfig(
+            policy=CheckpointPolicy.scar(fraction=0.125, interval=4),
+            fabric=FabricConfig(elastic=True),
+            mtbf={"device": steps / 2.0}, heal_after=3,
+            recorder=rec, seed=0))
+        state = loop.init_state()
+        ds = ShardedLMDataset(cfg, batch=2, seq=64, ctx=ctx)
+        loop.run(state, iter(ds), steps)
+        # price the faults with reference rates, then hold the ledger to
+        # its contract: every bound bit-identical to core/iteration_cost
+        c, x0_err = 0.9, 10.0
+        rec.ledger.set_rates(c, x0_err)
+        exact = all(
+            e.bound == single_perturbation_bound(e.delta_norm, c,
+                                                 T=e.step, x0_err=x0_err)
+            for e in rec.ledger.entries)
+        if rec.ledger.entries:
+            exact = exact and (
+                rec.ledger.cumulative_bound(steps)
+                == float(iteration_cost_bound(
+                    rec.ledger.delta_series(steps), c, x0_err)))
+        over = loop.overhead_summary()
+        report = run_report(rec, horizon=steps)
+        with open(os.path.join(out_dir, "report.txt"), "w") as f:
+            f.write(format_report(report) + "\n")
+        rec.close()   # trace.json + metrics.json land next to the JSONL
+        return [csv_row(
+            "maint_telemetry", 0.0,
+            f"ledger_bound_exact={bool(exact)};"
+            f"events={len(rec.events)};"
+            f"recoveries={report['recovery']['n_recoveries']};"
+            f"overhead_p50_us={over['overhead_seconds_p50'] * 1e6:.0f};"
+            f"overhead_p95_us={over['overhead_seconds_p95'] * 1e6:.0f};"
+            f"clean_steps={over['overhead_clean_steps']};"
+            f"artifacts={'temp' if tmp is not None else out_dir}")]
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run(trials: int = 4, quick: bool = False,
+        telemetry_out: str = "") -> list[str]:
     rows = _kernel_check_rows(quick)
     params = _reduced_params()
     sweep_rows, _ = _sweep_rows(params, quick)
@@ -464,6 +538,7 @@ def run(trials: int = 4, quick: bool = False) -> list[str]:
     rows.extend(_partial_save_rows(params, quick))
     rows.extend(_store_rows(params, quick))
     rows.extend(_e2e_rows(quick))
+    rows.extend(_telemetry_rows(quick, telemetry_out))
     return rows
 
 
@@ -472,8 +547,12 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="",
                     help="also write rows as JSON (CI perf trajectory)")
+    ap.add_argument("--telemetry-out", default="",
+                    help="keep the soak's telemetry artifacts "
+                         "(events.jsonl, trace.json, metrics.json, "
+                         "report.txt) in this directory")
     args = ap.parse_args()
-    rows = run(quick=args.quick)
+    rows = run(quick=args.quick, telemetry_out=args.telemetry_out)
     print("name,us_per_call,derived")
     for row in rows:
         print(row, flush=True)

@@ -59,12 +59,19 @@ REQUIRED_FLAGS = [
     ("maint_store_arena", "rekeyed_read_exact=True"),
     ("e2e_step_maintain_headline", "arena_fewer_bytes=True"),
     ("e2e_step_maintain_headline", "loss_bit_equal=True"),
+    ("maint_telemetry", "ledger_bound_exact=True"),
 ]
 # wall-clock flags: recorded loudly, never gated (shared CI runners are
 # too noisy — the committed baseline documents the local inversion)
 RECORDED_FLAGS = [
     ("maint_partial_save_headline", "inplace_beats_rewrite_wallclock=True"),
     ("e2e_step_maintain_headline", "resident_overhead_faster=True"),
+]
+# numeric values lifted from the fresh run's derived fields and printed
+# for the job log / perf trajectory — never gated (wall-clock noise)
+RECORDED_VALUES = [
+    ("maint_telemetry", "overhead_p50_us"),
+    ("maint_telemetry", "overhead_p95_us"),
 ]
 
 
@@ -136,6 +143,16 @@ def check(baseline_path: str, fresh_path: str,
         held = name in fresh and flag in fresh[name]["derived"]
         print(f"[recorded] {name}: '{flag}' "
               f"{'held' if held else 'DID NOT HOLD (not gated)'}")
+    for name, key in RECORDED_VALUES:
+        if name not in fresh:
+            print(f"[recorded] {name}: row missing (not gated)")
+            continue
+        try:
+            v = _derived_num(fresh[name], key)
+        except SystemExit:
+            print(f"[recorded] {name}: no '{key}' field (not gated)")
+            continue
+        print(f"[recorded] {name}: {key}={v:.0f} (not gated)")
     if failures:
         print("\nBENCH REGRESSION GUARD FAILED:")
         for f in failures:

@@ -23,6 +23,7 @@ from repro.core.iteration_cost import (estimate_contraction,
 from repro.core.policy import CheckpointPolicy
 from repro.fabric import FabricConfig
 from repro.models.classic import make_model
+from repro.telemetry import Recorder, format_report, run_report
 from repro.training import run_clean, run_with_failure
 
 
@@ -40,9 +41,10 @@ def main():
     # arena-resident (maintain + save over one flat arena, no per-step
     # tree pack inside the fault-tolerance machinery)
     scar = CheckpointPolicy.scar(fraction=0.25, interval=32)
+    rec = Recorder()   # telemetry: events + spans + perturbation ledger
     res = run_with_failure(model, scar, fail_iter=25, fail_fraction=0.5,
                            max_iters=150, clean_losses=clean,
-                           fabric=FabricConfig())
+                           fabric=FabricConfig(), recorder=rec)
     tiers = {k: v for k, v in res["recovery"]["tier_counts"].items() if v}
     print(f"   failure at iter 25 lost 50% of blocks;"
           f" checkpoint-only recovery would apply ||δ'||²="
@@ -72,6 +74,13 @@ def main():
     print(f"   Theorem 3.2 bound: {bound:.1f} iterations (c={c:.3f})")
     saved = trad["iteration_cost"] - res["iteration_cost"]
     print(f"== SCAR saved {saved} iterations vs traditional recovery")
+
+    # 5. the same run through the telemetry layer: the ledger prices each
+    # recovery with the exact bound above; pass out_dir= to Recorder()
+    # for events.jsonl + a Perfetto-loadable trace.json
+    rec.ledger.set_rates(c, x0)
+    print("\n== telemetry run report (SCAR run)")
+    print(format_report(run_report(rec, horizon=150)))
 
 
 if __name__ == "__main__":

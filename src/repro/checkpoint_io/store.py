@@ -48,6 +48,7 @@ import jax
 import numpy as np
 
 from repro.core.blocks import BlockPartition
+from repro.telemetry.recorder import NULL_RECORDER
 
 PyTree = Any
 
@@ -77,7 +78,16 @@ class ShardedCheckpointStore:
         self._q: "queue.Queue" = queue.Queue()
         self._worker: Optional[threading.Thread] = None
         self._worker_error: Optional[BaseException] = None
+        self.recorder = NULL_RECORDER
         os.makedirs(root, exist_ok=True)
+
+    def attach_recorder(self, recorder: Any) -> None:
+        """Late-bind a recorder (events only — the store keeps no stats
+        dict). No-op if ``recorder`` is null or one is already attached."""
+        if recorder is None or not getattr(recorder, "enabled", False) \
+                or self.recorder.enabled:
+            return
+        self.recorder = recorder
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -231,6 +241,9 @@ class ShardedCheckpointStore:
             self._q.put(("write", jobs, step))
         else:
             self._do_write(jobs, step)
+        if self.recorder.enabled:
+            self.recorder.event("mirror", step=int(step), bytes=nbytes,
+                                segments=len(jobs), background=background)
         return nbytes
 
     def write_arena(self, mask, tiles: np.ndarray, data: np.ndarray,
@@ -268,6 +281,9 @@ class ShardedCheckpointStore:
             self._q.put(("write", jobs, step))
         else:
             self._do_write(jobs, step)
+        if self.recorder.enabled:
+            self.recorder.event("mirror", step=int(step), bytes=nbytes,
+                                segments=len(jobs), background=background)
         return nbytes
 
     def write_parity(self, step: int, parity: np.ndarray,
@@ -480,7 +496,11 @@ class ShardedCheckpointStore:
                 p = os.path.join(d, name)
                 if _is_shard_name(name) and p not in keep:
                     os.unlink(p)
-        return int(sum(old_sizes.values()) - new_size)
+        reclaimed = int(sum(old_sizes.values()) - new_size)
+        if self.recorder.enabled:
+            self.recorder.event("compact", reclaimed=reclaimed,
+                                rekeyed=rekey_homes is not None)
+        return reclaimed
 
     def disk_nbytes(self) -> dict[str, int]:
         """On-disk footprint: shard bytes (the append log), the subset of

@@ -44,6 +44,7 @@ from repro.core.norms import get_norm
 from repro.core.policy import CheckpointPolicy, RecoveryMode, SelectionStrategy
 from repro.core.recovery import (apply_failure_and_recover,
                                  perturbation_norms, sample_failure_mask)
+from repro.telemetry.recorder import NULL_RECORDER
 
 PyTree = Any
 
@@ -58,8 +59,14 @@ class FTController:
                  rng: Optional[jax.Array] = None,
                  colocate: tuple = (),
                  fabric: Optional[Any] = None,
-                 inplace_save: bool = True):
+                 inplace_save: bool = True,
+                 recorder: Optional[Any] = None):
         self.policy = policy
+        # unified telemetry (repro.telemetry): the NULL_RECORDER default
+        # keeps every emit point a no-op; a real Recorder receives this
+        # controller's stats as a registered scope, structured save /
+        # failure / recovery events, and the per-recovery ledger entries
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
         # donation-based partial save: scatter only the selected blocks
         # into the running checkpoint (O(k·block_bytes)) instead of
         # rewriting every leaf through a full-size jnp.where
@@ -94,7 +101,10 @@ class FTController:
         if fabric is not None:
             from repro.fabric import CheckpointFabric, FabricConfig
             if isinstance(fabric, FabricConfig):
-                fabric = CheckpointFabric(self.partition, fabric)
+                fabric = CheckpointFabric(self.partition, fabric,
+                                          recorder=self.recorder)
+            elif self.recorder.enabled:
+                fabric.attach_recorder(self.recorder)
             if policy.recovery == RecoveryMode.FULL:
                 # the tier planner is inherently partial (survivors keep
                 # live values); a FULL-recovery baseline must not silently
@@ -103,9 +113,10 @@ class FTController:
                                  "recovery=RecoveryMode.PARTIAL or drop "
                                  "the fabric for a FULL-recovery baseline")
         self.fabric = fabric
-        self.stats = {"saves": 0, "recoveries": 0, "save_seconds": 0.0,
-                      "blocks_saved": 0, "bytes_mirrored": 0,
-                      "save_bytes_moved": 0, "events": []}
+        self.stats = self.recorder.scope("controller", {
+            "saves": 0, "recoveries": 0, "save_seconds": 0.0,
+            "blocks_saved": 0, "bytes_mirrored": 0,
+            "save_bytes_moved": 0, "events": []})
         self._jit_save = jax.jit(partial(
             save_step, policy=self.policy, partition=self.partition,
             norm_fn=self.norm_fn))
@@ -130,6 +141,8 @@ class FTController:
             self._unpack_jit = jax.jit(lambda a: unpack_arena(a, layout))
             self._ckpt_arena = self._pack_jit(params)
         if store is not None:
+            if self.recorder.enabled and hasattr(store, "attach_recorder"):
+                store.attach_recorder(self.recorder)
             kw = {}
             if self.fabric is not None:
                 # domain-keyed disk layout: DISK-tier reads after a domain
@@ -245,6 +258,7 @@ class FTController:
         :meth:`maintain`) so a tree-stepping runner's throwaway pack is
         adopted, not re-copied, when that forced sweep runs."""
         t0 = time.perf_counter()
+        moved0 = self.stats["save_bytes_moved"]
         live = self._live_arena(params)
         full_plain = (self.policy.fraction >= 1.0 and
                       self.policy.strategy != SelectionStrategy.PRIORITY)
@@ -302,9 +316,19 @@ class FTController:
         # the hot path).
         jax.block_until_ready(self._ckpt_arena if self._arena_layout
                               is not None else self.ckpt.values)
+        n_blocks = int(jnp.sum(mask))
+        save_seconds = time.perf_counter() - t0
         self.stats["saves"] += 1
-        self.stats["blocks_saved"] += int(jnp.sum(mask))
-        self.stats["save_seconds"] += time.perf_counter() - t0
+        self.stats["blocks_saved"] += n_blocks
+        self.stats["save_seconds"] += save_seconds
+        if self.recorder.enabled:
+            self.recorder.histogram("controller/save_seconds").observe(
+                save_seconds)
+            self.recorder.event(
+                "save", step=int(step), blocks=n_blocks,
+                bytes_moved=self.stats["save_bytes_moved"] - moved0,
+                seconds=save_seconds,
+                mode="arena" if self._arena_layout is not None else "tree")
         if self.store is not None:
             if self._arena_layout is not None:
                 mask_np = np.asarray(mask)
@@ -518,6 +542,12 @@ class FTController:
                 failed_devices=failed_devices, step=step,
                 persist_failure=persist_failure)
             return self.pack_live(recovered), info
+        if self.recorder.enabled:
+            self.recorder.event(
+                "failure", step=None if step is None else int(step),
+                lost_blocks=int(np.asarray(lost_mask, bool).sum()),
+                failed_devices=(0 if failed_devices is None
+                                else int(np.asarray(failed_devices).size)))
         ckpt = self.ckpt
         if self.store is not None and getattr(self.store, "must_reload", False):
             values = self.store.read_all()
@@ -551,8 +581,19 @@ class FTController:
             recovered, info = apply_failure_and_recover(
                 params, ckpt, lost_mask, self.policy.recovery, self.partition)
         self.stats["recoveries"] += 1
-        return recovered, {k: (float(v) if hasattr(v, "item") else v)
-                           for k, v in info.items()}
+        out = {k: (float(v) if hasattr(v, "item") else v)
+               for k, v in info.items()}
+        if self.recorder.enabled:
+            # ledger entry + structured recovery event: the measured
+            # ||δ'||² prices this failure in Thm-3.2/4.1 iterations
+            self.recorder.record_recovery(
+                step=None if step is None else int(step),
+                lost_blocks=int(out.get("lost_blocks", 0)),
+                tier_counts=out.get("tier_counts"),
+                applied_sq=float(out.get("applied_sq", 0.0)),
+                tier_sq=out.get("tier_sq"),
+                failed_devices=out.get("failed_devices", 0))
+        return recovered, out
 
     # -- analysis helpers ---------------------------------------------------
 

@@ -41,6 +41,7 @@ from repro.fabric.placement import ClusterView, rebalance_homes, rehome_blocks
 from repro.fabric.replica import ReplicaSet
 from repro.fabric.tiers import TieredRecovery
 from repro.sharding.partition import block_device_homes
+from repro.telemetry.recorder import NULL_RECORDER
 
 PyTree = Any
 
@@ -71,8 +72,10 @@ class FabricConfig:
 class CheckpointFabric:
     def __init__(self, partition: BlockPartition,
                  cfg: Optional[FabricConfig] = None,
-                 homes: Optional[np.ndarray] = None):
+                 homes: Optional[np.ndarray] = None,
+                 recorder: Optional[Any] = None):
         self.cfg = cfg or FabricConfig()
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
         self.partition = partition
         self.domains = FailureDomainMap(self.cfg.n_devices,
                                         self.cfg.devices_per_host,
@@ -116,11 +119,23 @@ class CheckpointFabric:
         # (arena-resident training state): every sweep from then on is
         # pack-free and the accounting switches to the resident model
         self.live_arena_mode = False
-        self.stats = {"replica_refreshes": 0, "parity_encodes": 0,
-                      "recoveries": 0, "rehomes": 0, "heals": 0,
-                      "fused_maintains": 0, "arena_maintains": 0,
-                      "arena_resident_maintains": 0, "live_packs": 0,
-                      "maintain_bytes_moved": 0}
+        self.stats = self.recorder.scope("fabric", {
+            "replica_refreshes": 0, "parity_encodes": 0,
+            "recoveries": 0, "rehomes": 0, "heals": 0,
+            "fused_maintains": 0, "arena_maintains": 0,
+            "arena_resident_maintains": 0, "live_packs": 0,
+            "maintain_bytes_moved": 0})
+
+    def attach_recorder(self, recorder: Any) -> None:
+        """Late-bind a recorder (controller attach path for prebuilt
+        fabrics). No-op if ``recorder`` is null or one is already live —
+        the stats dict is re-registered by reference, so existing readers
+        keep working."""
+        if recorder is None or not getattr(recorder, "enabled", False) \
+                or self.recorder.enabled:
+            return
+        self.recorder = recorder
+        self.stats = recorder.scope("fabric", self.stats)
 
     @property
     def homes(self) -> np.ndarray:
@@ -167,24 +182,36 @@ class CheckpointFabric:
         # controller, which implies the layout exists here)
         live = as_live_arena(params, self.arena_layout)
         due_replica, due_parity = self.maintenance_due(step, force=force)
-        if self.arena_layout is not None and (
-                (due_replica and due_parity)
-                or (live is not None and (due_replica or due_parity))):
-            self._arena_maintain(step, params, ckpt_values,
-                                 own_live=own_live)
-        elif self.cfg.fused and due_replica and due_parity:
-            self._fused_maintain(step, params, ckpt_values)
-        else:
-            t = self._traffic_model()
-            if due_replica:
-                self.replicas.refresh(step, params)
-                self.stats["replica_refreshes"] += 1
-                self.stats["maintain_bytes_moved"] += t["replica_pass"]
-            if due_parity:
-                self.parity.encode(step, params)
-                self.stats["parity_encodes"] += 1
-                self.stats["maintain_bytes_moved"] += t["parity_pass"]
+        b0 = self.stats["maintain_bytes_moved"]
+        mode = "components"
+        with self.recorder.span("maintain", step=step,
+                                fence=self.block_until_maintained):
+            if self.arena_layout is not None and (
+                    (due_replica and due_parity)
+                    or (live is not None and (due_replica or due_parity))):
+                self._arena_maintain(step, params, ckpt_values,
+                                     own_live=own_live)
+                mode = ("arena_resident" if self.live_arena_mode
+                        and live is not None and not own_live else "arena")
+            elif self.cfg.fused and due_replica and due_parity:
+                self._fused_maintain(step, params, ckpt_values)
+                mode = "fused"
+            else:
+                t = self._traffic_model()
+                if due_replica:
+                    self.replicas.refresh(step, params)
+                    self.stats["replica_refreshes"] += 1
+                    self.stats["maintain_bytes_moved"] += t["replica_pass"]
+                if due_parity:
+                    self.parity.encode(step, params)
+                    self.stats["parity_encodes"] += 1
+                    self.stats["maintain_bytes_moved"] += t["parity_pass"]
         self.last_maintained_step = step
+        if self.recorder.enabled:
+            self.recorder.event(
+                "maintain", step=step, mode=mode,
+                bytes_moved=self.stats["maintain_bytes_moved"] - b0,
+                replica=due_replica, parity=due_parity)
 
     def _fused_maintain(self, step: int, params: PyTree,
                         ckpt_values: Optional[PyTree]) -> None:
@@ -510,11 +537,14 @@ class CheckpointFabric:
         self.planner.rehome()
         self.last_maintained_step = step
         self.stats["rehomes"] += 1
-        return {"rehomed_blocks": int(displaced.size),
-                "alive_devices": self.view.n_alive_devices,
-                "alive_hosts": self.view.n_alive_hosts,
-                "parity_groups": (self.parity.n_groups
-                                  if self.parity is not None else 0)}
+        out = {"rehomed_blocks": int(displaced.size),
+               "alive_devices": self.view.n_alive_devices,
+               "alive_hosts": self.view.n_alive_hosts,
+               "parity_groups": (self.parity.n_groups
+                                 if self.parity is not None else 0)}
+        if self.recorder.enabled:
+            self.recorder.event("rehome", step=step, **out)
+        return out
 
     # -- healing -------------------------------------------------------------
 
@@ -532,6 +562,9 @@ class CheckpointFabric:
             return info
         self.stats["heals"] += 1
         if not self.cfg.elastic:
+            if self.recorder.enabled:
+                self.recorder.event("heal", kind=kind, index=int(index),
+                                    step=step, **info)
             return info
         at = int(step) if step is not None else self.last_maintained_step
         moved = rebalance_homes(self.view)
@@ -551,4 +584,7 @@ class CheckpointFabric:
         self.planner.rehome()
         info["rebalanced_blocks"] = int(moved.size)
         info["alive_hosts"] = self.view.n_alive_hosts
+        if self.recorder.enabled:
+            self.recorder.event("heal", domain_kind=kind,
+                                domain_index=int(index), step=step, **info)
         return info

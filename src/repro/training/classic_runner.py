@@ -22,6 +22,7 @@ All return loss trajectories + the empirical iteration cost
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import time
 from typing import Any, Optional
@@ -36,6 +37,7 @@ from repro.core.perturb import (adversarial_perturbation, random_perturbation,
 from repro.core.policy import CheckpointPolicy
 from repro.core.blocks import partition_pytree, tree_sq_norm
 from repro.models.classic import IterativeModel
+from repro.telemetry.recorder import NULL_RECORDER
 
 PyTree = Any
 
@@ -113,7 +115,8 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
                      clean_losses: Optional[list] = None,
                      store=None, fabric=None,
                      fail_domain: str = "uniform",
-                     arena_state: bool = True) -> dict:
+                     arena_state: bool = True,
+                     recorder=None) -> dict:
     """Full SCAR lifecycle on one classic model (Figures 7/8).
 
     The failure destroys ``fail_fraction`` of parameter blocks (uniformly at
@@ -134,10 +137,12 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
     if fail_domain != "uniform" and fabric is None:
         raise ValueError("correlated fail_domain needs a fabric")
     key = _keys(seed)
+    rec = recorder if recorder is not None else NULL_RECORDER
     p = model.init(jax.random.PRNGKey(1))
     ctl = FTController(p, policy, norm_aux=model.norm_aux, store=store,
                        rng=jax.random.PRNGKey(seed + 13),
-                       colocate=model.colocate, fabric=fabric)
+                       colocate=model.colocate, fabric=fabric,
+                       recorder=recorder)
     use_arena = arena_state and ctl.arena_ready
     losses = []
     recovery_info = {}
@@ -162,22 +167,27 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
             ctl.fabric.block_until_maintained()
         maint_seconds += time.perf_counter() - t0
         if i == fail_iter:
-            if fail_domain == "uniform":
-                lost = ctl.sample_failure(fail_fraction)
-                p, recovery_info = ctl.on_failure(p, lost, step=i)
-            else:
-                lost, failed = ctl.sample_domain_failure(fail_domain)
-                p, recovery_info = ctl.on_failure(p, lost,
-                                                  failed_devices=failed,
-                                                  step=i)
+            with rec.span("recovery", step=i, domain=fail_domain):
+                if fail_domain == "uniform":
+                    lost = ctl.sample_failure(fail_fraction)
+                    p, recovery_info = ctl.on_failure(p, lost, step=i)
+                else:
+                    lost, failed = ctl.sample_domain_failure(fail_domain)
+                    p, recovery_info = ctl.on_failure(p, lost,
+                                                      failed_devices=failed,
+                                                      step=i)
         losses.append(float(model.loss(p)))
     if clean_losses is None:
         clean_losses = run_clean(model, max_iters, seed)["losses"]
     cost = empirical_iteration_cost(losses, clean_losses, model.eps)
+    # snapshot (not alias) the live stats: the controller/fabric keep
+    # mutating their dicts if reused after return — results must not
+    # change retroactively
     return {"losses": losses, "iteration_cost": cost,
-            "recovery": recovery_info, "controller_stats": ctl.stats,
-            "fabric_stats": (ctl.fabric.stats if ctl.fabric is not None
-                             else None),
+            "recovery": copy.deepcopy(recovery_info),
+            "controller_stats": copy.deepcopy(ctl.stats),
+            "fabric_stats": (copy.deepcopy(ctl.fabric.stats)
+                             if ctl.fabric is not None else None),
             "arena_state": use_arena,
             "maint_seconds_per_iter": maint_seconds / max_iters,
             "kappa_perturbed": iterations_to_eps(losses, model.eps),
@@ -189,7 +199,8 @@ def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
                    mtbf: Optional[dict] = None, trace=None,
                    heal_after: Optional[int] = None,
                    clean_losses: Optional[list] = None,
-                   store=None, arena_state: bool = True) -> dict:
+                   store=None, arena_state: bool = True,
+                   recorder=None) -> dict:
     """Degraded-mode soak on one classic model: a multi-event failure trace
     (explicit ``trace`` list of :class:`FailureEvent`, or MTBF-sampled from
     ``mtbf``), recovered through the fabric's tier planner.
@@ -209,10 +220,12 @@ def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
     if fabric is None:
         raise ValueError("run_with_trace needs a fabric")
     key = _keys(seed)
+    rec = recorder if recorder is not None else NULL_RECORDER
     p = model.init(jax.random.PRNGKey(1))
     ctl = FTController(p, policy, norm_aux=model.norm_aux, store=store,
                        rng=jax.random.PRNGKey(seed + 13),
-                       colocate=model.colocate, fabric=fabric)
+                       colocate=model.colocate, fabric=fabric,
+                       recorder=recorder)
     if trace is None:
         if mtbf is None:
             raise ValueError("pass an explicit trace or mtbf means")
@@ -237,13 +250,16 @@ def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
         ctl.maintain(i, live, own_live=packed)
         ctl.maybe_checkpoint(i, live, own_live=packed)
         for ev in events_at.pop(i, []):
-            p, info = ctl.on_domain_event(p, ev.kind, ev.index, step=i)
+            with rec.span("recovery", step=i,
+                          domain=f"{ev.kind}:{ev.index}"):
+                p, info = ctl.on_domain_event(p, ev.kind, ev.index, step=i)
             info["step"] = i
             events_out.append(info)
             if heal_after is not None and not info.get("skipped"):
                 heal_at.setdefault(i + heal_after, []).append(ev)
         for ev in heal_at.pop(i, []):
-            ctl.heal_domain(ev.kind, ev.index, p, step=i)
+            with rec.span("heal", step=i, domain=f"{ev.kind}:{ev.index}"):
+                ctl.heal_domain(ev.kind, ev.index, p, step=i)
         # placement-health flag AFTER this step's events/heals — the
         # availability report turns these into time-to-full-redundancy
         redundancy_full.append(ctl.fabric.redundancy_state()["full"])
@@ -252,8 +268,12 @@ def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
         clean_losses = run_clean(model, max_iters, seed)["losses"]
     cost = empirical_iteration_cost(losses, clean_losses, model.eps)
     from repro.fabric.availability import summarize_availability
+    # snapshot the live stats/events (see run_with_failure): the
+    # controller keeps appending to ctl.stats["events"] if reused
     return {"losses": losses, "iteration_cost": cost,
-            "events": events_out, "controller_stats": ctl.stats,
+            "events": copy.deepcopy(events_out),
+            "controller_stats": copy.deepcopy(ctl.stats),
+            "fabric_stats": copy.deepcopy(ctl.fabric.stats),
             "availability": summarize_availability(events_out,
                                                    redundancy_full),
             "kappa_perturbed": iterations_to_eps(losses, model.eps),

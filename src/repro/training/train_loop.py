@@ -46,6 +46,7 @@ from repro.core.policy import CheckpointPolicy
 from repro.models import get_model
 from repro.optim.optimizers import Optimizer, adamw
 from repro.sharding.partition import DistContext, named_shardings
+from repro.telemetry.recorder import NULL_RECORDER, Histogram
 from repro.training.train_state import ArenaTrainState, TrainState
 
 PyTree = Any
@@ -75,6 +76,10 @@ class TrainLoopConfig:
     # later (re-admitting their devices to the placement engine)
     mtbf: Optional[dict] = None     # e.g. {"host": 200.0, "device": 80.0}
     heal_after: Optional[int] = None
+    # telemetry sink (repro.telemetry.Recorder): events/spans/ledger for
+    # the whole loop + its controller/fabric/store. Default NULL_RECORDER —
+    # every emit point is a no-op and the hot path is unchanged.
+    recorder: Optional[Any] = None
     log_every: int = 10
     seed: int = 0
 
@@ -103,6 +108,15 @@ class TrainLoop:
         self.metrics: list[dict] = []
         self._redundancy_flags: list[bool] = []
         self.arena_layout = None          # set when the arena path engages
+        self.recorder = (self.loop_cfg.recorder
+                         if self.loop_cfg.recorder is not None
+                         else NULL_RECORDER)
+        # clean-step maintenance-overhead distribution: feeds the
+        # p50/p95/max in overhead_summary(). A real recorder shares its
+        # named histogram; otherwise a private one (same type, no sink)
+        self._overhead_hist = (
+            self.recorder.histogram("train/overhead_seconds")
+            if self.recorder.enabled else Histogram())
 
         from repro.training.step import make_train_step
         self._train_step = jax.jit(
@@ -124,7 +138,8 @@ class TrainLoop:
         if self.loop_cfg.policy is not None:
             self.controller = FTController(params, self.loop_cfg.policy,
                                            store=self._store,
-                                           fabric=self.loop_cfg.fabric)
+                                           fabric=self.loop_cfg.fabric,
+                                           recorder=self.loop_cfg.recorder)
         if (self.loop_cfg.arena_state and self.controller is not None
                 and self.controller.arena_ready and self.ctx.mesh is None):
             # arena-resident training state: pack once here, never again —
@@ -171,8 +186,9 @@ class TrainLoop:
                    else self._train_step)
         for i in range(1, n_steps + 1):
             t0 = time.perf_counter()
-            state, loss = step_fn(state, next(it))
-            loss = float(loss)
+            with self.recorder.span("train_step", step=i):
+                state, loss = step_fn(state, next(it))
+                loss = float(loss)   # fences on the loss output
             dt = time.perf_counter() - t0
             rec = {"step": int(state.step), "loss": loss, "seconds": dt}
 
@@ -183,8 +199,10 @@ class TrainLoop:
                 tm0 = time.perf_counter()
                 live = self._live(state)
                 self.controller.maintain(int(state.step), live)
-                if self.controller.maybe_checkpoint(int(state.step), live):
-                    rec["checkpointed"] = True
+                with self.recorder.span("save", step=int(state.step)):
+                    if self.controller.maybe_checkpoint(int(state.step),
+                                                        live):
+                        rec["checkpointed"] = True
                 # per-step fault-tolerance overhead (maintain + save),
                 # excluding the rare failure/heal events timed below —
                 # the examples report this next to the step time. Block
@@ -199,8 +217,10 @@ class TrainLoop:
                         self.controller.fabric.block_until_maintained()
                     rec["overhead_seconds"] = time.perf_counter() - tm0
                 for ev in events_at.pop(i, []):
-                    live, info = self.controller.on_domain_event(
-                        live, ev.kind, ev.index, step=int(state.step))
+                    with self.recorder.span("recovery", step=int(state.step),
+                                            domain=f"{ev.kind}:{ev.index}"):
+                        live, info = self.controller.on_domain_event(
+                            live, ev.kind, ev.index, step=int(state.step))
                     state = self._with_live(state, live)
                     rec.setdefault("failures", []).append(info)
                     if (self.loop_cfg.heal_after is not None
@@ -208,14 +228,24 @@ class TrainLoop:
                         heal_at.setdefault(i + self.loop_cfg.heal_after,
                                            []).append(ev)
                 for ev in heal_at.pop(i, []):
-                    heal = self.controller.heal_domain(
-                        ev.kind, ev.index, live, step=int(state.step))
+                    with self.recorder.span("heal", step=int(state.step),
+                                            domain=f"{ev.kind}:{ev.index}"):
+                        heal = self.controller.heal_domain(
+                            ev.kind, ev.index, live, step=int(state.step))
                     rec.setdefault("heals", []).append(heal)
                 if (self.loop_cfg.fail_prob > 0
                         and self._rng.random() < self.loop_cfg.fail_prob):
-                    new_live, info = self._inject(state)
+                    with self.recorder.span("recovery",
+                                            step=int(state.step)):
+                        new_live, info = self._inject(state)
                     state = self._with_live(state, new_live)
                     rec["failure"] = info
+                # clean-step overhead sample: failure/heal steps are
+                # excluded so the distribution answers "what does fault
+                # tolerance cost when nothing is on fire"
+                if "overhead_seconds" in rec and "failures" not in rec \
+                        and "heals" not in rec and "failure" not in rec:
+                    self._overhead_hist.observe(rec["overhead_seconds"])
                 if self.controller.fabric is not None:
                     # per-step placement health — availability_summary()
                     # folds these into the soak goodput report
@@ -234,19 +264,32 @@ class TrainLoop:
         from repro.fabric.availability import summarize_availability
         events = (self.controller.stats["events"]
                   if self.controller is not None else [])
-        return summarize_availability(events, self._redundancy_flags)
+        out = summarize_availability(events, self._redundancy_flags)
+        if self.recorder.enabled:
+            led = self.recorder.ledger.summary()
+            out["telemetry"] = {
+                "events_total": len(self.recorder.events),
+                "recoveries_priced": led["n_events"],
+                "iterations_owed_total": led["iterations_owed_total"]}
+        return out
 
     def overhead_summary(self) -> dict:
-        """Mean per-step wall-clock split (train step vs fault-tolerance
+        """Per-step wall-clock split (train step vs fault-tolerance
         maintain+save) plus the fabric's accounted maintenance bytes —
-        what the arena-resident refactor is buying per step."""
+        what the arena-resident refactor is buying per step. The
+        ``overhead_seconds_*`` distribution covers **clean steps only**
+        (failure/heal-event steps excluded at observe time) and comes
+        from the telemetry histogram, so the p95 a dashboards reads and
+        the one reported here are the same samples."""
         steps = [m["seconds"] for m in self.metrics]
-        over = [m["overhead_seconds"] for m in self.metrics
-                if "overhead_seconds" in m]
+        over = self._overhead_hist.summary()
         out = {"steps": len(steps),
                "step_seconds_mean": float(np.mean(steps)) if steps else 0.0,
-               "overhead_seconds_mean":
-                   float(np.mean(over)) if over else 0.0,
+               "overhead_seconds_mean": over["mean"],
+               "overhead_seconds_p50": over["p50"],
+               "overhead_seconds_p95": over["p95"],
+               "overhead_seconds_max": over["max"],
+               "overhead_clean_steps": over["count"],
                "arena_state": self.arena_layout is not None}
         if self.controller is not None and self.controller.fabric is not None:
             fab = self.controller.fabric

@@ -1,0 +1,319 @@
+"""Unified telemetry layer: recorder/event bus, span tracer, ledger, report.
+
+Covers the PR's acceptance points: the events.jsonl round trip, Chrome
+trace-export validity (Perfetto-loadable complete events with contained
+nesting), the perturbation ledger's bounds bit-matching
+``core/iteration_cost``, the NullRecorder zero-overhead default, and the
+classic runners' stats-snapshot guarantee.
+"""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.controller import FTController
+from repro.core.iteration_cost import (iteration_cost_bound,
+                                       single_perturbation_bound)
+from repro.core.policy import CheckpointPolicy
+from repro.fabric import CheckpointFabric, FabricConfig
+from repro.models.classic import make_model
+from repro.telemetry import (EVENT_SCHEMA, NULL_RECORDER, Histogram,
+                             NullRecorder, PerturbationLedger, Recorder,
+                             SpanTracer, format_report, read_events_jsonl,
+                             run_report)
+from repro.training import run_with_failure, run_with_trace
+
+
+# ---------------------------------------------------------------------------
+# recorder + event bus
+# ---------------------------------------------------------------------------
+
+def test_events_jsonl_round_trip(tmp_path):
+    out = tmp_path / "telemetry"
+    rec = Recorder(out_dir=str(out))
+    rec.event("failure", step=3, lost_blocks=np.int64(4), failed_devices=2)
+    rec.event("maintain", step=np.int32(3), mode="arena",
+              bytes_moved=1024, replica=True, parity=True)
+    rec.event("save", step=4, blocks=2, bytes_moved=np.float64(8.0),
+              seconds=0.01, mode="arena")
+    rec.close()
+    back = read_events_jsonl(str(out / "events.jsonl"))
+    assert back == rec.events
+    # stamped fields + monotone sequence, and every value JSON-native
+    assert [e["seq"] for e in back] == [0, 1, 2]
+    assert all(isinstance(e["ts"], float) for e in back)
+    assert back[0]["lost_blocks"] == 4 and back[1]["mode"] == "arena"
+    json.dumps(back)   # fully serializable after the round trip
+
+
+def test_event_kinds_documented():
+    """Every kind the instrumented components emit is in EVENT_SCHEMA."""
+    m = make_model("qp")
+    rec = Recorder()
+    run_with_failure(m, CheckpointPolicy(fraction=0.5, full_interval=4),
+                     fail_iter=6, fail_fraction=0.5, max_iters=12,
+                     fabric=FabricConfig(n_devices=8), recorder=rec)
+    kinds = {e["kind"] for e in rec.events}
+    assert kinds  # the run must actually emit
+    assert kinds <= set(EVENT_SCHEMA)
+
+
+def test_scope_registration_by_reference():
+    rec = Recorder()
+    stats = rec.scope("fabric", {"x": 0})
+    stats["x"] = 7
+    assert rec.metrics()["scopes"]["fabric"]["x"] == 7
+    # collisions get a unique suffix instead of silently aliasing
+    other = rec.scope("fabric", {"x": 1})
+    assert other is not stats
+    assert set(rec.scopes) == {"fabric", "fabric#2"}
+    # metrics() is a snapshot, not a live view
+    snap = rec.metrics()
+    stats["x"] = 99
+    assert snap["scopes"]["fabric"]["x"] == 7
+
+
+def test_background_thread_events_are_serialized(tmp_path):
+    """The store's mirror events fire from its worker thread — the bus
+    must keep the JSONL lines whole and the seq unique under that."""
+    import threading
+    rec = Recorder(out_dir=str(tmp_path / "t"))
+
+    def emit(k):
+        for i in range(50):
+            rec.event("mirror", step=i, bytes=k, segments=1,
+                      background=True)
+
+    threads = [threading.Thread(target=emit, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    rec.close()
+    back = read_events_jsonl(str(tmp_path / "t" / "events.jsonl"))
+    assert len(back) == 200
+    assert sorted(e["seq"] for e in back) == list(range(200))
+
+
+# ---------------------------------------------------------------------------
+# span tracer + Chrome trace export
+# ---------------------------------------------------------------------------
+
+def test_spans_nest_and_export_chrome_trace(tmp_path):
+    tracer = SpanTracer()
+    with tracer.span("outer", step=1):
+        with tracer.span("inner"):
+            time.sleep(0.002)
+    doc = tracer.chrome_trace()
+    assert set(doc) >= {"traceEvents", "displayTimeUnit"}
+    evs = {e["name"]: e for e in doc["traceEvents"]}
+    assert set(evs) == {"outer", "inner"}
+    for e in evs.values():   # complete events, µs timestamps
+        assert e["ph"] == "X"
+        assert e["dur"] >= 0 and e["ts"] >= 0
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+    # containment: the inner span lies strictly inside the outer one, so
+    # Perfetto renders the nesting on one track
+    outer, inner = evs["outer"], evs["inner"]
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-6
+    assert evs["outer"]["args"] == {"step": 1}
+    # the written file is valid JSON with the same events
+    path = tracer.write_chrome_trace(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        assert len(json.load(f)["traceEvents"]) == 2
+
+
+def test_span_fence_runs_before_end_timestamp():
+    """The fence (device sync) must be *inside* the measured interval."""
+    tracer = SpanTracer()
+    with tracer.span("maintain", fence=lambda: time.sleep(0.02)):
+        pass
+    (dur,) = tracer.durations("maintain")
+    assert dur >= 0.02
+
+
+def test_span_fence_accepts_arrays():
+    import jax.numpy as jnp
+    tracer = SpanTracer()
+    x = jnp.ones((8,))
+    with tracer.span("maintain", fence=x * 2):
+        pass
+    assert tracer.durations("maintain")
+
+
+# ---------------------------------------------------------------------------
+# perturbation ledger: bounds bit-match core/iteration_cost
+# ---------------------------------------------------------------------------
+
+def test_ledger_bounds_bit_match_iteration_cost():
+    led = PerturbationLedger(c=0.9, x0_err=10.0)
+    led.record(step=5, lost_blocks=3, tier_counts={"RUNNING_CKPT": 3},
+               applied_sq=0.25)
+    led.record(step=12, lost_blocks=1, tier_counts={"PEER_REPLICA": 1},
+               applied_sq=0.0)
+    for e in led.entries:
+        assert e.bound == single_perturbation_bound(
+            e.delta_norm, 0.9, T=e.step, x0_err=10.0)
+    assert led.cumulative_bound(20) == float(iteration_cost_bound(
+        led.delta_series(20), 0.9, 10.0))
+    # the dense series carries each event's ‖δ'‖ at its iteration
+    dense = led.delta_series(20)
+    assert len(dense) == 21
+    assert dense[5] == pytest.approx(0.5) and dense[12] == 0.0
+    owed = led.iterations_owed()
+    assert owed == sorted(owed)   # cumulative series is monotone
+
+
+def test_ledger_backfills_bounds_on_set_rates():
+    led = PerturbationLedger()
+    e = led.record(step=7, lost_blocks=2, tier_counts=None, applied_sq=4.0)
+    assert e.bound is None and led.cumulative_bound() is None
+    led.set_rates(0.8, 5.0)
+    assert e.bound == single_perturbation_bound(2.0, 0.8, T=7, x0_err=5.0)
+    assert led.summary()["iterations_owed_total"] == pytest.approx(e.bound)
+
+
+def test_record_recovery_feeds_ledger_and_bus():
+    rec = Recorder()
+    rec.record_recovery(step=9, lost_blocks=4,
+                        tier_counts={"PARITY": 4}, applied_sq=1.0)
+    (entry,) = rec.ledger.entries
+    assert entry.delta_norm == 1.0 and entry.source_tiers == {"PARITY": 4}
+    (ev,) = rec.events
+    assert ev["kind"] == "recovery" and ev["tier_counts"] == {"PARITY": 4}
+
+
+# ---------------------------------------------------------------------------
+# NullRecorder: the zero-overhead default
+# ---------------------------------------------------------------------------
+
+def test_null_recorder_is_allocation_free_singletons():
+    assert NULL_RECORDER.enabled is False
+    assert isinstance(NULL_RECORDER, NullRecorder)
+    # shared singletons, no per-call allocation
+    assert NULL_RECORDER.span("a") is NULL_RECORDER.span("b")
+    assert NULL_RECORDER.histogram("x") is NULL_RECORDER.counter("y")
+    d = {"k": 1}
+    assert NULL_RECORDER.scope("s", d) is d
+    with NULL_RECORDER.span("noop", fence=lambda: 1 / 0):
+        pass               # the fence must never run on the null path
+    NULL_RECORDER.event("anything", x=1)
+    NULL_RECORDER.record_recovery(step=1, lost_blocks=1,
+                                  tier_counts=None, applied_sq=0.0)
+    assert NULL_RECORDER.metrics() == {}
+
+
+def test_components_default_to_null_recorder():
+    m = make_model("qp")
+    p = m.init(__import__("jax").random.PRNGKey(1))
+    ctl = FTController(p, CheckpointPolicy(fraction=0.5, full_interval=4),
+                       fabric=FabricConfig(n_devices=8))
+    assert ctl.recorder is NULL_RECORDER
+    assert ctl.fabric.recorder is NULL_RECORDER
+    # stats stay plain dicts, registered nowhere
+    assert isinstance(ctl.stats, dict) and isinstance(ctl.fabric.stats, dict)
+
+
+def test_fabric_attach_recorder_rebinds_stats():
+    m = make_model("qp")
+    p = m.init(__import__("jax").random.PRNGKey(1))
+    from repro.core.blocks import partition_pytree
+    part = partition_pytree(p, 16)
+    fab = CheckpointFabric(part, FabricConfig(n_devices=8))
+    stats = fab.stats
+    rec = Recorder()
+    fab.attach_recorder(rec)
+    assert fab.recorder is rec
+    assert rec.scopes["fabric"] is stats     # same dict, now registered
+    fab.attach_recorder(Recorder())          # second attach: no-op
+    assert fab.recorder is rec
+    fab2 = CheckpointFabric(part, FabricConfig(n_devices=8))
+    fab2.attach_recorder(NULL_RECORDER)      # null attach: no-op
+    assert fab2.recorder is NULL_RECORDER
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: instrumented runs, snapshots, report
+# ---------------------------------------------------------------------------
+
+def test_run_with_failure_emits_and_prices(tmp_path):
+    m = make_model("qp")
+    rec = Recorder(out_dir=str(tmp_path / "t"))
+    res = run_with_failure(m, CheckpointPolicy(fraction=0.5,
+                                               full_interval=4),
+                           fail_iter=8, fail_fraction=0.5, max_iters=16,
+                           fabric=FabricConfig(n_devices=8), recorder=rec)
+    kinds = {e["kind"] for e in rec.events}
+    assert {"failure", "recovery", "maintain", "save"} <= kinds
+    # the ledger entry mirrors the recovery diagnostics exactly
+    (entry,) = rec.ledger.entries
+    assert entry.applied_sq == pytest.approx(
+        float(res["recovery"]["applied_sq"]))
+    assert entry.lost_blocks == int(res["recovery"]["lost_blocks"])
+    rec.ledger.set_rates(0.9, 10.0)
+    assert entry.bound == single_perturbation_bound(
+        entry.delta_norm, 0.9, T=8, x0_err=10.0)
+    rec.close()
+    # all three artifacts land
+    for name in ("events.jsonl", "trace.json", "metrics.json"):
+        assert (tmp_path / "t" / name).exists()
+    report = run_report(rec, horizon=16)
+    assert report["recovery"]["n_recoveries"] == 1
+    assert report["ledger"]["cumulative_bound"] == float(
+        iteration_cost_bound(rec.ledger.delta_series(16), 0.9, 10.0))
+    assert "iterations owed" in format_report(report)
+
+
+def test_classic_runner_results_are_snapshots():
+    """Post-run mutation of the live controller/fabric stats must not
+    corrupt the returned result dicts."""
+    m = make_model("qp")
+    rec = Recorder()
+    res = run_with_failure(m, CheckpointPolicy(fraction=0.5,
+                                               full_interval=4),
+                           fail_iter=6, fail_fraction=0.5, max_iters=12,
+                           fabric=FabricConfig(n_devices=8), recorder=rec)
+    # the recorder scope IS the controller's live dict — mutate it
+    live_ctl = rec.scopes["controller"]
+    live_fab = rec.scopes["fabric"]
+    assert res["controller_stats"]["saves"] == live_ctl["saves"]
+    live_ctl["saves"] += 100
+    live_fab["maintain_bytes_moved"] += 10 ** 9
+    live_ctl["events"].append({"poison": True})
+    assert res["controller_stats"]["saves"] == live_ctl["saves"] - 100
+    assert res["fabric_stats"]["maintain_bytes_moved"] \
+        == live_fab["maintain_bytes_moved"] - 10 ** 9
+    assert all("poison" not in e for e in res["controller_stats"]["events"])
+
+
+def test_run_with_trace_snapshots_events():
+    m = make_model("qp")
+    rec = Recorder()
+    res = run_with_trace(m, CheckpointPolicy(fraction=0.5, full_interval=4),
+                         fabric=FabricConfig(n_devices=8, elastic=True),
+                         max_iters=20, mtbf={"device": 8.0}, recorder=rec)
+    live = rec.scopes["controller"]
+    n_before = len(res["controller_stats"]["events"])
+    live["events"].append({"poison": True})
+    assert len(res["controller_stats"]["events"]) == n_before
+    assert "fabric_stats" in res
+
+
+def test_report_on_null_recorder_is_well_formed():
+    report = run_report(NULL_RECORDER)
+    assert report["events"]["total"] == 0
+    assert report["ledger"] is None
+    assert "telemetry: 0 events" in format_report(report)
+
+
+def test_histogram_summary_percentiles():
+    h = Histogram()
+    for v in [1.0, 2.0, 3.0, 4.0, 100.0]:
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 5 and s["max"] == 100.0
+    assert s["p50"] == 3.0
+    assert s["p95"] == pytest.approx(
+        float(np.percentile([1, 2, 3, 4, 100], 95)))
