@@ -29,6 +29,13 @@ not the model):
                        the live tree's bytes fewer), maintenance
                        wall-clock, and bit-equality of the two paths'
                        training losses.
+  maint_overlap_*    — sync vs async (double-buffered, deferred-fence)
+                       every-step maintenance on the reduced LM:
+                       clean-step overhead p50 per mode, bit-equality
+                       of losses + running checkpoint, fraction of the
+                       async sweep hidden under the next step's compute
+                       (``overlap_efficiency``), and maintain-span /
+                       train-step span overlap counts from the tracer.
   maint_telemetry    — trace-driven soak with a live telemetry Recorder:
                        events.jsonl + Chrome trace + run report (written
                        under ``--telemetry-out`` when given), clean-step
@@ -464,6 +471,91 @@ def _e2e_rows(quick: bool) -> list[str]:
     return rows
 
 
+def _overlap_rows(quick: bool) -> list[str]:
+    """Sync vs async every-step maintenance on the reduced LM.
+
+    Both runs maintain every step; partial saves land every 4 steps
+    (fraction=0.25 of full_interval=16 — NOT the scar every-step-save
+    schedule, whose PRIORITY selection consumes the sweep's scores and
+    so forces a settle on every step, leaving no overlap window).  The
+    async run snapshots the live arena into the inactive replica slot
+    behind an ``optimization_barrier`` copy and defers the fence to the
+    next consume point, so the sweep runs under step N+1's compute.
+    Gated: losses + running checkpoint bit-identical across modes, and
+    async clean-step overhead p50 <= 0.5x the sync overhead p50.
+    ``overlap_efficiency`` (hidden/total async sweep seconds) is
+    RECORDED for the perf trajectory."""
+    from repro.core.policy import RecoveryMode, SelectionStrategy
+    from repro.data.pipeline import ShardedLMDataset
+    from repro.sharding import single_device_ctx
+    from repro.telemetry import Recorder
+    from repro.training import TrainLoop, TrainLoopConfig
+
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    warm = 2 if quick else 3
+    steps = 8 if quick else 16
+    out = {}
+    rows = []
+    for name, async_m in (("sync", False), ("async", True)):
+        ctx = single_device_ctx()
+        pol = CheckpointPolicy(fraction=0.25, full_interval=16,
+                               strategy=SelectionStrategy.PRIORITY,
+                               recovery=RecoveryMode.PARTIAL)
+        rec = Recorder()
+        loop = TrainLoop(cfg, ctx, loop_cfg=TrainLoopConfig(
+            policy=pol, fabric=FabricConfig(async_maintain=async_m),
+            arena_state=True, recorder=rec))
+        state = loop.init_state()
+        ds = ShardedLMDataset(cfg, batch=2, seq=64, ctx=ctx)
+        it = iter(ds)
+        state = loop.run(state, it, warm)          # compile everything
+        ctl = loop.controller
+        b0 = ctl.fabric.stats["maintain_bytes_moved"]
+        state = loop.run(state, it, steps)
+        ms = loop.metrics[warm:]
+        overhead_us = float(np.median(
+            [m["overhead_seconds"] for m in ms])) * 1e6
+        step_us = float(np.median([m["seconds"] for m in ms])) * 1e6
+        trains = rec.tracer.intervals("train_step")
+        overlapping = sum(
+            any(m0 < t1 and t0 < m1 for (t0, t1) in trains)
+            for (m0, m1) in rec.tracer.intervals("maintain"))
+        eff = loop.overhead_summary()["overlap_efficiency"]
+        out[name] = {
+            "overhead_us": overhead_us,
+            "losses": [m["loss"] for m in loop.metrics],
+            "ckpt": np.asarray(ctl._ckpt_arena),
+            "maint_bytes":
+                (ctl.fabric.stats["maintain_bytes_moved"] - b0) / steps,
+            "eff": eff,
+        }
+        rows.append(csv_row(
+            f"maint_overlap_{name}", overhead_us,
+            f"step_us={step_us:.0f};steps={steps};"
+            f"maint_bytes_per_step={out[name]['maint_bytes']:.0f};"
+            f"overlap_efficiency={eff:.3f};"
+            f"maintain_spans_overlapping_train={overlapping};"
+            f"fence_count={ctl.fabric.stats['fence_count']};"
+            f"async_maintains={ctl.fabric.stats['async_maintains']};"
+            f"published_epoch={ctl.fabric.published_epoch};"
+            f"epoch_staleness="
+            f"{ctl.fabric.replicas.staleness(int(state.step))}"))
+    bit = (out["sync"]["losses"] == out["async"]["losses"]
+           and out["sync"]["ckpt"].shape == out["async"]["ckpt"].shape
+           and bool((out["sync"]["ckpt"] == out["async"]["ckpt"]).all()))
+    ratio = (out["async"]["overhead_us"]
+             / max(out["sync"]["overhead_us"], 1e-9))
+    rows.append(csv_row(
+        "maint_overlap_headline", 0.0,
+        f"async_over_sync_overhead_ratio={ratio:.3f};"
+        f"async_overhead_lt_sync={bool(ratio <= 0.5)};"
+        f"overlap_bit_equal={bit};"
+        f"overlap_efficiency={out['async']['eff']:.3f};"
+        f"maint_bytes_ratio_async_over_sync="
+        f"{out['async']['maint_bytes'] / max(out['sync']['maint_bytes'], 1):.3f}"))
+    return rows
+
+
 def _telemetry_rows(quick: bool, out_dir: str = "") -> list[str]:
     """Soak the reduced LM under an MTBF failure trace with a live
     Recorder attached: streams ``events.jsonl``, exports the Perfetto
@@ -538,6 +630,7 @@ def run(trials: int = 4, quick: bool = False,
     rows.extend(_partial_save_rows(params, quick))
     rows.extend(_store_rows(params, quick))
     rows.extend(_e2e_rows(quick))
+    rows.extend(_overlap_rows(quick))
     rows.extend(_telemetry_rows(quick, telemetry_out))
     return rows
 

@@ -11,7 +11,9 @@ are too noisy to gate on, but the trajectory should be visible in the job
 log and artifact), and the headline invariants (bit-exactness, the ≥2×
 seed-over-fused floor, near-r byte budget, the e2e bit-equality of the
 arena-resident and PyTree training paths, the wall-clock inversion of the
-in-place save) are asserted.
+in-place save, the bit-equality of the async double-buffered maintenance
+pipeline against the sync path plus its overhead halving) are asserted;
+``overlap_efficiency`` rides along as a recorded trajectory value.
 
 Standalone::
 
@@ -59,6 +61,8 @@ REQUIRED_FLAGS = [
     ("maint_store_arena", "rekeyed_read_exact=True"),
     ("e2e_step_maintain_headline", "arena_fewer_bytes=True"),
     ("e2e_step_maintain_headline", "loss_bit_equal=True"),
+    ("maint_overlap_headline", "overlap_bit_equal=True"),
+    ("maint_overlap_headline", "async_overhead_lt_sync=True"),
     ("maint_telemetry", "ledger_bound_exact=True"),
 ]
 # wall-clock flags: recorded loudly, never gated (shared CI runners are
@@ -72,6 +76,8 @@ RECORDED_FLAGS = [
 RECORDED_VALUES = [
     ("maint_telemetry", "overhead_p50_us"),
     ("maint_telemetry", "overhead_p95_us"),
+    ("maint_overlap_headline", "overlap_efficiency"),
+    ("maint_overlap_headline", "async_over_sync_overhead_ratio"),
 ]
 
 
@@ -152,7 +158,7 @@ def check(baseline_path: str, fresh_path: str,
         except SystemExit:
             print(f"[recorded] {name}: no '{key}' field (not gated)")
             continue
-        print(f"[recorded] {name}: {key}={v:.0f} (not gated)")
+        print(f"[recorded] {name}: {key}={v:g} (not gated)")
     if failures:
         print("\nBENCH REGRESSION GUARD FAILED:")
         for f in failures:

@@ -78,6 +78,7 @@ class ShardedCheckpointStore:
         self._q: "queue.Queue" = queue.Queue()
         self._worker: Optional[threading.Thread] = None
         self._worker_error: Optional[BaseException] = None
+        self._worker_error_ctx: Optional[dict] = None
         self.recorder = NULL_RECORDER
         os.makedirs(root, exist_ok=True)
 
@@ -351,11 +352,37 @@ class ShardedCheckpointStore:
                 _, jobs, step = item
                 self._do_write(jobs, step)
             except BaseException as e:  # keep draining; surface on flush()
-                self._worker_error = e
+                if self._worker_error is None:
+                    # keep the FIRST failure's context — later failures
+                    # are usually cascades of the same root cause
+                    self._worker_error = e
+                    self._worker_error_ctx = self._job_context(item)
+                    if self.recorder.enabled:
+                        self.recorder.event("store_write_failed",
+                                            error=repr(e),
+                                            **self._worker_error_ctx)
             finally:
                 # task_done even on failure — otherwise q.join() in flush()
                 # deadlocks forever on the first bad write
                 self._q.task_done()
+
+    def _job_context(self, item) -> dict:
+        """step/segment/host/path of a failed background write batch (its
+        first job — enough to name the shard that broke), for the error
+        ``flush()`` raises and the ``store_write_failed`` event."""
+        ctx = {"step": None, "segment": None, "host": None, "path": None}
+        try:
+            _, jobs, step = item
+            ctx["step"] = int(step)
+            if jobs:
+                seg = int(jobs[0][0])
+                ctx["segment"] = seg
+                ctx["path"] = self._shard_path(seg)
+                if self.host_of_block is not None:
+                    ctx["host"] = int(self.host_of_block[self._seg_gid(seg)])
+        except BaseException:
+            pass  # diagnostics must never mask the original failure
+        return ctx
 
     def _do_write(self, jobs, step: int) -> None:
         """Append the segments' payloads to their shards, then publish the
@@ -396,7 +423,15 @@ class ShardedCheckpointStore:
             self._q.join()
         if self._worker_error is not None:
             err, self._worker_error = self._worker_error, None
-            raise RuntimeError("background checkpoint write failed") from err
+            ctx, self._worker_error_ctx = self._worker_error_ctx, None
+            detail = ""
+            if ctx:
+                detail = (f" (step {ctx.get('step')}, "
+                          f"segment {ctx.get('segment')}, "
+                          f"host {ctx.get('host')}, "
+                          f"shard {ctx.get('path')})")
+            raise RuntimeError(
+                f"background checkpoint write failed{detail}") from err
 
     def compact(self, rekey_homes: Optional[np.ndarray] = None,
                 domains: Optional[Any] = None) -> int:

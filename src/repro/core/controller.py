@@ -257,6 +257,13 @@ class FTController:
         ``own_live`` rides along to the post-save freshness maintain (see
         :meth:`maintain`) so a tree-stepping runner's throwaway pack is
         adopted, not re-copied, when that forced sweep runs."""
+        if self.fabric is not None \
+                and getattr(self.fabric, "has_pending_maintenance", False):
+            # consume point: the save may source from the published slot
+            # and mirrors parity afterwards — take the deferred fence
+            # first, outside the save timer, so the in-flight sweep's
+            # remainder books as fence time, not save time
+            self.fabric.block_until_maintained()
         t0 = time.perf_counter()
         moved0 = self.stats["save_bytes_moved"]
         live = self._live_arena(params)
@@ -400,10 +407,17 @@ class FTController:
         mask = np.zeros((total,), bool)
         mask[idx] = True
         rep = self.fabric.replicas
-        if live is not None:
+        published = (rep is not None and rep.arena is not None
+                     and rep.is_fresh(int(step)))
+        if self.fabric.cfg.async_maintain and published:
+            # async mode: save off the published slot even when the live
+            # arena is at hand — the snapshot holds this step's values
+            # bit-exactly, and sourcing from it keeps the save's reads
+            # off the buffer the next train step is about to donate
+            src = rep.arena
+        elif live is not None:
             src = live
-        elif rep is not None and rep.arena is not None \
-                and rep.is_fresh(int(step)):
+        elif published:
             src = rep.arena
         else:
             src = self._pack_jit(params)
@@ -585,14 +599,21 @@ class FTController:
                for k, v in info.items()}
         if self.recorder.enabled:
             # ledger entry + structured recovery event: the measured
-            # ||δ'||² prices this failure in Thm-3.2/4.1 iterations
+            # ||δ'||² prices this failure in Thm-3.2/4.1 iterations.
+            # Async recoveries also carry which epoch was actually
+            # restored — a stale published slot is priced explicitly.
+            extra = {}
+            if "recovered_epoch" in out:
+                extra["recovered_epoch"] = int(out["recovered_epoch"])
+                extra["staleness"] = int(out.get("staleness", 0))
             self.recorder.record_recovery(
                 step=None if step is None else int(step),
                 lost_blocks=int(out.get("lost_blocks", 0)),
                 tier_counts=out.get("tier_counts"),
                 applied_sq=float(out.get("applied_sq", 0.0)),
                 tier_sq=out.get("tier_sq"),
-                failed_devices=out.get("failed_devices", 0))
+                failed_devices=out.get("failed_devices", 0),
+                **extra)
         return recovered, out
 
     # -- analysis helpers ---------------------------------------------------

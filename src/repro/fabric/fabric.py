@@ -28,6 +28,7 @@ current one.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional
 
 import jax
@@ -41,7 +42,7 @@ from repro.fabric.placement import ClusterView, rebalance_homes, rehome_blocks
 from repro.fabric.replica import ReplicaSet
 from repro.fabric.tiers import TieredRecovery
 from repro.sharding.partition import block_device_homes
-from repro.telemetry.recorder import NULL_RECORDER
+from repro.telemetry.recorder import NULL_RECORDER, Histogram
 
 PyTree = Any
 
@@ -59,6 +60,7 @@ class FabricConfig:
     elastic: bool = False          # post-failure re-homing/re-seeding
     fused: bool = True             # single-sweep maintenance pipeline
     arena: bool = True             # flat-arena single-dispatch maintenance
+    async_maintain: bool = False   # double-buffered pipelined sweep
     use_pallas: Optional[bool] = None   # None = auto: Pallas on TPU only
 
     def __post_init__(self):
@@ -67,6 +69,11 @@ class FabricConfig:
         if self.parity_group < 2:
             raise ValueError("parity_group must be >= 2: a 1-member group "
                              "degenerates the XOR code to a bare copy")
+        if self.async_maintain and not (self.fused and self.arena):
+            raise ValueError(
+                "async_maintain requires the fused arena pipeline "
+                "(fused=True, arena=True): the double-buffer snapshot and "
+                "deferred fence only exist for the single-dispatch sweep")
 
 
 class CheckpointFabric:
@@ -119,12 +126,41 @@ class CheckpointFabric:
         # (arena-resident training state): every sweep from then on is
         # pack-free and the accounting switches to the resident model
         self.live_arena_mode = False
+        # async maintenance (cfg.async_maintain): two-slot snapshot arena
+        # with an epoch/publish protocol. ``_async_maintain`` copies the
+        # live arena into the inactive slot (one async device copy behind
+        # optimization_barrier), flips ``_active_slot``, dispatches the
+        # sweep against the published slot, and returns without fencing —
+        # the sweep overlaps the trainer's next step. ``published_epoch``
+        # is the step whose snapshot the live tiers currently hold (at
+        # Python level the flip is atomic: replica + parity + scores are
+        # always ingested for the same step, never torn). ``_pending``
+        # holds the one in-flight sweep; it is settled (fenced) at the
+        # next maintain, at any consume point (failure, checkpoint,
+        # shutdown), or via ``block_until_maintained``.
+        self._slots: list[Any] = [None, None]
+        self._active_slot = 0
+        self.published_epoch = -1
+        self._pending: Optional[dict] = None
+        self._snap_donate = None
+        self._snap_fresh = None
+        # donation lets the snapshot reuse the slot retired two epochs
+        # ago; the CPU backend ignores donation (with a warning per call),
+        # so fall back to fresh copies there — the protocol is identical
+        self._donate_slots = jax.default_backend() not in ("cpu",)
+        self.async_hidden_seconds = 0.0
+        self.async_total_seconds = 0.0
+        self.fence_hist = Histogram()
         self.stats = self.recorder.scope("fabric", {
             "replica_refreshes": 0, "parity_encodes": 0,
             "recoveries": 0, "rehomes": 0, "heals": 0,
             "fused_maintains": 0, "arena_maintains": 0,
             "arena_resident_maintains": 0, "live_packs": 0,
+            "async_maintains": 0, "fence_count": 0,
             "maintain_bytes_moved": 0})
+        if self.recorder.enabled:
+            self.recorder.adopt_histogram("fabric/fence_seconds",
+                                          self.fence_hist)
 
     def attach_recorder(self, recorder: Any) -> None:
         """Late-bind a recorder (controller attach path for prebuilt
@@ -136,6 +172,7 @@ class CheckpointFabric:
             return
         self.recorder = recorder
         self.stats = recorder.scope("fabric", self.stats)
+        recorder.adopt_histogram("fabric/fence_seconds", self.fence_hist)
 
     @property
     def homes(self) -> np.ndarray:
@@ -183,6 +220,20 @@ class CheckpointFabric:
         live = as_live_arena(params, self.arena_layout)
         due_replica, due_parity = self.maintenance_due(step, force=force)
         b0 = self.stats["maintain_bytes_moved"]
+        if self.cfg.async_maintain and live is not None \
+                and (due_replica or due_parity):
+            # pipelined path: dispatch only, no fence — the sweep runs
+            # under the trainer's next step. No sync span here either;
+            # the deferred [dispatch, fence] span is recorded when the
+            # pending sweep settles, so the trace shows the true overlap.
+            self._async_maintain(step, live, ckpt_values, own_live=own_live)
+            self.last_maintained_step = step
+            if self.recorder.enabled:
+                self.recorder.event(
+                    "maintain", step=step, mode="arena_async",
+                    bytes_moved=self.stats["maintain_bytes_moved"] - b0,
+                    replica=due_replica, parity=due_parity)
+            return
         mode = "components"
         with self.recorder.span("maintain", step=step,
                                 fence=self.block_until_maintained):
@@ -206,6 +257,8 @@ class CheckpointFabric:
                     self.parity.encode(step, params)
                     self.stats["parity_encodes"] += 1
                     self.stats["maintain_bytes_moved"] += t["parity_pass"]
+                if due_replica or due_parity:
+                    self.published_epoch = step
         self.last_maintained_step = step
         if self.recorder.enabled:
             self.recorder.event(
@@ -230,6 +283,7 @@ class CheckpointFabric:
         self.stats["parity_encodes"] += 1
         self.stats["fused_maintains"] += 1
         self.stats["maintain_bytes_moved"] += self._traffic_model()["fused"]
+        self.published_epoch = int(step)
 
     def _arena_maintain(self, step: int, params: PyTree,
                         ckpt_values, own_live: bool = False) -> None:
@@ -269,6 +323,114 @@ class CheckpointFabric:
         self.stats["maintain_bytes_moved"] += self._traffic_model()[
             "arena_owned" if owned else
             "arena_resident" if resident else "arena"]
+        self.published_epoch = int(step)
+
+    def _async_maintain(self, step: int, live, ckpt_values,
+                        own_live: bool = False) -> None:
+        """Dispatch one pipelined sweep epoch and return immediately.
+
+        Pipeline depth is one: the previous epoch's sweep is settled
+        first, so the fence wait here is ``max(0, sweep - step_time)`` —
+        exactly the stall the overlap failed to hide (zero when the
+        sweep fits under a step). Then the live arena is snapshotted
+        into the inactive slot (``optimization_barrier`` forces a real
+        copy — the live buffer is donated through the train step and
+        must not be aliased), the slot flips, ``published_epoch``
+        advances, and the owned sweep (the snapshot IS the replica — no
+        second copy) is dispatched against the published slot. Nothing
+        blocks: JAX's async dispatch runs the copy + sweep while the
+        caller computes step N+1, and any consumer that reaches the
+        output arrays first waits on dataflow, never on a torn slot.
+
+        ``own_live=True`` (tree-stepping callers, throwaway pack): the
+        pack is adopted as the snapshot directly — no copy at all, same
+        as the sync owned path, still dispatched without a fence."""
+        self._settle_pending()
+        span_t0 = self.recorder.tracer.now() if self.recorder.enabled \
+            else 0.0
+        t0 = time.perf_counter()
+        fn = self._arena_maintain_fn()
+        z = self._as_arena(ckpt_values)
+        if own_live:
+            snap = live
+        else:
+            inactive = 1 - self._active_slot
+            stale = self._slots[inactive]
+            if self._snap_fresh is None:
+                self._snap_fresh = jax.jit(
+                    lambda a: jax.lax.optimization_barrier(a))
+                self._snap_donate = jax.jit(
+                    lambda slot, a: jax.lax.optimization_barrier(a),
+                    donate_argnums=(0,))
+            if self._donate_slots and stale is not None \
+                    and stale.shape == live.shape \
+                    and stale.dtype == live.dtype:
+                # reuse the buffer retired two epochs ago (the published
+                # slot moved on; nothing references this one any more)
+                snap = self._snap_donate(stale, live)
+            else:
+                snap = self._snap_fresh(live)
+            self._slots[inactive] = snap
+            self._active_slot = inactive
+        _, scores, parity = fn(snap, z, own_live=True)
+        self.replicas.ingest_arena(step, snap, self.arena_layout)
+        self.parity.ingest(step, parity)
+        if z is not None:
+            self.last_scores = scores
+            self.last_scores_step = step
+        self.live_arena_mode = True
+        self.published_epoch = int(step)
+        self._pending = {"step": int(step), "t0": t0, "span_t0": span_t0}
+        self.stats["replica_refreshes"] += 1
+        self.stats["parity_encodes"] += 1
+        self.stats["fused_maintains"] += 1
+        self.stats["arena_maintains"] += 1
+        self.stats["async_maintains"] += 1
+        self.stats["maintain_bytes_moved"] += self._traffic_model()[
+            "arena_owned" if own_live else "arena_async"]
+
+    @property
+    def has_pending_maintenance(self) -> bool:
+        """True while an async sweep epoch is dispatched but not yet
+        settled (consumers fence via :meth:`block_until_maintained`)."""
+        return self._pending is not None
+
+    def _settle_pending(self) -> float:
+        """Fence the in-flight async sweep (no-op without one); returns
+        the seconds actually waited. Books the epoch's hidden/total time
+        into the overlap-efficiency accounting and records the deferred
+        ``maintain`` span covering [dispatch, fence] — the interval the
+        Chrome trace shows overlapping the next ``train_step``."""
+        p = self._pending
+        if p is None:
+            return 0.0
+        self._pending = None
+        w0 = time.perf_counter()
+        if self.parity is not None and self.parity.parity is not None:
+            jax.block_until_ready(self.parity.parity)
+        if self.replicas is not None and self.replicas.arena is not None:
+            jax.block_until_ready(self.replicas.arena)
+        now = time.perf_counter()
+        wait = now - w0
+        total = now - p["t0"]
+        self.fence_hist.observe(wait)
+        self.stats["fence_count"] += 1
+        self.async_total_seconds += total
+        self.async_hidden_seconds += max(0.0, total - wait)
+        if self.recorder.enabled:
+            self.recorder.gauge("fabric/overlap_efficiency").set(
+                self.overlap_efficiency())
+            self.recorder.tracer.record(
+                "maintain", p["span_t0"], self.recorder.tracer.now(),
+                step=p["step"], mode="arena_async", deferred=True)
+        return wait
+
+    def overlap_efficiency(self) -> float:
+        """Fraction of async sweep wall-clock hidden under the trainer's
+        compute (0.0 until the first settled async epoch)."""
+        if self.async_total_seconds <= 0.0:
+            return 0.0
+        return self.async_hidden_seconds / self.async_total_seconds
 
     def _as_arena(self, ckpt_values):
         """Coerce checkpoint values to arena form (None passes through)."""
@@ -315,7 +477,13 @@ class CheckpointFabric:
         """Block until the last maintenance sweep's device work is done
         (dispatch returns early under async execution). Timing-attribution
         helper for loops that report per-step maintenance overhead — owns
-        the knowledge of which tensor represents the sweep's completion."""
+        the knowledge of which tensor represents the sweep's completion.
+        With a pending async epoch this is the deferred fence: it settles
+        the pending sweep (books overlap accounting + the deferred span)
+        rather than bare-blocking."""
+        if self._pending is not None:
+            self._settle_pending()
+            return
         if self.parity is not None and self.parity.parity is not None:
             jax.block_until_ready(self.parity.parity)
         elif self.replicas is not None and self.replicas.arena is not None:
@@ -494,23 +662,41 @@ class CheckpointFabric:
         anti-affinely in the degraded topology, and re-stripes parity — the
         *next* failure still finds live redundancy tiers.
         """
+        # consume point: a half-swept async epoch must never serve a
+        # recovery — settle the in-flight sweep first, then every tier
+        # holds exactly the last *published* epoch
+        self._settle_pending()
         if failed_devices is None:
             failed_devices = np.empty((0,), np.int32)
         failed = np.asarray(failed_devices, np.int32).ravel()
         if step is None:
             step = self.last_maintained_step
+        step = int(step)
+        recovered_epoch, staleness = step, 0
+        if self.cfg.async_maintain and 0 <= self.published_epoch < step:
+            # async mode decouples the sweep from the step that produced
+            # the params: the live tiers hold the published epoch, one or
+            # more steps behind the failure. Plan against that epoch —
+            # a slightly stale replica is a bounded perturbation (Thm
+            # 4.1 regime, priced explicitly by the ledger via the
+            # staleness fields below), far cheaper than falling all the
+            # way back to the checkpoint tier.
+            recovered_epoch = int(self.published_epoch)
+            staleness = step - recovered_epoch
         persist = self.cfg.elastic if persist_failure is None else \
             bool(persist_failure)
         if persist and failed.size:
             self.view.mark_failed(failed)
-        plan = self.planner.plan(lost_mask, failed, step)
+        plan = self.planner.plan(lost_mask, failed, recovered_epoch)
         recovered, stats = self.planner.recover(params, ckpt_values, plan,
                                                 disk_values=disk_values,
                                                 disk_reader=disk_reader)
         self.stats["recoveries"] += 1
         stats["failed_devices"] = int(failed.size)
+        stats["recovered_epoch"] = recovered_epoch
+        stats["staleness"] = staleness
         if self.cfg.elastic and failed.size:
-            stats["placement"] = self._replan(int(step), recovered)
+            stats["placement"] = self._replan(step, recovered)
         return recovered, stats
 
     def _replan(self, step: int, params: PyTree) -> dict:
@@ -534,6 +720,7 @@ class CheckpointFabric:
                 self.parity.restripe()
                 self.parity.encode(step, params)
                 self.stats["parity_encodes"] += 1
+            self.published_epoch = step
         self.planner.rehome()
         self.last_maintained_step = step
         self.stats["rehomes"] += 1
@@ -556,6 +743,9 @@ class CheckpointFabric:
         the restored capacity and re-seeds/re-stripes the redundancy tiers
         (against ``params`` when given, so they are immediately fresh;
         otherwise the next ``maintain`` refreshes them)."""
+        # consume point: an elastic heal re-stripes the tiers — never
+        # against a half-swept async epoch
+        self._settle_pending()
         healed = self.view.heal(self.domains.devices_in(kind, index))
         info = {"healed_devices": int(healed.size)}
         if healed.size == 0:
@@ -581,6 +771,8 @@ class CheckpointFabric:
                 self.parity.restripe()
                 if params is not None:
                     self.parity.encode(at, params)
+            if params is not None:
+                self.published_epoch = at
         self.planner.rehome()
         info["rebalanced_blocks"] = int(moved.size)
         info["alive_hosts"] = self.view.n_alive_hosts

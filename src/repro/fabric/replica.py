@@ -65,7 +65,15 @@ class ReplicaSet:
                      arena_layout) -> None:
         """Adopt an arena-form snapshot (the arena sweep's pack output —
         the pack IS the replica write). The tree form is materialized
-        lazily and only on the recovery path."""
+        lazily and only on the recovery path.
+
+        Under async maintenance this call IS the publish: the fabric's
+        double-buffer snapshot becomes the replica arena here, atomically
+        at Python level with the parity ingest for the same step — a
+        reader never observes replica and parity from different epochs.
+        The adopted arena may still have device work in flight; readers
+        either fence through ``fabric.block_until_maintained`` or wait on
+        dataflow, so a torn (half-swept) slot is unobservable."""
         self._arena = arena
         self.arena_layout = arena_layout
         self._tree = None
@@ -89,6 +97,15 @@ class ReplicaSet:
         update has happened since the refresh)."""
         return (self._tree is not None or self._arena is not None) \
             and self.refreshed_step == int(step)
+
+    def staleness(self, step: int) -> int:
+        """Steps between ``step`` and the snapshot the replicas hold
+        (0 = fresh; -1 = no snapshot at all). The async pipeline's
+        bounded-staleness accounting reads this to price a recovery
+        against the epoch actually restored."""
+        if self._tree is None and self._arena is None:
+            return -1
+        return max(0, int(step) - self.refreshed_step)
 
     def reseed(self) -> None:
         """Recompute replica placement in the view's current (possibly

@@ -581,4 +581,11 @@ def maintain_traffic(partition: BlockPartition, layout: FrameLayout,
         # booked by pack_live(account=True)) plus this equals the
         # internal-pack "arena" total exactly
         out["arena_owned"] = int(out["arena_resident"] - a)
+        # async double-buffer: one extra snapshot copy (read live + write
+        # the inactive slot, 2a) in front of the *owned* sweep over the
+        # published slot (the snapshot IS the replica — no second copy),
+        # so the total is the resident sweep plus one arena read. That +a
+        # is the price of decoupling the sweep from the donated live
+        # buffer; the wall-clock it buys back is the whole sweep.
+        out["arena_async"] = int(out["arena_resident"] + a)
     return out

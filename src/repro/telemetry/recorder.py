@@ -49,6 +49,7 @@ EVENT_SCHEMA: dict[str, tuple[str, ...]] = {
     "maintain": ("step", "mode", "bytes_moved", "replica", "parity"),
     "save":     ("step", "blocks", "bytes_moved", "seconds", "mode"),
     "mirror":   ("step", "bytes", "segments", "background"),
+    "store_write_failed": ("step", "segment", "host", "path", "error"),
     "compact":  ("reclaimed", "rekeyed"),
     "rehome":   ("step", "rehomed_blocks", "alive_devices", "alive_hosts",
                  "parity_groups"),
@@ -309,9 +310,14 @@ class Recorder(NullRecorder):
                         tier_counts: Optional[dict], applied_sq: float,
                         **extra: Any) -> None:
         """One recovery event: ledger entry (Thm-3.2/4.1 bound accounting)
-        + a structured ``recovery`` event on the bus."""
+        + a structured ``recovery`` event on the bus. Extra fields reach
+        the ledger entry too (``LedgerEntry.extra``) — an async-mode
+        recovery carries ``recovered_epoch``/``staleness`` so the entry
+        records *which* epoch was actually restored, not just how far the
+        restored values sat from the live ones."""
         self.ledger.record(step=step, lost_blocks=lost_blocks,
-                           tier_counts=tier_counts, applied_sq=applied_sq)
+                           tier_counts=tier_counts, applied_sq=applied_sq,
+                           **extra)
         self.event("recovery", step=step, lost_blocks=lost_blocks,
                    tier_counts=tier_counts, applied_sq=applied_sq, **extra)
 

@@ -78,11 +78,38 @@ class SpanTracer:
             with self._lock:
                 self.spans.append(rec)
 
+    def now(self) -> float:
+        """Current tracer-relative timestamp (seconds since tracer start)
+        — the time base :meth:`record` expects."""
+        return self._clock() - self._t0
+
+    def record(self, name: str, t0: float, t1: float,
+               **args: Any) -> SpanRecord:
+        """Record a span retroactively from explicit tracer-relative
+        timestamps (see :meth:`now`). This is how deferred device work
+        gets an honest interval: an async maintenance sweep is *dispatched*
+        inside one step but only *fenced* when its outputs are consumed —
+        the span covering [dispatch, fence] can't be a context manager, it
+        is closed after the fact by whoever takes the fence. Depth is 0
+        (deferred spans overlap the top-level step spans by design, which
+        is exactly what the Chrome trace should show)."""
+        rec = SpanRecord(name=name, t0=float(t0), t1=float(t1), depth=0,
+                         tid=threading.get_ident(), args=dict(args))
+        with self._lock:
+            self.spans.append(rec)
+        return rec
+
     # -- analysis -----------------------------------------------------------
 
     def durations(self, name: str) -> list[float]:
         """All recorded durations (seconds) of spans named ``name``."""
         return [s.duration for s in self.spans if s.name == name]
+
+    def intervals(self, name: str) -> list[tuple[float, float]]:
+        """All recorded (t0, t1) intervals of spans named ``name`` —
+        overlap assertions (does ``maintain`` run under ``train_step``?)
+        read these directly instead of re-parsing the Chrome export."""
+        return [(s.t0, s.t1) for s in self.spans if s.name == name]
 
     # -- export -------------------------------------------------------------
 

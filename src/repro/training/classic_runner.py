@@ -162,8 +162,13 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
         ctl.maybe_checkpoint(i, live, own_live=packed)
         # block on the sweep's outputs so maint_seconds books the
         # maintenance device work, not just its dispatch (same
-        # attribution TrainLoop.run uses for overhead_seconds)
-        if ctl.fabric is not None:
+        # attribution TrainLoop.run uses for overhead_seconds). Under
+        # async maintenance the per-iteration fence is deliberately
+        # skipped — the sweep settles under the next iteration's model
+        # step and maint_seconds books the dispatch cost; the final
+        # pending epoch is settled once after the loop.
+        if ctl.fabric is not None \
+                and not getattr(ctl.fabric.cfg, "async_maintain", False):
             ctl.fabric.block_until_maintained()
         maint_seconds += time.perf_counter() - t0
         if i == fail_iter:
@@ -177,6 +182,12 @@ def run_with_failure(model: IterativeModel, policy: CheckpointPolicy, *,
                                                       failed_devices=failed,
                                                       step=i)
         losses.append(float(model.loss(p)))
+    if ctl.fabric is not None:
+        # settle the last async epoch (no-op in sync mode) — its fence
+        # wait belongs to the run, not to whoever touches the fabric next
+        t0 = time.perf_counter()
+        ctl.fabric.block_until_maintained()
+        maint_seconds += time.perf_counter() - t0
     if clean_losses is None:
         clean_losses = run_clean(model, max_iters, seed)["losses"]
     cost = empirical_iteration_cost(losses, clean_losses, model.eps)
@@ -264,6 +275,8 @@ def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
         # availability report turns these into time-to-full-redundancy
         redundancy_full.append(ctl.fabric.redundancy_state()["full"])
         losses.append(float(model.loss(p)))
+    # settle the last async epoch before the stats snapshot (no-op sync)
+    ctl.fabric.block_until_maintained()
     if clean_losses is None:
         clean_losses = run_clean(model, max_iters, seed)["losses"]
     cost = empirical_iteration_cost(losses, clean_losses, model.eps)

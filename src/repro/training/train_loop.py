@@ -117,6 +117,18 @@ class TrainLoop:
         self._overhead_hist = (
             self.recorder.histogram("train/overhead_seconds")
             if self.recorder.enabled else Histogram())
+        # per-phase split of the clean-step overhead (sweep dispatch,
+        # checkpoint save, fence wait) — overhead_summary() attributes
+        # the async overlap win to the phase that shrank. The loop-side
+        # fence histogram holds sync-mode blocking samples; async-mode
+        # deferred-fence waits live in the fabric's own fence histogram
+        # and the two are merged at summary time.
+        self._sweep_hist = (self.recorder.histogram("train/sweep_seconds")
+                            if self.recorder.enabled else Histogram())
+        self._save_hist = (self.recorder.histogram("train/save_seconds")
+                           if self.recorder.enabled else Histogram())
+        self._fence_hist = (self.recorder.histogram("train/fence_seconds")
+                            if self.recorder.enabled else Histogram())
 
         from repro.training.step import make_train_step
         self._train_step = jax.jit(
@@ -199,23 +211,33 @@ class TrainLoop:
                 tm0 = time.perf_counter()
                 live = self._live(state)
                 self.controller.maintain(int(state.step), live)
+                t_maint = time.perf_counter()
                 with self.recorder.span("save", step=int(state.step)):
                     if self.controller.maybe_checkpoint(int(state.step),
                                                         live):
                         rec["checkpointed"] = True
+                t_save = time.perf_counter()
+                fab = self.controller.fabric
+                async_mode = (fab is not None
+                              and getattr(fab.cfg, "async_maintain", False))
                 # per-step fault-tolerance overhead (maintain + save),
                 # excluding the rare failure/heal events timed below —
-                # the examples report this next to the step time. Block
-                # on the sweep's device outputs first: checkpoint_now
-                # only blocks on save steps, and under async dispatch a
-                # maintain-only step would otherwise book dispatch time
-                # here and push the sweep's compute into the NEXT step's
-                # "seconds". Gated by cfg.measure_overhead so production
-                # runs can keep the sweep overlapping the next dispatch.
+                # the examples report this next to the step time. Sync
+                # mode blocks on the sweep's device outputs first:
+                # checkpoint_now only blocks on save steps, and under
+                # async dispatch a maintain-only step would otherwise
+                # book dispatch time here and push the sweep's compute
+                # into the NEXT step's "seconds". Async-maintain mode
+                # must NOT block — hiding the sweep under the next step
+                # is the whole point; its overhead is the dispatch cost,
+                # and the sweep's un-hidden remainder books into the
+                # fabric's fence histogram at the deferred fence instead.
+                t_fence = t_save
                 if self.loop_cfg.measure_overhead:
-                    if self.controller.fabric is not None:
-                        self.controller.fabric.block_until_maintained()
-                    rec["overhead_seconds"] = time.perf_counter() - tm0
+                    if fab is not None and not async_mode:
+                        fab.block_until_maintained()
+                        t_fence = time.perf_counter()
+                    rec["overhead_seconds"] = t_fence - tm0
                 for ev in events_at.pop(i, []):
                     with self.recorder.span("recovery", step=int(state.step),
                                             domain=f"{ev.kind}:{ev.index}"):
@@ -246,6 +268,10 @@ class TrainLoop:
                 if "overhead_seconds" in rec and "failures" not in rec \
                         and "heals" not in rec and "failure" not in rec:
                     self._overhead_hist.observe(rec["overhead_seconds"])
+                    self._sweep_hist.observe(t_maint - tm0)
+                    self._save_hist.observe(t_save - t_maint)
+                    if not async_mode:
+                        self._fence_hist.observe(t_fence - t_save)
                 if self.controller.fabric is not None:
                     # per-step placement health — availability_summary()
                     # folds these into the soak goodput report
@@ -255,6 +281,17 @@ class TrainLoop:
             self.metrics.append(rec)
             if on_step is not None:
                 on_step(i, loss)
+        # epoch boundary: settle any in-flight async sweep (the deferred
+        # fence's last consume point) and drain the background store
+        # writer so run() returns with redundancy published and durable —
+        # in async mode this is where store flushes live now, not on the
+        # per-step hot path
+        if self.controller is not None:
+            if self.controller.fabric is not None:
+                self.controller.fabric.block_until_maintained()
+            if self.controller.store is not None \
+                    and hasattr(self.controller.store, "flush"):
+                self.controller.store.flush()
         return state
 
     def availability_summary(self) -> dict:
@@ -280,7 +317,14 @@ class TrainLoop:
         ``overhead_seconds_*`` distribution covers **clean steps only**
         (failure/heal-event steps excluded at observe time) and comes
         from the telemetry histogram, so the p95 a dashboards reads and
-        the one reported here are the same samples."""
+        the one reported here are the same samples.
+
+        ``phases`` attributes the overhead: ``sweep`` (maintain call),
+        ``save`` (maybe_checkpoint), ``fence`` (blocking waits — the
+        loop's sync-mode blocks merged with the fabric's deferred
+        async-fence waits). ``overlap_efficiency`` is the fraction of
+        async sweep wall-clock hidden under the trainer's compute
+        (0.0 in sync mode — nothing is overlapped)."""
         steps = [m["seconds"] for m in self.metrics]
         over = self._overhead_hist.summary()
         out = {"steps": len(steps),
@@ -291,6 +335,17 @@ class TrainLoop:
                "overhead_seconds_max": over["max"],
                "overhead_clean_steps": over["count"],
                "arena_state": self.arena_layout is not None}
+        fab = (self.controller.fabric
+               if self.controller is not None else None)
+        fence = Histogram()
+        fence.samples = list(self._fence_hist.samples)
+        if fab is not None:
+            fence.samples += list(fab.fence_hist.samples)
+        out["phases"] = {"sweep": self._sweep_hist.summary(),
+                         "save": self._save_hist.summary(),
+                         "fence": fence.summary()}
+        out["overlap_efficiency"] = (fab.overlap_efficiency()
+                                     if fab is not None else 0.0)
         if self.controller is not None and self.controller.fabric is not None:
             fab = self.controller.fabric
             # one parity encode per maintained step (fused or not) under
@@ -300,6 +355,7 @@ class TrainLoop:
                 fab.stats["maintain_bytes_moved"] // maintains)
             out["arena_resident_maintains"] = \
                 fab.stats["arena_resident_maintains"]
+            out["async_maintains"] = fab.stats["async_maintains"]
         return out
 
     def _sample_trace(self, n_steps: int) -> dict[int, list]:
