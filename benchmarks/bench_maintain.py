@@ -36,6 +36,15 @@ not the model):
                        async sweep hidden under the next step's compute
                        (``overlap_efficiency``), and maintain-span /
                        train-step span overlap counts from the tracer.
+  maint_sweep_sharded / tier_soak_elastic_mesh
+                     — SPMD rows, measured in a forced-8-device CPU
+                       subprocess (this process stays single-device so
+                       the committed byte baselines hold): the sharded
+                       arena loop's maintenance bytes/step vs the
+                       PyTree-pack loop on the SAME (4, 2) mesh with
+                       loss bit-equality, the ICI/DCN split of the
+                       anti-affine replica transfer, and the host-loss →
+                       mesh-shrink → heal → re-grow soak.
   maint_telemetry    — trace-driven soak with a live telemetry Recorder:
                        events.jsonl + Chrome trace + run report (written
                        under ``--telemetry-out`` when given), clean-step
@@ -621,6 +630,55 @@ def _telemetry_rows(quick: bool, out_dir: str = "") -> list[str]:
             shutil.rmtree(tmp, ignore_errors=True)
 
 
+def _sharded_rows(quick: bool) -> list[str]:
+    """SPMD rows: the sharded arena sweep and the elastic-mesh soak.
+
+    These need more than one XLA device, which this process deliberately
+    does not have (the committed single-device byte baselines would
+    shift), so the measurement runs in a subprocess with
+    ``--xla_force_host_platform_device_count=8`` — see
+    ``benchmarks/_sharded_probe.py`` for what each number means. The
+    headline flags (``sharded_loss_bit_equal``, ``sharded_bytes_le_pack``,
+    ``elastic_cycle_ok``) are deterministic and REQUIRED by
+    ``check_maintain_regression``; the wall-clock rides along recorded."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    cmd = [sys.executable, "-m", "benchmarks._sharded_probe"]
+    if quick:
+        cmd.append("--quick")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded probe failed (rc={proc.returncode}):\n{proc.stderr}")
+    res = json.loads(proc.stdout.splitlines()[-1])
+    sh, el = res["sharded"], res["elastic"]
+    a = sh["arena"]
+    rows = [csv_row(
+        "maint_sweep_sharded", a["overhead_us"],
+        f"bytes_per_step={a['bytes_per_step']:.0f};"
+        f"pack_bytes_per_step={sh['pytree']['bytes_per_step']:.0f};"
+        f"shards={sh['shards']};"
+        f"sharded_loss_bit_equal={bool(sh['loss_bit_equal'])};"
+        f"sharded_bytes_le_pack={bool(sh['bytes_le_pack'])};"
+        f"live_packs={a['live_packs']};"
+        f"resident_maintains={a['resident_maintains']};"
+        f"ici_bytes_per_maintain={a['ici_per_maintain']:.0f};"
+        f"dcn_bytes_per_maintain={a['dcn_per_maintain']:.0f}")]
+    rows.append(csv_row(
+        "tier_soak_elastic_mesh", el["us_per_step"],
+        f"steps={el['steps']};mesh_resizes={el['mesh_resizes']};"
+        f"min_shards={el['min_shards']};final_shards={el['final_shards']};"
+        f"live_packs={el['live_packs']};"
+        f"losses_finite={bool(el['losses_finite'])};"
+        f"elastic_cycle_ok={bool(el['cycle_ok'])}"))
+    return rows
+
+
 def run(trials: int = 4, quick: bool = False,
         telemetry_out: str = "") -> list[str]:
     rows = _kernel_check_rows(quick)
@@ -631,6 +689,7 @@ def run(trials: int = 4, quick: bool = False,
     rows.extend(_store_rows(params, quick))
     rows.extend(_e2e_rows(quick))
     rows.extend(_overlap_rows(quick))
+    rows.extend(_sharded_rows(quick))
     rows.extend(_telemetry_rows(quick, telemetry_out))
     return rows
 

@@ -10,10 +10,13 @@ stay eliminated. Wall-clock ratios are *recorded* alongside (CI machines
 are too noisy to gate on, but the trajectory should be visible in the job
 log and artifact), and the headline invariants (bit-exactness, the ≥2×
 seed-over-fused floor, near-r byte budget, the e2e bit-equality of the
-arena-resident and PyTree training paths, the wall-clock inversion of the
-in-place save, the bit-equality of the async double-buffered maintenance
-pipeline against the sync path plus its overhead halving) are asserted;
-``overlap_efficiency`` rides along as a recorded trajectory value.
+arena-resident and PyTree training paths, the bit-equality of the async
+double-buffered maintenance pipeline against the sync path plus its
+overhead halving, and the SPMD rows' same-mesh loss bit-equality /
+bytes-at-or-below-pack / elastic shrink-heal cycle) are asserted. The
+in-place-save wall-clock inversion is RECORDED with a threshold instead
+(see ``RECORDED_THRESHOLD_FLAGS`` for why the quick config legitimately
+inverts it); ``overlap_efficiency`` rides along as a recorded value.
 
 Standalone::
 
@@ -32,6 +35,7 @@ GUARDED_BYTES = {
     "maint_sweep_arena_resident": "bytes_per_step",
     "maint_sweep_arena": "bytes_per_step",
     "maint_sweep_fused": "bytes_per_step",
+    "maint_sweep_sharded": "bytes_per_step",
     "maint_partial_save_inplace": "bytes_moved_per_save",
     "e2e_step_maintain_arena": "bytes_per_step",
     "e2e_step_maintain_pytree": "bytes_per_step",
@@ -63,13 +67,33 @@ REQUIRED_FLAGS = [
     ("e2e_step_maintain_headline", "loss_bit_equal=True"),
     ("maint_overlap_headline", "overlap_bit_equal=True"),
     ("maint_overlap_headline", "async_overhead_lt_sync=True"),
+    ("maint_sweep_sharded", "sharded_loss_bit_equal=True"),
+    ("maint_sweep_sharded", "sharded_bytes_le_pack=True"),
+    ("tier_soak_elastic_mesh", "elastic_cycle_ok=True"),
     ("maint_telemetry", "ledger_bound_exact=True"),
 ]
 # wall-clock flags: recorded loudly, never gated (shared CI runners are
 # too noisy — the committed baseline documents the local inversion)
 RECORDED_FLAGS = [
-    ("maint_partial_save_headline", "inplace_beats_rewrite_wallclock=True"),
     ("e2e_step_maintain_headline", "resident_overhead_faster=True"),
+]
+# wall-clock flags recorded WITH a loose threshold on an accompanying
+# ratio. ``inplace_beats_rewrite_wallclock`` is the canonical case: on
+# the quick config the full rewrite is ONE fused XLA program over a tiny
+# model, while the in-place save pays fixed per-dispatch overhead that
+# cannot amortize at that size — so the boolean legitimately inverts
+# (committed baseline: wall 0.95x) even though the byte win (``near_r``,
+# REQUIRED above) is intact and the inversion disappears at production
+# sizes where the memcpy dominates the dispatch. Gating the boolean
+# would make quick-mode CI red on a config artifact; dropping it
+# entirely would hide a real dispatch-count regression. The compromise:
+# the flag is printed every run, and the run only FAILS when the ratio
+# falls below ``min_ratio`` — i.e. the in-place save got catastrophically
+# slower than the rewrite, which no config-size effect explains.
+RECORDED_THRESHOLD_FLAGS = [
+    # (row, flag, ratio key, min ratio)
+    ("maint_partial_save_headline", "inplace_beats_rewrite_wallclock=True",
+     "wall_rewrite_over_inplace", 1 / 3),
 ]
 # numeric values lifted from the fresh run's derived fields and printed
 # for the job log / perf trajectory — never gated (wall-clock noise)
@@ -149,6 +173,21 @@ def check(baseline_path: str, fresh_path: str,
         held = name in fresh and flag in fresh[name]["derived"]
         print(f"[recorded] {name}: '{flag}' "
               f"{'held' if held else 'DID NOT HOLD (not gated)'}")
+    for name, flag, key, min_ratio in RECORDED_THRESHOLD_FLAGS:
+        if name not in fresh:
+            failures.append(f"{name}: row missing from fresh run")
+            continue
+        held = flag in fresh[name]["derived"]
+        ratio = _derived_num(fresh[name], key)
+        status = "OK" if ratio >= min_ratio else "REGRESSION"
+        note = ("held" if held else "did not hold (quick-config "
+                "inversion, see RECORDED_THRESHOLD_FLAGS)")
+        print(f"[recorded] {name}: '{flag}' {note} | "
+              f"{key}={ratio:.2f} (floor {min_ratio:.2f}) [{status}]")
+        if ratio < min_ratio:
+            failures.append(
+                f"{name}: {key} {ratio:.2f} below floor {min_ratio:.2f} "
+                "— beyond any quick-config dispatch-overhead inversion")
     for name, key in RECORDED_VALUES:
         if name not in fresh:
             print(f"[recorded] {name}: row missing (not gated)")

@@ -27,14 +27,32 @@ The arena collapses the forest to a single contiguous ``float32`` buffer:
 Invariants (relied on by kernels, the store, and the property tests):
 
   I1  ``offset`` and ``words`` of every table row are multiples of
-      ``ARENA_TILE``; ``total_words`` too.
-  I2  segments are disjoint and cover ``[0, total_words)`` exactly.
+      ``ARENA_TILE``; ``data_words`` and ``total_words`` too.
+  I2  segments are disjoint and cover ``[0, data_words)`` exactly;
+      ``[data_words, total_words)`` is the arena-level shard pad (zero
+      tiles appended so ``n_tiles`` divides ``shards`` evenly — empty
+      when ``shards == 1``, which is the historical layout bit-for-bit).
   I3  ``unpack(pack(tree)) == tree`` bit-exactly for every supported
       dtype (f32/bf16/f16), any shape (including scalars and ragged
       tail blocks).
   I4  pad words are 0.0f (bit pattern 0x00000000) after ``pack`` and are
       *kept* zero by every arena mutation (scatter saves copy whole
-      segments, so pads are overwritten with source pads — also zero).
+      segments, so pads are overwritten with source pads — also zero;
+      the shard-pad tail is never a scatter target).
+
+Sharded form: when the trainer runs on a mesh, the same 1-D buffer
+carries a flat ``NamedSharding`` over every mesh axis — device ``d`` of
+``n`` owns words ``[d·total/n, (d+1)·total/n)``, a whole number of
+``(8, 128)`` tiles by I1/I2. ``arena_block_homes`` derives the
+block→device map *from* that span ownership, so "each device owns the
+tile-aligned segments of its home blocks" holds by construction.
+
+.. warning:: jax 0.4.37's CPU SPMD partitioner miscompiles
+   ``concatenate`` of 1-D operands that carry a minor-mesh-axis
+   sharding (wrong *values*, not a perf hazard). ``pack_arena`` takes
+   ``out_sharding`` and pins every part and the result to the flat
+   arena sharding, which sidesteps the bug and is the layout we want
+   anyway; sharded callers must pass it.
 """
 from __future__ import annotations
 
@@ -103,15 +121,28 @@ class ArenaLayout:
     leaf_offset: tuple[int, ...]        # word offset of each leaf's segment
     seg_words: tuple[int, ...]          # aligned words per block, per leaf
     payload_words: tuple[int, ...]      # live words per block, per leaf
-    total_words: int                    # ARENA_TILE multiple
+    total_words: int                    # ARENA_TILE multiple (incl. shard pad)
     ab_t0: np.ndarray                   # (n_ab,) first tile per arena block
     ab_nt: np.ndarray                   # (n_ab,) tiles per arena block
     gid_ab: np.ndarray                  # arena blocks sorted by gid (CSR)
     gid_ptr: np.ndarray                 # (total_blocks + 1,) CSR pointers
+    shards: int = 1                     # even flat-sharding divisor of n_tiles
+    data_words: int = -1                # words before the shard-pad tail
 
     @property
     def n_tiles(self) -> int:
         return self.total_words // ARENA_TILE
+
+    @property
+    def pad_words(self) -> int:
+        """Zero words of the shard-pad tail (0 when ``shards == 1``)."""
+        return self.total_words - (self.total_words if self.data_words < 0
+                                   else self.data_words)
+
+    @property
+    def shard_words(self) -> int:
+        """Words each of the ``shards`` flat shards owns (tile multiple)."""
+        return self.total_words // self.shards
 
     @property
     def rows_2d(self) -> int:
@@ -124,9 +155,17 @@ class ArenaLayout:
     # -- host-side routing (O(selected), not O(table)) -----------------------
 
     def tile_gids(self) -> np.ndarray:
-        """(n_tiles,) global block id owning each (8, 128) tile."""
+        """(n_tiles,) global block id owning each (8, 128) tile.
+
+        Shard-pad tail tiles report gid 0: their words are zero in every
+        arena (I4), so any per-gid reduction over tiles (scores, diffs)
+        sees an exact ``+0.0`` contribution — bit-neutral."""
         gids = np.asarray([ab.gid for ab in self.blocks], np.int32)
-        return np.repeat(gids, self.ab_nt)
+        gids = np.repeat(gids, self.ab_nt)
+        pad = self.n_tiles - gids.size
+        if pad:
+            gids = np.concatenate([gids, np.zeros(pad, np.int32)])
+        return gids
 
     def blocks_for_gids(self, global_ids) -> np.ndarray:
         """Ascending arena-block indices covering the given gids — every
@@ -173,7 +212,15 @@ def as_live_arena(x: Any, layout: Optional[ArenaLayout]):
     return None
 
 
-def build_arena_layout(partition: BlockPartition) -> ArenaLayout:
+def build_arena_layout(partition: BlockPartition,
+                       shards: int = 1) -> ArenaLayout:
+    """Lay out ``partition`` in the flat arena.
+
+    ``shards > 1`` appends zero tiles so ``n_tiles % shards == 0`` —
+    every flat shard of the 1-D buffer then owns a whole number of
+    ``(8, 128)`` tiles and the data region ``[0, data_words)`` is
+    *identical* to the ``shards=1`` layout (relayout across shard counts
+    is a slice + re-pad, bit-exact)."""
     blocks: list[ArenaBlock] = []
     leaf_offset, seg_words, payload_words = [], [], []
     off = 0
@@ -192,27 +239,42 @@ def build_arena_layout(partition: BlockPartition) -> ArenaLayout:
     order = np.argsort(ab_gid, kind="stable")
     gid_ptr = np.searchsorted(ab_gid[order],
                               np.arange(partition.total_blocks + 1))
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    data_words = off
+    pad_tiles = (-(data_words // ARENA_TILE)) % shards
+    total_words = data_words + pad_tiles * ARENA_TILE
     return ArenaLayout(partition=partition, blocks=tuple(blocks),
                        leaf_offset=tuple(leaf_offset),
                        seg_words=tuple(seg_words),
-                       payload_words=tuple(payload_words), total_words=off,
+                       payload_words=tuple(payload_words),
+                       total_words=total_words,
                        ab_t0=np.asarray([ab.offset // ARENA_TILE
                                          for ab in blocks], np.int64),
                        ab_nt=np.asarray([ab.words // ARENA_TILE
                                          for ab in blocks], np.int64),
-                       gid_ab=order, gid_ptr=gid_ptr)
+                       gid_ab=order, gid_ptr=gid_ptr,
+                       shards=shards, data_words=data_words)
 
 
 # ---------------------------------------------------------------------------
 # pack / unpack / restore (pure, jittable; layout is static)
 # ---------------------------------------------------------------------------
 
-def pack_arena(values: PyTree, layout: ArenaLayout) -> jnp.ndarray:
+def pack_arena(values: PyTree, layout: ArenaLayout,
+               out_sharding=None) -> jnp.ndarray:
     """Pack a tree into the flat (total_words,) float32 arena.
 
     One read of every leaf, one write of the arena — this *is* the replica
-    refresh cost when the fabric snapshots into arena form."""
+    refresh cost when the fabric snapshots into arena form.
+
+    ``out_sharding`` (a flat 1-D ``NamedSharding``) pins every part and
+    the result; **required** when any input leaf is mesh-sharded — see
+    the module warning on the jax 0.4.37 sharded-``concatenate``
+    miscompile this constraint sidesteps."""
     part = layout.partition
+    con = ((lambda v: jax.lax.with_sharding_constraint(v, out_sharding))
+           if out_sharding is not None else (lambda v: v))
     parts = []
     for x, leaf, seg, payload in zip(jax.tree_util.tree_leaves(values),
                                      part.leaves, layout.seg_words,
@@ -220,8 +282,11 @@ def pack_arena(values: PyTree, layout: ArenaLayout) -> jnp.ndarray:
         view = leaf_block_view(x.astype(jnp.float32), part.block_rows)
         if view.shape[1] < seg:
             view = jnp.pad(view, ((0, 0), (0, seg - view.shape[1])))
-        parts.append(view.reshape(-1))
-    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+        parts.append(con(view.reshape(-1)))
+    if layout.pad_words:
+        parts.append(con(jnp.zeros((layout.pad_words,), jnp.float32)))
+    out = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    return con(out)
 
 
 def _decode_leaf(arena: jnp.ndarray, layout: ArenaLayout, li: int):
@@ -241,6 +306,46 @@ def unpack_arena(arena: jnp.ndarray, layout: ArenaLayout) -> PyTree:
     out = [_decode_leaf(arena, layout, li)
            for li in range(len(layout.partition.leaves))]
     return jax.tree_util.tree_unflatten(layout.partition.treedef, out)
+
+
+def relayout_arena(arena, old: ArenaLayout, new: ArenaLayout,
+                   out_sharding=None):
+    """Re-pad an arena across a shard-count change, bit-exactly.
+
+    The data region ``[0, data_words)`` is identical for every shard
+    count of the same partition (``build_arena_layout`` only moves the
+    zero tail), so relayout is a host-side slice + re-pad. Used on the
+    elastic resize path (mesh shrink / re-grow), which is failure-rate —
+    not per-step — so the device round trip is acceptable; the result is
+    ``device_put`` onto ``out_sharding`` when given."""
+    if old.data_words != new.data_words:
+        raise ValueError("relayout_arena: layouts disagree on the data "
+                         f"region ({old.data_words} vs {new.data_words} "
+                         "words) — not the same partition")
+    host = np.asarray(arena)
+    data = host[:new.data_words]
+    out = np.concatenate(
+        [data, np.zeros((new.total_words - new.data_words,), np.float32)])
+    return jax.device_put(out, out_sharding) if out_sharding is not None \
+        else jnp.asarray(out)
+
+
+def arena_block_homes(layout: ArenaLayout,
+                      n_devices: Optional[int] = None) -> np.ndarray:
+    """(total_blocks,) home device of each gid, derived from flat-shard
+    span ownership: the device whose contiguous word span holds the
+    first tile of the gid's first arena block. With ``shards ==
+    n_devices`` every device's span is tile-aligned (I1/I2), so a
+    device's home blocks are exactly the tile-aligned segments it
+    already owns — the sharded maintain sweep and the partial save read
+    only local (plus boundary-straddling) tiles."""
+    n = layout.shards if n_devices is None else int(n_devices)
+    if layout.n_tiles % n:
+        raise ValueError(f"n_tiles {layout.n_tiles} not divisible by "
+                         f"{n} devices — build the layout with shards={n}")
+    tiles_per = layout.n_tiles // n
+    first_ab = layout.gid_ab[layout.gid_ptr[:-1]]
+    return (layout.ab_t0[first_ab] // tiles_per).astype(np.int64)
 
 
 def arena_restore(dst: PyTree, arena: jnp.ndarray, global_mask,

@@ -60,7 +60,8 @@ class FTController:
                  colocate: tuple = (),
                  fabric: Optional[Any] = None,
                  inplace_save: bool = True,
-                 recorder: Optional[Any] = None):
+                 recorder: Optional[Any] = None,
+                 mesh: Optional[Any] = None):
         self.policy = policy
         # unified telemetry (repro.telemetry): the NULL_RECORDER default
         # keeps every emit point a no-op; a real Recorder receives this
@@ -102,7 +103,8 @@ class FTController:
             from repro.fabric import CheckpointFabric, FabricConfig
             if isinstance(fabric, FabricConfig):
                 fabric = CheckpointFabric(self.partition, fabric,
-                                          recorder=self.recorder)
+                                          recorder=self.recorder,
+                                          mesh=mesh)
             elif self.recorder.enabled:
                 fabric.attach_recorder(self.recorder)
             if policy.recovery == RecoveryMode.FULL:
@@ -136,8 +138,10 @@ class FTController:
                      or policy.norm == "l2")):
             from repro.core.arena import pack_arena, unpack_arena
             layout = self.fabric.arena_layout
+            sh = getattr(self.fabric, "_arena_sharding", None)
             self._arena_layout = layout
-            self._pack_jit = jax.jit(lambda t: pack_arena(t, layout))
+            self._pack_jit = jax.jit(
+                lambda t: pack_arena(t, layout, out_sharding=sh))
             self._unpack_jit = jax.jit(lambda a: unpack_arena(a, layout))
             self._ckpt_arena = self._pack_jit(params)
         if store is not None:
@@ -195,6 +199,30 @@ class FTController:
         """Decode an arena back to tree form (recovery/analysis paths)."""
         assert self.arena_ready, "controller has no arena layout"
         return self._unpack_jit(arena)
+
+    def rebind_arena(self) -> None:
+        """Adopt the fabric's *current* arena layout after an elastic mesh
+        resize (:meth:`CheckpointFabric.resize_mesh`): rebuilds the
+        pack/unpack/score programs for the new shard count and relayouts
+        the running-checkpoint arena onto the new mesh — the data region
+        is layout-invariant, so the checkpoint values are bit-preserved
+        through any number of shrink/re-grow cycles."""
+        assert self.arena_ready and self.fabric is not None, \
+            "rebind_arena needs an arena-native controller with a fabric"
+        from repro.core.arena import pack_arena, relayout_arena, unpack_arena
+        old = self._arena_layout
+        layout = self.fabric.arena_layout
+        sh = getattr(self.fabric, "_arena_sharding", None)
+        self._arena_layout = layout
+        self._pack_jit = jax.jit(
+            lambda t: pack_arena(t, layout, out_sharding=sh))
+        self._unpack_jit = jax.jit(lambda a: unpack_arena(a, layout))
+        self._arena_score_jit = None
+        self._arena_score_live_jit = None
+        if self._ckpt_arena is not None and layout is not old:
+            self._ckpt_arena = relayout_arena(self._ckpt_arena, old, layout,
+                                              out_sharding=sh)
+            self._ckpt_dirty = True
 
     def live_value_needed(self, step: int) -> bool:
         """True when this step's :meth:`maintain` or
@@ -414,11 +442,14 @@ class FTController:
             # arena is at hand — the snapshot holds this step's values
             # bit-exactly, and sourcing from it keeps the save's reads
             # off the buffer the next train step is about to donate
-            src = rep.arena
+            # (arena_local: on a mesh the replica lives on the rotated
+            # anti-affine device order and must be re-placed before it
+            # can enter a jit with the flat-sharded checkpoint arena)
+            src = rep.arena_local()
         elif live is not None:
             src = live
         elif published:
-            src = rep.arena
+            src = rep.arena_local()
         else:
             src = self._pack_jit(params)
         self._ckpt_arena, moved = arena_scatter_save(

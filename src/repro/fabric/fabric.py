@@ -80,15 +80,67 @@ class CheckpointFabric:
     def __init__(self, partition: BlockPartition,
                  cfg: Optional[FabricConfig] = None,
                  homes: Optional[np.ndarray] = None,
-                 recorder: Optional[Any] = None):
+                 recorder: Optional[Any] = None,
+                 mesh: Optional[Any] = None):
         self.cfg = cfg or FabricConfig()
         self.recorder = recorder if recorder is not None else NULL_RECORDER
         self.partition = partition
         self.domains = FailureDomainMap(self.cfg.n_devices,
                                         self.cfg.devices_per_host,
                                         self.cfg.hosts_per_rack)
-        initial = (np.asarray(homes, np.int32) if homes is not None
-                   else block_device_homes(partition, self.cfg.n_devices))
+        # flat parameter arena: the canonical hot-path representation —
+        # requires the single-sweep pipeline (``fused=False`` is the seed
+        # baseline), both tiers (the sweep's pack is the replica write,
+        # its XOR routing needs the parity striping), and
+        # f32-round-trippable leaf dtypes; otherwise fall back to the
+        # per-leaf fused path. With a ``mesh`` the layout is built with
+        # one tile-aligned shard per device (``shards=mesh size``) so
+        # every device owns a contiguous span and the sweep runs
+        # shard-local (see arena.py "Sharded form").
+        self.arena_layout = None
+        if self.cfg.arena and self.cfg.fused and self.cfg.replicate \
+                and self.cfg.parity:
+            from repro.core.arena import arena_compatible, build_arena_layout
+            if arena_compatible(partition):
+                shards = 1
+                if mesh is not None:
+                    shards = int(np.asarray(mesh.devices).size)
+                self.arena_layout = build_arena_layout(partition,
+                                                       shards=shards)
+        # SPMD binding: mesh position i (row-major) IS fabric logical
+        # device i, so the sharded arena's span owners line up with the
+        # failure-domain map. Requires the mesh to cover the configured
+        # topology exactly at construction (shrunk meshes only ever come
+        # from resize_mesh, which carries the surviving logical ids).
+        self.mesh = None
+        self._mesh_logical = None
+        self._arena_sharding = None
+        self._replica_sharding = None
+        self._xfer_split = (0, 0, 0)    # (local, ici, dcn) bytes/transfer
+        if mesh is not None:
+            n = int(np.asarray(mesh.devices).size)
+            if n != self.cfg.n_devices:
+                raise ValueError(
+                    f"mesh has {n} devices but the fabric topology is "
+                    f"configured for {self.cfg.n_devices} "
+                    "(FabricConfig.n_devices must match the mesh so "
+                    "failure domains map onto real devices)")
+            if self.arena_layout is None:
+                raise ValueError(
+                    "a meshed fabric needs the sharded arena pipeline "
+                    "(arena=True, fused=True, both tiers, arena-compatible "
+                    "dtypes) — there is no sharded per-leaf fallback")
+            self._bind_mesh(mesh, np.arange(n, dtype=np.int32))
+        if homes is not None:
+            initial = np.asarray(homes, np.int32)
+        elif self.mesh is not None:
+            # span-derived homes: a block lives where the sharded arena
+            # places its first tile, so "primary home" and "owning shard"
+            # agree and the sweep's writes are home-local by construction
+            from repro.core.arena import arena_block_homes
+            initial = arena_block_homes(self.arena_layout).astype(np.int32)
+        else:
+            initial = block_device_homes(partition, self.cfg.n_devices)
         self.view = ClusterView(self.domains, initial)
         self.replicas = (ReplicaSet(partition, self.view)
                          if self.cfg.replicate else None)
@@ -99,6 +151,8 @@ class CheckpointFabric:
         self.planner = TieredRecovery(partition, self.view,
                                       replicas=self.replicas,
                                       parity=self.parity)
+        if self.replicas is not None and self._arena_sharding is not None:
+            self.replicas.main_sharding = self._arena_sharding
         self.last_maintained_step = -1
         # fused maintenance programs: (re)built lazily against the view's
         # current striping (see _fused_maintain_fn / _arena_maintain_fn)
@@ -110,18 +164,6 @@ class CheckpointFabric:
         self._traffic = None
         self.last_scores = None
         self.last_scores_step = -1
-        # flat parameter arena: the canonical hot-path representation —
-        # requires the single-sweep pipeline (``fused=False`` is the seed
-        # baseline), both tiers (the sweep's pack is the replica write,
-        # its XOR routing needs the parity striping), and
-        # f32-round-trippable leaf dtypes; otherwise fall back to the
-        # per-leaf fused path
-        self.arena_layout = None
-        if self.cfg.arena and self.cfg.fused and self.replicas is not None \
-                and self.parity is not None:
-            from repro.core.arena import arena_compatible, build_arena_layout
-            if arena_compatible(partition):
-                self.arena_layout = build_arena_layout(partition)
         # True once a maintain has been fed the live arena itself
         # (arena-resident training state): every sweep from then on is
         # pack-free and the accounting switches to the resident model
@@ -157,7 +199,9 @@ class CheckpointFabric:
             "fused_maintains": 0, "arena_maintains": 0,
             "arena_resident_maintains": 0, "live_packs": 0,
             "async_maintains": 0, "fence_count": 0,
-            "maintain_bytes_moved": 0})
+            "maintain_bytes_moved": 0,
+            "ici_bytes_moved": 0, "dcn_bytes_moved": 0,
+            "mesh_resizes": 0})
         if self.recorder.enabled:
             self.recorder.adopt_histogram("fabric/fence_seconds",
                                           self.fence_hist)
@@ -178,6 +222,62 @@ class CheckpointFabric:
     def homes(self) -> np.ndarray:
         """Current primary placement (the view's, not the initial one)."""
         return self.view.homes
+
+    # -- SPMD mesh binding ---------------------------------------------------
+
+    def _bind_mesh(self, mesh, logical_ids: np.ndarray) -> None:
+        """Bind the fabric to a device mesh: mesh position ``i`` ↔ fabric
+        logical device ``logical_ids[i]``. Computes the flat arena
+        sharding, the anti-affine replica sharding (shard ``j``'s copy
+        lands a whole failure domain away — the rotation maximizing
+        cross-host, then cross-rack, pairs in the *bound* topology), and
+        the per-transfer local/ICI/DCN byte split the maintain events
+        report."""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec
+        from repro.sharding.partition import arena_sharding
+        self.mesh = mesh
+        self._mesh_logical = np.asarray(logical_ids, np.int32)
+        self._arena_sharding = arena_sharding(mesh)
+        devs = np.asarray(mesh.devices).reshape(-1)
+        n = devs.size
+        hosts = np.asarray(self.domains.host_of(self._mesh_logical))
+        racks = np.asarray(self.domains.rack_of(self._mesh_logical))
+        best, shift = (-1, -1), 0
+        for s in range(1, n):
+            dst = (np.arange(n) + s) % n
+            key = (int(np.sum(hosts[dst] != hosts)),
+                   int(np.sum(racks[dst] != racks)))
+            if key > best:
+                best, shift = key, s
+        if shift == 0:
+            self._replica_sharding = None   # single device: copy in place
+            self._xfer_split = (0, 0, 0)
+            return
+        rolled = np.roll(devs, -shift)      # span j -> devs[(j+shift) % n]
+        self._replica_sharding = NamedSharding(
+            Mesh(rolled, ("arena",)), PartitionSpec("arena"))
+        # classify each span's replica hop: same host = ICI, cross-host =
+        # DCN (same device = no wire at all)
+        dst = (np.arange(n) + shift) % n
+        sw = self.arena_layout.shard_words * 4
+        local = int(np.sum(dst == np.arange(n))) * sw
+        ici = int(np.sum((hosts[dst] == hosts)
+                         & (dst != np.arange(n)))) * sw
+        dcn = int(np.sum(hosts[dst] != hosts)) * sw
+        self._xfer_split = (local, ici, dcn)
+
+    def _replica_xfer(self, rep):
+        """Ship the replica arena to its anti-affine homes: one rotated
+        ``device_put`` — every device sends its span to a device in a
+        different failure domain (a true D2D transfer under SPMD; a no-op
+        copy without a mesh). Books the ICI/DCN split."""
+        if self._replica_sharding is None:
+            return rep
+        out = jax.device_put(rep, self._replica_sharding)
+        _, ici, dcn = self._xfer_split
+        self.stats["ici_bytes_moved"] += ici
+        self.stats["dcn_bytes_moved"] += dcn
+        return out
 
     # -- maintenance ---------------------------------------------------------
 
@@ -220,6 +320,8 @@ class CheckpointFabric:
         live = as_live_arena(params, self.arena_layout)
         due_replica, due_parity = self.maintenance_due(step, force=force)
         b0 = self.stats["maintain_bytes_moved"]
+        i0 = self.stats["ici_bytes_moved"]
+        d0 = self.stats["dcn_bytes_moved"]
         if self.cfg.async_maintain and live is not None \
                 and (due_replica or due_parity):
             # pipelined path: dispatch only, no fence — the sweep runs
@@ -232,6 +334,8 @@ class CheckpointFabric:
                 self.recorder.event(
                     "maintain", step=step, mode="arena_async",
                     bytes_moved=self.stats["maintain_bytes_moved"] - b0,
+                    ici_bytes=self.stats["ici_bytes_moved"] - i0,
+                    dcn_bytes=self.stats["dcn_bytes_moved"] - d0,
                     replica=due_replica, parity=due_parity)
             return
         mode = "components"
@@ -264,6 +368,8 @@ class CheckpointFabric:
             self.recorder.event(
                 "maintain", step=step, mode=mode,
                 bytes_moved=self.stats["maintain_bytes_moved"] - b0,
+                ici_bytes=self.stats["ici_bytes_moved"] - i0,
+                dcn_bytes=self.stats["dcn_bytes_moved"] - d0,
                 replica=due_replica, parity=due_parity)
 
     def _fused_maintain(self, step: int, params: PyTree,
@@ -305,7 +411,8 @@ class CheckpointFabric:
         owned = own_live and is_arena
         resident = is_arena and not owned
         rep, scores, parity = fn(params, z, own_live=owned)
-        self.replicas.ingest_arena(step, rep, self.arena_layout)
+        self.replicas.ingest_arena(step, self._replica_xfer(rep),
+                                   self.arena_layout)
         self.parity.ingest(step, parity)
         if z is not None:
             self.last_scores = scores
@@ -373,7 +480,8 @@ class CheckpointFabric:
             self._slots[inactive] = snap
             self._active_slot = inactive
         _, scores, parity = fn(snap, z, own_live=True)
-        self.replicas.ingest_arena(step, snap, self.arena_layout)
+        self.replicas.ingest_arena(step, self._replica_xfer(snap),
+                                   self.arena_layout)
         self.parity.ingest(step, parity)
         if z is not None:
             self.last_scores = scores
@@ -443,8 +551,9 @@ class CheckpointFabric:
             return ckpt_values
         if self._pack_fn is None:
             from repro.core.arena import pack_arena
+            layout, sh = self.arena_layout, self._arena_sharding
             self._pack_fn = jax.jit(
-                lambda t: pack_arena(t, self.arena_layout))
+                lambda t: pack_arena(t, layout, out_sharding=sh))
         return self._pack_fn(ckpt_values)
 
     def _arena_maintain_fn(self):
@@ -455,7 +564,8 @@ class CheckpointFabric:
             self._arena_fn = ArenaMaintainProgram(
                 self.partition, self.arena_layout, self.parity.layout,
                 self.parity.group_of, self.parity.n_groups,
-                use_pallas=self.cfg.use_pallas)
+                use_pallas=self.cfg.use_pallas,
+                out_sharding=self._arena_sharding)
             self._arena_version = self.view.version
             self._traffic = None
         return self._arena_fn
@@ -780,3 +890,63 @@ class CheckpointFabric:
             self.recorder.event("heal", domain_kind=kind,
                                 domain_index=int(index), step=step, **info)
         return info
+
+    # -- elastic mesh resize -------------------------------------------------
+
+    def resize_mesh(self, mesh, logical_ids, step: Optional[int] = None,
+                    params: Optional[Any] = None):
+        """Re-bind a meshed fabric to a shrunk (or re-grown) device mesh.
+
+        ``logical_ids[i]`` is the fabric logical device at mesh position
+        ``i`` — on a shrink these are the survivors, on a re-grow the full
+        original id range. Rebuilds the arena layout at the new shard
+        count (the data region is identical, only the zero shard-pad tail
+        changes — see :func:`~repro.core.arena.relayout_arena`), re-homes
+        every block to its new owning shard, re-seeds replicas and
+        re-stripes parity in the surviving topology, and invalidates every
+        cached program/slot laid out for the old shard count.
+
+        ``params`` — the live arena *already relayouted to the new layout
+        and placed on the new mesh* — triggers an immediate maintain so
+        every tier is fresh on the new placement; without it the tiers go
+        stale until the caller's next ``maintain`` (the old-layout replica
+        stays decodable meanwhile: the data region is layout-invariant).
+
+        Returns the new :class:`~repro.core.arena.ArenaLayout`; the caller
+        (the training loop) relayouts its own state against it and re-jits
+        the step.
+        """
+        assert self.arena_layout is not None, \
+            "resize_mesh is a sharded-arena operation (meshed fabric only)"
+        self._settle_pending()
+        from repro.core.arena import arena_block_homes, build_arena_layout
+        logical_ids = np.asarray(logical_ids, np.int32)
+        new_layout = build_arena_layout(
+            self.partition, shards=int(np.asarray(mesh.devices).size))
+        self.arena_layout = new_layout
+        self._bind_mesh(mesh, logical_ids)
+        # span-derived homes over the surviving shards
+        self.view.homes[:] = logical_ids[arena_block_homes(new_layout)]
+        self.view.version += 1
+        # every cached artifact below is laid out for the old shard count
+        self._arena_fn = None
+        self._pack_fn = None
+        self._traffic = None
+        self._slots = [None, None]
+        if self.replicas is not None:
+            self.replicas.reseed()
+            self.replicas.main_sharding = self._arena_sharding
+        if self.parity is not None:
+            self.parity.restripe()
+        self.planner.rehome()
+        at = int(step) if step is not None else self.last_maintained_step
+        if params is not None:
+            self._arena_maintain(at, params, None)
+            self.last_maintained_step = at
+        self.stats["mesh_resizes"] += 1
+        if self.recorder.enabled:
+            self.recorder.event(
+                "mesh_resize", step=at, shards=new_layout.shards,
+                alive_devices=self.view.n_alive_devices,
+                alive_hosts=self.view.n_alive_hosts)
+        return new_layout

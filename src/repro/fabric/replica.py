@@ -43,6 +43,12 @@ class ReplicaSet:
         self._tree: Optional[PyTree] = None
         self._arena: Optional[jnp.ndarray] = None
         self.arena_layout = None
+        # SPMD meshes: the fabric sets this to the flat arena sharding.
+        # The ingested replica then lives on the *rotated* (anti-affine)
+        # device order, and consumers that feed it into a jit alongside
+        # flat-sharded state re-place it here first — XLA requires one
+        # consistent device assignment per computation.
+        self.main_sharding = None
         self.refreshed_step = -1
 
     # -- maintenance ---------------------------------------------------------
@@ -84,12 +90,20 @@ class ReplicaSet:
         """The arena-form snapshot, or None when tree-form (or empty)."""
         return self._arena
 
+    def arena_local(self) -> Optional[jnp.ndarray]:
+        """The arena snapshot re-placed on the primary (flat) sharding —
+        for consumers that mix it with flat-sharded state in one jit.
+        Identity without a mesh (or when no snapshot exists)."""
+        if self._arena is None or self.main_sharding is None:
+            return self._arena
+        return jax.device_put(self._arena, self.main_sharding)
+
     @property
     def values(self) -> Optional[PyTree]:
         """Tree-form snapshot; decodes the arena on first access."""
         if self._tree is None and self._arena is not None:
             from repro.core.arena import unpack_arena
-            self._tree = unpack_arena(self._arena, self.arena_layout)
+            self._tree = unpack_arena(self.arena_local(), self.arena_layout)
         return self._tree
 
     def is_fresh(self, step: int) -> bool:

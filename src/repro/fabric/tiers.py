@@ -170,9 +170,12 @@ class TieredRecovery:
             if self.replicas.arena is not None:
                 # arena-form snapshot: each touched leaf decodes one
                 # contiguous arena slice — no full-tree materialization
+                # (arena_local: on a mesh the replica sits on the rotated
+                # anti-affine device order; re-place before mixing with
+                # the flat-sharded live values in one computation)
                 from repro.kernels.masked_restore.ops import \
                     arena_masked_restore
-                out = arena_masked_restore(out, self.replicas.arena,
+                out = arena_masked_restore(out, self.replicas.arena_local(),
                                            np.asarray(m_rep),
                                            self.replicas.arena_layout)
             else:
@@ -196,7 +199,7 @@ class TieredRecovery:
                 # snapshot arena, so the arena IS the encode-time frame
                 # source — one gather, no full-tree pack_frames pass
                 frames = self.parity.reconstruct_from_arena(
-                    self.replicas.arena, self.replicas.arena_layout,
+                    self.replicas.arena_local(), self.replicas.arena_layout,
                     m_par, available)
             else:
                 frames = self.parity.reconstruct(out, m_par, available)

@@ -192,8 +192,12 @@ def arena_routing(arena_layout, frame_layout: FrameLayout,
     group_of = np.asarray(group_of, np.int32)
     n_tiles = arena_layout.n_tiles
     ftiles = frame_layout.frame_elems // ARENA_TILE
-    dest_full = np.empty((n_tiles,), np.int64)
-    tile_gid = np.empty((n_tiles,), np.int32)
+    # shard-pad tail tiles (sharded layouts only) carry no payload: they
+    # route to no parity destination (dest -1, dropped from the perm) and
+    # report gid 0 — zero words diffed against zero words add an exact
+    # +0.0 to gid 0's score, so the score path can stay full-length
+    dest_full = np.full((n_tiles,), -1, np.int64)
+    tile_gid = np.zeros((n_tiles,), np.int32)
     for ab in arena_layout.blocks:
         g = group_of[ab.gid]
         assert g >= 0, f"arena block gid={ab.gid} outside any parity group"
@@ -202,7 +206,9 @@ def arena_routing(arena_layout, frame_layout: FrameLayout,
         col_t = frame_layout.cols[ab.leaf] // ARENA_TILE
         dest_full[t0:t0 + nt] = g * ftiles + col_t + np.arange(nt)
         tile_gid[t0:t0 + nt] = ab.gid
-    perm = np.argsort(dest_full, kind="stable").astype(np.int32)
+    data_tiles = np.nonzero(dest_full >= 0)[0]
+    perm = data_tiles[np.argsort(dest_full[data_tiles],
+                                 kind="stable")].astype(np.int32)
     dest_sorted = dest_full[perm]
     touched, inverse = np.unique(dest_sorted, return_inverse=True)
     dest = inverse.astype(np.int32)
@@ -245,7 +251,7 @@ class ArenaMaintainProgram:
     def __init__(self, partition: BlockPartition, arena_layout,
                  frame_layout: FrameLayout, group_of: np.ndarray,
                  n_groups: int, use_pallas: Optional[bool] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, out_sharding=None):
         from repro.core.arena import ARENA_TILE, pack_arena
         if use_pallas is None:
             use_pallas = _is_tpu()
@@ -292,13 +298,17 @@ class ArenaMaintainProgram:
                                                          frame_elems)
             return scores, parity
 
+        # ``out_sharding`` (SPMD meshes) pins the internal pack to the
+        # flat arena sharding — both the layout the sweep wants and the
+        # workaround for jax 0.4.37's sharded-concatenate miscompile
+        # (see core/arena.py)
         def _scored(params, z_arena):
-            rep = pack_arena(params, arena_layout)
+            rep = pack_arena(params, arena_layout, out_sharding=out_sharding)
             scores, parity = _sweep(rep, z_arena)
             return rep, scores, parity
 
         def _unscored(params):
-            rep = pack_arena(params, arena_layout)
+            rep = pack_arena(params, arena_layout, out_sharding=out_sharding)
             _, parity = _sweep(rep, rep)
             return rep, jnp.zeros((total,), jnp.float32), parity
 
@@ -588,4 +598,13 @@ def maintain_traffic(partition: BlockPartition, layout: FrameLayout,
         # is the price of decoupling the sweep from the donated live
         # buffer; the wall-clock it buys back is the whole sweep.
         out["arena_async"] = int(out["arena_resident"] + a)
+        # SPMD sharded arena: the sweep byte count is unchanged in total
+        # (same 2-read/1-write pass, now executed shard-locally — each of
+        # the `shards` devices touches 1/shards of every term), but the
+        # replica copy crosses the interconnect: an anti-affine placement
+        # moves the whole arena device-to-device once per sweep. Per-
+        # device HBM traffic is arena_sharded / shards.
+        out["arena_sharded"] = int(out["arena_resident"])
+        out["arena_sharded_xfer"] = int(a)
+        out["arena_shards"] = int(getattr(arena_layout, "shards", 1))
     return out

@@ -41,3 +41,23 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     data = n // model
     return make_mesh_compat((data, model), ("data", "model"))
+
+
+def mesh_devices(mesh) -> list:
+    """Row-major device list of a mesh — position ``i`` here is fabric
+    logical device ``i`` (the contract the elastic sharded-arena path
+    uses to map ``ClusterView`` homes onto jax devices)."""
+    import numpy as np
+    return list(np.asarray(mesh.devices).reshape(-1))
+
+
+def survivor_mesh(devices):
+    """Mesh over an explicit surviving device list: ``(n, 1)`` with axes
+    ``("data", "model")`` — model parallelism collapses on shrink (the
+    survivor set need not tile the original model axis), data
+    parallelism carries the remaining throughput. Re-grow rebuilds the
+    original mesh shape via :func:`make_mesh_compat`."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = np.asarray(list(devices), dtype=object)
+    return Mesh(devs.reshape(devs.size, 1), ("data", "model"))

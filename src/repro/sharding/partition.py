@@ -239,6 +239,35 @@ def batch_partition_specs(batch_shape: PyTree, ctx: DistContext) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
+# Flat arena sharding
+# ---------------------------------------------------------------------------
+
+def arena_sharding(mesh: Mesh) -> NamedSharding:
+    """Flat 1-D sharding of the parameter arena over *every* mesh axis.
+
+    Device ``i`` (row-major over the mesh) owns the contiguous word span
+    ``[i·total/n, (i+1)·total/n)`` — a whole number of ``(8, 128)`` tiles
+    when the layout was built with ``shards = mesh.devices.size``. The
+    optimizer sweep (``arena_apply``), the maintain sweep, and the
+    replica copy all become shard-local passes under this placement."""
+    return NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+
+def shard_arena_state(state, mesh: Mesh):
+    """Place an ``ArenaTrainState``-shaped pytree on the mesh: every 1-D
+    floating leaf (arena, adam moments) gets the flat arena sharding,
+    scalars (step counts) replicate."""
+    flat = arena_sharding(mesh)
+    rep = NamedSharding(mesh, P())
+
+    def put(x):
+        if getattr(x, "ndim", None) == 1:
+            return jax.device_put(x, flat)
+        return jax.device_put(x, rep)
+    return jax.tree_util.tree_map(put, state)
+
+
+# ---------------------------------------------------------------------------
 # Failure domains: mesh devices -> parameter blocks
 # ---------------------------------------------------------------------------
 

@@ -60,6 +60,32 @@ def _bytes_breakdown(rec: Any) -> dict:
             "compact_reclaimed": compacted}
 
 
+def _interconnect(rec: Any) -> dict:
+    """ICI-vs-DCN split of the anti-affine replica transfer: cumulative
+    totals from the fabric scope plus per-maintain averages from the
+    ``maintain`` events' ``ici_bytes``/``dcn_bytes`` fields. On a real
+    topology these are the link classes a block migration would cross, so
+    the split is the input a Chameleon-style migration cost model needs
+    (zero on an unmeshed fabric, where the replica never leaves the
+    host)."""
+    scopes = getattr(rec, "scopes", {}) or {}
+
+    def _get(scope: str, key: str) -> int:
+        return int(sum(v.get(key, 0) for name, v in scopes.items()
+                       if name == scope or name.startswith(scope + "#")))
+
+    per = [(int(ev.get("ici_bytes") or 0), int(ev.get("dcn_bytes") or 0))
+           for ev in (getattr(rec, "events", []) or [])
+           if ev.get("kind") == "maintain"
+           and ("ici_bytes" in ev or "dcn_bytes" in ev)]
+    n = len(per)
+    return {"ici": _get("fabric", "ici_bytes_moved"),
+            "dcn": _get("fabric", "dcn_bytes_moved"),
+            "maintains": n,
+            "ici_per_maintain": (sum(p[0] for p in per) / n) if n else 0.0,
+            "dcn_per_maintain": (sum(p[1] for p in per) / n) if n else 0.0}
+
+
 def _overhead(rec: Any) -> dict:
     """p50/p95/max of the maintenance-overhead histogram (clean steps
     only — the loops exclude failure/heal steps at observe time)."""
@@ -95,6 +121,7 @@ def run_report(rec: Any, horizon: Optional[int] = None) -> dict:
         "recovery": _tier_table(events),
         "overhead_seconds": _overhead(rec),
         "bytes": _bytes_breakdown(rec),
+        "interconnect": _interconnect(rec),
         "ledger": (ledger.summary() if ledger is not None else None),
     }
     if ledger is not None and horizon is not None:
@@ -133,6 +160,13 @@ def format_report(report: dict) -> str:
     lines.append(f"bytes moved: maintain={b['maintain']:,} "
                  f"save={b['save']:,} mirrored={b['mirrored']:,} "
                  f"compact_reclaimed={b['compact_reclaimed']:,}")
+
+    ic = report.get("interconnect") or {}
+    if ic.get("ici") or ic.get("dcn"):
+        lines.append(
+            f"replica interconnect: ici={ic['ici']:,} dcn={ic['dcn']:,} "
+            f"(avg {ic['ici_per_maintain']:,.0f}/{ic['dcn_per_maintain']:,.0f}"
+            f" per maintain over {ic['maintains']})")
 
     led = report.get("ledger")
     if led and led["n_events"]:

@@ -96,30 +96,71 @@ def make_arena_train_step(ops: ModelOps, cfg: ModelConfig, ctx: DistContext,
     grads is the f32 image of the same values the tree optimizer reads,
     and the flat apply is the same elementwise math (with the non-f32
     dtype round trip done per segment in :func:`arena_apply`).
+
+    On a mesh (``ctx.mesh is not None``) the step is SPMD: the arena and
+    adam moments carry the flat :func:`~repro.sharding.partition
+    .arena_sharding` (each device owns a contiguous tile-aligned span),
+    decoded leaves are constrained to the model's FSDP+TP partition
+    specs, and the grads pack pins every part to the flat sharding
+    (both the layout we want and the workaround for jax 0.4.37's
+    sharded-``concatenate`` miscompile — see ``core/arena.py``). The
+    elementwise apply partitions exactly along the flat shards, so the
+    sharded step stays bit-equal to the PyTree step *on the same mesh*
+    (asserted in ``tests/test_sharded_arena.py``; across topologies,
+    reduction order differs at ULP level as with any SPMD change).
     """
     from repro.core.arena import pack_arena, unpack_arena
+    from repro.sharding.partition import (arena_sharding,
+                                          param_partition_specs)
+    from jax.sharding import NamedSharding
 
     loss_and_grad = jax.value_and_grad(ops.train_loss)
+    if ctx.mesh is not None:
+        flat_sh = arena_sharding(ctx.mesh)
+
+        def constrain_tree(p):
+            p_shape = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), p)
+            specs = param_partition_specs(p_shape, ctx)
+            return jax.tree_util.tree_map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(ctx.mesh, s)), p, specs)
+
+        def pack_grads(g):
+            return pack_arena(g, layout, out_sharding=flat_sh)
+
+        def constrain_arena(a):
+            return jax.lax.with_sharding_constraint(a, flat_sh)
+    else:
+        def constrain_tree(p):
+            return p
+
+        def pack_grads(g):
+            return pack_arena(g, layout)
+
+        def constrain_arena(a):
+            return a
 
     def train_step(state: ArenaTrainState, batch: PyTree):
-        params = unpack_arena(state.arena, layout)
+        params = constrain_tree(unpack_arena(state.arena, layout))
         mb = max(cfg.microbatch, 1)
         if mb == 1:
             loss, g = loss_and_grad(params, batch, cfg, ctx)
-            grads = pack_arena(g, layout)
+            grads = pack_grads(g)
         else:
             def split(x):
                 return x.reshape((mb, x.shape[0] // mb) + tuple(x.shape[1:]))
 
             mbatch = jax.tree_util.tree_map(split, batch)
             acc_dtype = jnp.dtype(cfg.opt_moment_dtype)
-            g0 = jnp.zeros((layout.total_words,), acc_dtype)
+            g0 = constrain_arena(jnp.zeros((layout.total_words,),
+                                           acc_dtype))
 
             def body(carry, bx):
                 loss_sum, gacc = carry
                 l, g = loss_and_grad(params, bx, cfg, ctx)
                 gacc = (gacc.astype(jnp.float32)
-                        + pack_arena(g, layout)).astype(acc_dtype)
+                        + pack_grads(g)).astype(acc_dtype)
                 return (loss_sum + l, gacc), None
 
             (loss, gacc), _ = jax.lax.scan(
@@ -129,7 +170,7 @@ def make_arena_train_step(ops: ModelOps, cfg: ModelConfig, ctx: DistContext,
         new_arena, opt_state = arena_apply(optimizer, grads,
                                            state.opt_state, state.arena,
                                            layout)
-        return ArenaTrainState(new_arena, opt_state, state.step + 1,
-                               state.layout), loss
+        return ArenaTrainState(constrain_arena(new_arena), opt_state,
+                               state.step + 1, state.layout), loss
 
     return train_step

@@ -60,10 +60,19 @@ class TrainLoopConfig:
     fail_domain: str = "uniform"    # "uniform" | "device" | "host" | "rack"
     fabric: Optional[Any] = None    # FabricConfig → tiered recovery fabric
     # arena-resident training state: the live params ARE the flat arena
-    # (needs an arena-capable fabric + single-device ctx; silently falls
-    # back to the PyTree path otherwise — set False to force the tree
-    # path, e.g. for models with non-arena dtypes or custom scorers)
+    # (needs an arena-capable fabric; works single-device and on SPMD
+    # meshes — the arena then carries the flat per-device sharding and
+    # the sweep runs shard-local). When requested but the fabric cannot
+    # engage it (non-arena dtypes, custom scorers, partial tiers) the
+    # loop warns and records a ``fabric/arena_gated`` event before
+    # falling back to the PyTree path — set False to silence that and
+    # force the tree path deliberately.
     arena_state: bool = True
+    # elastic SPMD mesh: with a meshed elastic fabric, a domain loss
+    # shrinks the mesh to the survivors (arena relayouted, step re-jitted,
+    # training continues) and a heal re-grows it. None = auto (on exactly
+    # when the arena path engaged on a mesh and the fabric is elastic).
+    elastic_mesh: Optional[bool] = None
     # record per-step maintenance overhead (``overhead_seconds`` in
     # metrics): blocks on the sweep's device outputs each step so the
     # number is the maintenance work, not its dispatch. Disable on
@@ -75,6 +84,10 @@ class TrainLoopConfig:
     # dead in the cluster view, and optionally heal ``heal_after`` steps
     # later (re-admitting their devices to the placement engine)
     mtbf: Optional[dict] = None     # e.g. {"host": 200.0, "device": 80.0}
+    # deterministic event schedule: (step, kind, index) triples (or
+    # FailureEvent objects) applied exactly, alongside any mtbf-sampled
+    # trace — reproducible soaks and elastic-mesh tests
+    fail_schedule: Optional[list] = None
     heal_after: Optional[int] = None
     # telemetry sink (repro.telemetry.Recorder): events/spans/ledger for
     # the whole loop + its controller/fabric/store. Default NULL_RECORDER —
@@ -87,7 +100,8 @@ class TrainLoopConfig:
         if self.fail_domain != "uniform" and self.fabric is None:
             raise ValueError("correlated fail_domain injection needs a "
                              "fabric (set TrainLoopConfig.fabric)")
-        if self.mtbf is not None and self.fabric is None:
+        if (self.mtbf is not None or self.fail_schedule) \
+                and self.fabric is None:
             raise ValueError("trace-driven soak mode needs a fabric "
                              "(set TrainLoopConfig.fabric)")
 
@@ -108,6 +122,16 @@ class TrainLoop:
         self.metrics: list[dict] = []
         self._redundancy_flags: list[bool] = []
         self.arena_layout = None          # set when the arena path engages
+        # elastic-mesh bookkeeping: the base (full) mesh, the mesh the
+        # step currently runs on, which fabric logical device sits at
+        # each current mesh position, and whether a resize has happened
+        # (batches are re-placed onto the current mesh only after one —
+        # the never-resized path is byte-for-byte the old loop)
+        self._base_mesh = ctx.mesh
+        self._cur_mesh = ctx.mesh
+        self._mesh_logical = (np.arange(ctx.mesh.devices.size, dtype=np.int32)
+                              if ctx.mesh is not None else None)
+        self._mesh_resized = False
         self.recorder = (self.loop_cfg.recorder
                          if self.loop_cfg.recorder is not None
                          else NULL_RECORDER)
@@ -141,7 +165,8 @@ class TrainLoop:
     def init_state(self, rng: Optional[jax.Array] = None):
         rng = rng if rng is not None else jax.random.PRNGKey(self.loop_cfg.seed)
         if self.ctx.mesh is not None:
-            p_shape = jax.eval_shape(self.ops.init_params, rng, self.cfg)
+            p_shape = jax.eval_shape(
+                lambda r: self.ops.init_params(r, self.cfg), rng)
             shardings = named_shardings(p_shape, self.ctx)
             params = jax.jit(self.ops.init_params, static_argnums=(1,),
                              out_shardings=shardings)(rng, self.cfg)
@@ -151,12 +176,15 @@ class TrainLoop:
             self.controller = FTController(params, self.loop_cfg.policy,
                                            store=self._store,
                                            fabric=self.loop_cfg.fabric,
-                                           recorder=self.loop_cfg.recorder)
+                                           recorder=self.loop_cfg.recorder,
+                                           mesh=self.ctx.mesh)
         if (self.loop_cfg.arena_state and self.controller is not None
-                and self.controller.arena_ready and self.ctx.mesh is None):
+                and self.controller.arena_ready):
             # arena-resident training state: pack once here, never again —
             # every subsequent step donates the arena through the jitted
-            # update and the controller reads it in place
+            # update and the controller reads it in place. On a mesh the
+            # pack lands the flat per-device sharding and the moments are
+            # placed to match, so the whole state is SPMD from step one.
             self.arena_layout = self.controller.arena_layout
             if self._arena_step is None:
                 from repro.training.step import make_arena_train_step
@@ -166,8 +194,26 @@ class TrainLoop:
                                           self.arena_layout),
                     donate_argnums=(0,))
             arena = self.controller.pack_live(params)
-            return ArenaTrainState.create(arena, self.optimizer,
-                                          self.arena_layout)
+            state = ArenaTrainState.create(arena, self.optimizer,
+                                           self.arena_layout)
+            if self.ctx.mesh is not None:
+                from repro.sharding.partition import shard_arena_state
+                state = shard_arena_state(state, self.ctx.mesh)
+            return state
+        if self.loop_cfg.arena_state and self.controller is not None \
+                and self.loop_cfg.fabric is not None:
+            # arena-resident state was requested (the default) with a
+            # fabric, but the fabric could not build an arena layout
+            # (non-arena dtypes, custom scorer, partial tiers). Never
+            # fall back silently: the tree path packs every maintained
+            # step, a real perf cliff on SPMD meshes.
+            import warnings
+            msg = ("arena_state=True but the fabric is not arena-capable; "
+                   "falling back to PyTree training state (per-step packs). "
+                   "Set TrainLoopConfig(arena_state=False) to silence.")
+            warnings.warn(msg, stacklevel=2)
+            if self.recorder.enabled:
+                self.recorder.event("fabric/arena_gated", reason=msg)
         return TrainState.create(params, self.optimizer)
 
     # -- live-state plumbing (both representations) --------------------------
@@ -187,6 +233,105 @@ class TrainLoop:
                                    state.layout)
         return TrainState(new_live, state.opt_state, state.step)
 
+    # -- elastic SPMD mesh ---------------------------------------------------
+
+    def _elastic_enabled(self, state) -> bool:
+        """Whether this run() may shrink/re-grow the mesh on domain
+        events: arena-resident state on a mesh with an elastic meshed
+        fabric. ``elastic_mesh=True`` with missing prerequisites is a
+        config error, not a silent no-op."""
+        want = self.loop_cfg.elastic_mesh
+        if want is False:
+            return False
+        fab = self.controller.fabric if self.controller is not None else None
+        ok = (isinstance(state, ArenaTrainState)
+              and self._base_mesh is not None
+              and fab is not None and fab.cfg.elastic
+              and getattr(fab, "mesh", None) is not None)
+        if want and not ok:
+            raise ValueError(
+                "elastic_mesh=True needs arena-resident state on a mesh "
+                "with an elastic meshed fabric (FabricConfig(elastic=True) "
+                "and a DistContext mesh whose size matches n_devices)")
+        return ok
+
+    def _place_batch(self, batch):
+        """Re-place a batch onto the current (possibly shrunk) mesh:
+        batch dim over the data axis. Only runs after a resize — the
+        dataset's own placement targets the base mesh, and arrays
+        committed there cannot mix with survivor-mesh state in one jit."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        mesh = self._cur_mesh
+        sh = NamedSharding(mesh, PartitionSpec("data"))
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(np.asarray(x), sh), batch)
+
+    def _maybe_resize(self, state, step: int, rec: dict):
+        """Shrink or re-grow the mesh to the fabric's alive-device set.
+
+        The survivor count is the largest k ≤ alive that divides the
+        global batch (the data axis must tile it); survivors keep their
+        fabric logical ids, so failure domains stay meaningful on the
+        shrunk topology. The arena and the 1-D adam moments relayout
+        bit-exactly (the data region is shard-count-invariant; only the
+        zero pad tail is resized), the step re-jits against the survivor
+        mesh, and the fabric re-homes/re-seeds/re-stripes before an
+        immediate forced maintain so every tier is fresh on the new
+        placement."""
+        fab = self.controller.fabric
+        alive = fab.view.alive_devices()
+        k = int(alive.size)
+        bdim = self._last_batch_dim or k
+        while k > 1 and bdim % k != 0:
+            k -= 1
+        survivors = alive[:k]
+        if np.array_equal(survivors, self._mesh_logical):
+            return state
+        from repro.launch.mesh import mesh_devices, survivor_mesh
+        base_devs = mesh_devices(self._base_mesh)
+        if k == len(base_devs):
+            new_mesh = self._base_mesh    # full re-grow: original shape
+        else:
+            new_mesh = survivor_mesh([base_devs[int(i)] for i in survivors])
+        old_layout = self.arena_layout
+        new_layout = fab.resize_mesh(new_mesh, survivors, step=step)
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.core.arena import relayout_arena
+        from repro.sharding.partition import arena_sharding
+        ash = arena_sharding(new_mesh)
+        rep_sh = NamedSharding(new_mesh, PartitionSpec())
+
+        def move(x):
+            if getattr(x, "ndim", None) == 1 \
+                    and x.size == old_layout.total_words:
+                return relayout_arena(x, old_layout, new_layout,
+                                      out_sharding=ash)
+            # scalars (adam step count) re-commit replicated on the new
+            # mesh — a leaf left on the old device set cannot enter the
+            # re-jitted step
+            return jax.device_put(x, rep_sh)
+
+        state = ArenaTrainState(move(state.arena),
+                                jax.tree_util.tree_map(move, state.opt_state),
+                                move(state.step), new_layout)
+        from repro.training.step import make_arena_train_step
+        ctx = dataclasses.replace(self.ctx, mesh=new_mesh)
+        self._arena_step = jax.jit(
+            make_arena_train_step(self.ops, self.cfg, ctx, self.optimizer,
+                                  new_layout),
+            donate_argnums=(0,))
+        self.arena_layout = new_layout
+        self.controller.rebind_arena()
+        # tiers were invalidated by the re-home/re-stripe: refresh them
+        # from the relayouted live arena on the new placement
+        fab.maintain(step, state.arena, force=True)
+        self._cur_mesh = new_mesh
+        self._mesh_logical = survivors
+        self._mesh_resized = True
+        rec["mesh_resize"] = {"shards": int(new_layout.shards),
+                              "alive_devices": int(alive.size)}
+        return state
+
     # -- run loop -------------------------------------------------------------
 
     def run(self, state, batches, n_steps: int,
@@ -194,12 +339,22 @@ class TrainLoop:
         it = iter(batches)
         events_at = self._sample_trace(n_steps)
         heal_at: dict[int, list] = {}
-        step_fn = (self._arena_step if isinstance(state, ArenaTrainState)
-                   else self._train_step)
+        elastic = self._elastic_enabled(state)
+        self._last_batch_dim = None
         for i in range(1, n_steps + 1):
+            # re-read each iteration: an elastic resize swaps the jitted
+            # step under our feet mid-run
+            step_fn = (self._arena_step if isinstance(state, ArenaTrainState)
+                       else self._train_step)
+            batch = next(it)
+            if elastic:
+                self._last_batch_dim = int(
+                    jax.tree_util.tree_leaves(batch)[0].shape[0])
+                if self._mesh_resized:
+                    batch = self._place_batch(batch)
             t0 = time.perf_counter()
             with self.recorder.span("train_step", step=i):
-                state, loss = step_fn(state, next(it))
+                state, loss = step_fn(state, batch)
                 loss = float(loss)   # fences on the loss output
             dt = time.perf_counter() - t0
             rec = {"step": int(state.step), "loss": loss, "seconds": dt}
@@ -255,6 +410,12 @@ class TrainLoop:
                         heal = self.controller.heal_domain(
                             ev.kind, ev.index, live, step=int(state.step))
                     rec.setdefault("heals", []).append(heal)
+                if elastic and ("failures" in rec or "heals" in rec):
+                    # domain events changed the survivor set: shrink the
+                    # mesh to the alive devices (or re-grow after a heal),
+                    # relayout the arena state, and re-jit the step —
+                    # training continues on the new topology next step
+                    state = self._maybe_resize(state, int(state.step), rec)
                 if (self.loop_cfg.fail_prob > 0
                         and self._rng.random() < self.loop_cfg.fail_prob):
                     with self.recorder.span("recovery",
@@ -359,15 +520,22 @@ class TrainLoop:
         return out
 
     def _sample_trace(self, n_steps: int) -> dict[int, list]:
-        """MTBF-driven soak schedule for one run(): loop-iteration → events.
-        Empty without ``mtbf`` (or without a controller to recover)."""
-        if self.loop_cfg.mtbf is None or self.controller is None \
-                or self.controller.fabric is None:
+        """Soak schedule for one run(): loop-iteration → events. The
+        mtbf-sampled trace plus any explicit ``fail_schedule`` entries.
+        Empty without either (or without a controller to recover)."""
+        if self.controller is None or self.controller.fabric is None:
             return {}
-        trace = self.controller.fabric.domains.sample_failure_trace(
-            self._rng, n_steps, self.loop_cfg.mtbf)
+        trace = []
+        if self.loop_cfg.mtbf is not None:
+            trace += self.controller.fabric.domains.sample_failure_trace(
+                self._rng, n_steps, self.loop_cfg.mtbf)
+        if self.loop_cfg.fail_schedule:
+            from repro.fabric.domains import FailureEvent
+            trace += [ev if isinstance(ev, FailureEvent)
+                      else FailureEvent(int(ev[0]), str(ev[1]), int(ev[2]))
+                      for ev in self.loop_cfg.fail_schedule]
         events_at: dict[int, list] = {}
-        for ev in trace:
+        for ev in sorted(trace, key=lambda e: e.step):
             events_at.setdefault(max(1, min(ev.step, n_steps)),
                                  []).append(ev)
         return events_at
