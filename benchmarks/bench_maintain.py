@@ -53,6 +53,16 @@ not the model):
                        Thm-3.2/4.1 bounds against ``core/iteration_cost``.
                        The gated e2e rows above run with the default
                        NullRecorder — their bytes/step are untouched.
+  tier_soak_multi_erasure
+                     — RS(k, 2) vs XOR under a correlated two-host
+                       same-step loss plus an injected in-arena bit
+                       flip with an every-step integrity scrub: the RS
+                       run must recover bit-exactly through the parity
+                       tier (no checkpoint fallback, ‖δ′‖² = 0) and
+                       detect/localize/correct the flip; the XOR
+                       control's fallbacks and paid perturbation ride
+                       along. Ledger artifact lands under
+                       ``<telemetry-out>/multi_erasure``.
 
 Bytes are the roofline currency here: on this CPU host the in-place save's
 per-leaf eager dispatch overhead exceeds the memcpy it saves at the
@@ -630,6 +640,117 @@ def _telemetry_rows(quick: bool, out_dir: str = "") -> list[str]:
             shutil.rmtree(tmp, ignore_errors=True)
 
 
+def _multi_erasure_rows(quick: bool, out_dir: str = "") -> list[str]:
+    """RS(k, 2) multi-erasure + silent-error soak on the reduced LM.
+
+    One run with the RS tier: a simultaneous two-host loss (both events
+    in the same trace step, recovered through the controller's combined
+    multi-domain path) plus an injected in-arena bit flip under an
+    every-step integrity scrub. One XOR control run with the identical
+    loss schedule. REQUIRED flags (deterministic):
+
+      rs_recovery_bit_equal   — the double loss recovered bit-exactly
+                                through replicas + RS parity: zero
+                                applied perturbation, no RUNNING_CKPT or
+                                DISK blocks, no tier fallback.
+      silent_error_detected   — the scrub caught the injected flip,
+                                localized it to its block, corrected it
+                                in place, and its ledger entry prices
+                                the detection at ‖δ′‖² = 0.
+
+    The XOR control's fallback count and paid perturbation ride along
+    recorded — the staleness cost the RS tier deletes. The RS run's
+    telemetry (events.jsonl + ledger.json with the priced entries) lands
+    under ``<out_dir>/multi_erasure`` when ``--telemetry-out`` is given."""
+    import dataclasses
+    import os
+
+    from repro.data.pipeline import ShardedLMDataset
+    from repro.sharding import single_device_ctx
+    from repro.telemetry import Recorder
+    from repro.training import TrainLoop, TrainLoopConfig
+
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    steps = 8 if quick else 14
+    tmp = None
+    if out_dir:
+        out_dir = os.path.join(out_dir, "multi_erasure")
+        os.makedirs(out_dir, exist_ok=True)
+    else:
+        tmp = tempfile.mkdtemp(prefix="bench_maintain_rs_")
+        out_dir = tmp
+    try:
+        out = {}
+        for name, rs in (("rs", 2), ("xor", 0)):
+            rec = Recorder(out_dir=out_dir if name == "rs" else None)
+            ctx = single_device_ctx()
+            loop = TrainLoop(cfg, ctx, loop_cfg=TrainLoopConfig(
+                policy=CheckpointPolicy.scar(fraction=0.125, interval=4),
+                fabric=FabricConfig(rs_parity=rs, elastic=True),
+                # same-step host events = one correlated double loss
+                # spanning both racks (kills primaries AND the
+                # anti-affine replicas of some blocks). Hosts 1 + 3, not
+                # 0: byte-balanced placement packs the many small leaves
+                # onto host 0, and its pigeonhole surplus (more blocks
+                # than the other hosts combined) forces same-host parity
+                # groups no code survives losing — a real fallback the
+                # XOR row prices, not the bit-equal path gated here.
+                fail_schedule=[(4, "host", 1), (4, "host", 3)],
+                flip_schedule=[6] if rs else None,
+                scrub_interval=1 if rs else 0,
+                recorder=rec, seed=0))
+            state = loop.init_state()
+            ds = ShardedLMDataset(cfg, batch=2, seq=64, ctx=ctx)
+            loop.run(state, iter(ds), steps)
+            fails = [f for m in loop.metrics
+                     for f in m.get("failures", [])]
+            assert len(fails) == 1 and len(fails[0]["events"]) == 2
+            scrubs = [m["scrub"] for m in loop.metrics if "scrub" in m]
+            out[name] = {
+                "counts": fails[0]["tier_counts"],
+                "lost": fails[0]["lost_blocks"],
+                "applied_sq": fails[0]["applied_sq"],
+                "fallbacks": len(fails[0].get("tier_fallbacks", [])),
+                "detected": sum(s["detected"] for s in scrubs),
+                "corrected": sum(s["corrected"] for s in scrubs),
+                "ledger": rec.ledger,
+                "rec": rec,
+            }
+        rs_, xor_ = out["rs"], out["xor"]
+        bit_equal = bool(
+            rs_["lost"] > 0 and rs_["applied_sq"] == 0.0
+            and rs_["counts"]["RUNNING_CKPT"] == 0
+            and rs_["counts"]["DISK"] == 0 and rs_["fallbacks"] == 0)
+        silent_entries = [
+            e for e in rs_["ledger"].entries
+            if (e.tier_counts or {}).get("SILENT_ERROR")]
+        detected = bool(
+            rs_["detected"] == 1 and rs_["corrected"] == 1
+            and len(silent_entries) == 1
+            and silent_entries[0].applied_sq == 0.0)
+        with open(os.path.join(out_dir, "ledger.json"), "w") as f:
+            json.dump({"summary": rs_["ledger"].summary(),
+                       "entries": [dataclasses.asdict(e)
+                                   for e in rs_["ledger"].entries]},
+                      f, indent=2, default=float)
+        rs_["rec"].close()
+        xor_["rec"].close()
+        return [csv_row(
+            "tier_soak_multi_erasure", 0.0,
+            f"rs_recovery_bit_equal={bit_equal};"
+            f"silent_error_detected={detected};"
+            f"rs_lost_blocks={rs_['lost']};"
+            f"rs_parity_blocks={rs_['counts']['PARITY']};"
+            f"xor_fallbacks={xor_['fallbacks']};"
+            f"xor_ckpt_blocks="
+            f"{xor_['counts']['RUNNING_CKPT'] + xor_['counts']['DISK']};"
+            f"xor_applied_sq={xor_['applied_sq']:.3e};"
+            f"artifacts={'temp' if tmp is not None else out_dir}")]
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
 def _sharded_rows(quick: bool) -> list[str]:
     """SPMD rows: the sharded arena sweep and the elastic-mesh soak.
 
@@ -691,6 +812,7 @@ def run(trials: int = 4, quick: bool = False,
     rows.extend(_overlap_rows(quick))
     rows.extend(_sharded_rows(quick))
     rows.extend(_telemetry_rows(quick, telemetry_out))
+    rows.extend(_multi_erasure_rows(quick, telemetry_out))
     return rows
 
 

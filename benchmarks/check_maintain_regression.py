@@ -71,6 +71,12 @@ REQUIRED_FLAGS = [
     ("maint_sweep_sharded", "sharded_bytes_le_pack=True"),
     ("tier_soak_elastic_mesh", "elastic_cycle_ok=True"),
     ("maint_telemetry", "ledger_bound_exact=True"),
+    # RS(k, 2) must recover the correlated two-host loss through the
+    # parity tier bit-exactly (no checkpoint fallback, zero applied
+    # perturbation) and the integrity scrub must catch + correct the
+    # injected arena bit flip — both deterministic on any machine
+    ("tier_soak_multi_erasure", "rs_recovery_bit_equal=True"),
+    ("tier_soak_multi_erasure", "silent_error_detected=True"),
 ]
 # wall-clock flags: recorded loudly, never gated (shared CI runners are
 # too noisy — the committed baseline documents the local inversion)
@@ -102,6 +108,10 @@ RECORDED_VALUES = [
     ("maint_telemetry", "overhead_p95_us"),
     ("maint_overlap_headline", "overlap_efficiency"),
     ("maint_overlap_headline", "async_over_sync_overhead_ratio"),
+    # the XOR control's staleness price under the same double loss —
+    # the contrast the RS tier's bit-equal gate is measured against
+    ("tier_soak_multi_erasure", "xor_fallbacks"),
+    ("tier_soak_multi_erasure", "xor_applied_sq"),
 ]
 
 

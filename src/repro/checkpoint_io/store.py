@@ -41,7 +41,9 @@ from __future__ import annotations
 import json
 import os
 import queue
+import random
 import threading
+import time
 from typing import Any, Optional
 
 import jax
@@ -299,11 +301,16 @@ class ShardedCheckpointStore:
         of encode time, which elastic re-striping changes). Synchronous —
         the parity buffer is 1/g the size of a block write."""
         parity = np.asarray(parity)
+        # XOR homes are (n_groups,); RS(k, m) homes are (n_groups, m) with
+        # a (n_groups, m, E) parity array — each group's rows share a file,
+        # keyed by row 0's host (the primary fingerprint row)
         homes = np.asarray(parity_homes, np.int32)
         paths = []
         for g in range(parity.shape[0]):
             if self.host_of_block is not None and domains is not None:
-                host_dir = f"host_{int(domains.host_of(homes[g])):04d}"
+                key = int(np.ravel(homes[g])[0]) if homes.ndim > 1 \
+                    else int(homes[g])
+                host_dir = f"host_{int(domains.host_of(key)):04d}"
                 os.makedirs(os.path.join(self.root, host_dir), exist_ok=True)
                 rel = os.path.join(host_dir, f"parity_{g:06d}.npy")
             else:
@@ -316,8 +323,9 @@ class ShardedCheckpointStore:
             paths.append(rel)
         meta = {"step": int(step), "n_groups": int(parity.shape[0]),
                 "frame_elems": int(parity.shape[-1]) if parity.ndim > 1 else 1,
+                "n_parity": int(parity.shape[1]) if parity.ndim == 3 else 1,
                 "paths": paths,
-                "parity_homes": [int(h) for h in homes]}
+                "parity_homes": homes.tolist()}
         if members is not None:
             meta["members"] = [[int(b) for b in row if b >= 0]
                                for row in np.asarray(members)]
@@ -343,6 +351,15 @@ class ShardedCheckpointStore:
             self._worker = threading.Thread(target=self._drain, daemon=True)
             self._worker.start()
 
+    # background-write retry budget: a failed batch is re-attempted this
+    # many times with jittered exponential backoff (base * 2^attempt *
+    # U[0.5, 1.5)) before the error is parked for flush(). Shared-FS blips
+    # (NFS timeouts, transient ENOSPC during log rotation) usually clear
+    # within one backoff; anything persistent still surfaces — never
+    # silently. Tests shrink the base delay to keep the suite fast.
+    _retry_limit = 2
+    _retry_base_delay = 0.05
+
     def _drain(self) -> None:
         while True:
             item = self._q.get()
@@ -350,7 +367,7 @@ class ShardedCheckpointStore:
                 if item is None:
                     return
                 _, jobs, step = item
-                self._do_write(jobs, step)
+                self._write_with_retry(item, jobs, step)
             except BaseException as e:  # keep draining; surface on flush()
                 if self._worker_error is None:
                     # keep the FIRST failure's context — later failures
@@ -358,13 +375,37 @@ class ShardedCheckpointStore:
                     self._worker_error = e
                     self._worker_error_ctx = self._job_context(item)
                     if self.recorder.enabled:
+                        # name the ROOT cause, not the retry-budget
+                        # wrapper — that's what names the broken disk
+                        root = e
+                        while root.__cause__ is not None:
+                            root = root.__cause__
                         self.recorder.event("store_write_failed",
-                                            error=repr(e),
+                                            error=repr(root),
                                             **self._worker_error_ctx)
             finally:
                 # task_done even on failure — otherwise q.join() in flush()
                 # deadlocks forever on the first bad write
                 self._q.task_done()
+
+    def _write_with_retry(self, item, jobs, step: int) -> None:
+        for attempt in range(self._retry_limit + 1):
+            try:
+                self._do_write(jobs, step)
+                return
+            except BaseException as e:
+                if attempt >= self._retry_limit:
+                    raise RuntimeError(
+                        f"background write failed after "
+                        f"{self._retry_limit + 1} attempts") from e
+                delay = (self._retry_base_delay * (2 ** attempt)
+                         * (0.5 + random.random()))
+                if self.recorder.enabled:
+                    self.recorder.event(
+                        "store_write_retried", attempt=attempt + 1,
+                        delay_seconds=delay, error=repr(e),
+                        **self._job_context(item))
+                time.sleep(delay)
 
     def _job_context(self, item) -> dict:
         """step/segment/host/path of a failed background write batch (its

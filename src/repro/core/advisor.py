@@ -93,6 +93,76 @@ def advise(obs: RunObservations,
                               for k, v in sorted(table.items())}}
 
 
+def _poisson_tail(lam: float, m: int) -> float:
+    """P[N > m] for N ~ Poisson(lam) (summed complement, stable for the
+    small lam / small m regime the advisor lives in)."""
+    if lam <= 0:
+        return 0.0
+    term, acc = math.exp(-lam), math.exp(-lam)
+    for i in range(1, m + 1):
+        term *= lam / i
+        acc += term
+    return max(0.0, 1.0 - acc)
+
+
+def advise_code(mtbf: dict, *, window: int, model_bytes: int,
+                budget_bytes: Optional[int] = None,
+                n_hosts: int = 4,
+                k_grid: Sequence[int] = (2, 3, 4, 6, 8),
+                m_grid: Sequence[int] = (1, 2, 3),
+                target_risk: float = 1e-4) -> tuple[tuple[int, int], dict]:
+    """Pick an RS(k, m) code from an MTBF trace and a redundancy budget.
+
+    Failure model: domain losses arrive independently per kind with the
+    given MTBF means (steps), so the number landing inside one
+    maintenance ``window`` (the steps between re-encodes — losses in the
+    same window are *simultaneous* as far as the code is concerned) is
+    Poisson with rate ``window·Σ 1/mtbf``. A code of strength m dies
+    when a window sees > m losses; conservatively every loss is assumed
+    to hit the same parity group (correlated placement — the worst case
+    the striping cannot always avoid on small topologies).
+
+    Feasibility: k + m host-disjoint placements must exist
+    (``k + m ≤ n_hosts``), the GF(256) Cauchy construction needs
+    ``k + m ≤ 256``, and the parity arena footprint ``model_bytes·m/k``
+    must fit ``budget_bytes`` (None = unbounded). Among candidates whose
+    window-loss risk meets ``target_risk``, the cheapest redundancy
+    fraction m/k wins (widest k tie-breaks). If nothing inside the
+    budget meets the risk target the advisor still returns the
+    minimum-risk affordable code — flagged ``met_risk=False``, never
+    silently."""
+    lam = float(window) * sum(1.0 / float(v) for v in mtbf.values() if v)
+    table = {}
+    feasible, affordable = [], []
+    for k in k_grid:
+        for m in m_grid:
+            if k + m > min(int(n_hosts), 256):
+                continue
+            bytes_ = model_bytes * m / k
+            risk = _poisson_tail(lam, m)
+            table[(k, m)] = {"risk": risk, "parity_bytes": bytes_}
+            if budget_bytes is not None and bytes_ > budget_bytes:
+                continue
+            affordable.append((risk, m / k, -k, (k, m)))
+            if risk <= target_risk:
+                feasible.append((m / k, -k, risk, (k, m)))
+    if not affordable:
+        raise ValueError("no RS(k, m) candidate fits the topology/budget")
+    if feasible:
+        choice = min(feasible)[-1]
+        met = True
+    else:
+        choice = min(affordable)[-1]
+        met = False
+    k, m = choice
+    return choice, {"chosen": {"k": k, "m": m}, "met_risk": met,
+                    "window_loss_rate": lam,
+                    "risk": table[choice]["risk"],
+                    "parity_bytes": table[choice]["parity_bytes"],
+                    "table": {f"k={kk},m={mm}": v
+                              for (kk, mm), v in sorted(table.items())}}
+
+
 def observe_from_controller(controller, losses: Sequence[float],
                             t_iter: float,
                             failure_rate: float) -> RunObservations:

@@ -550,6 +550,62 @@ class FTController:
         info["kind"], info["index"] = kind, index
         return recovered, info
 
+    def on_domain_events(self, params: PyTree, events,
+                         step: Optional[int] = None) -> tuple[PyTree, dict]:
+        """Apply several trace events landing in the SAME step (correlated
+        multi-domain loss — the multi-erasure case the RS tier exists
+        for). Every event's loss is resolved against the pre-failure view
+        *before* any device is marked dead, then the union recovers in ONE
+        tier-planned pass: a block that lost both its primary and its
+        replica domain sees the combined failure, exactly what a
+        simultaneous loss means. A single event routes through
+        :meth:`on_domain_event`, bit-identical to the one-event path."""
+        assert self.fabric is not None, "domain events need a fabric"
+        events = [(str(k), int(i)) for k, i in events]
+        if len(events) == 1:
+            return self.on_domain_event(params, *events[0], step=step)
+        lost = np.zeros((self.partition.total_blocks,), bool)
+        failed_parts, applied = [], []
+        for kind, index in events:
+            ev_lost, ev_failed = self.fabric.domain_failure(kind, index)
+            if ev_failed.size == 0:
+                continue
+            lost |= ev_lost
+            failed_parts.append(ev_failed)
+            applied.append({"kind": kind, "index": index,
+                            "failed_devices": int(ev_failed.size)})
+        if not failed_parts:
+            return params, {"skipped": True, "events": applied}
+        failed = np.unique(np.concatenate(failed_parts))
+        recovered, info = self.on_failure(params, lost,
+                                          failed_devices=failed, step=step,
+                                          persist_failure=True)
+        info["events"] = applied
+        return recovered, info
+
+    def scrub(self, step: Optional[int] = None) -> dict:
+        """Run the fabric's silent-error integrity pass and price it in
+        the ledger: detected-and-corrected corruption applies ‖δ′‖² ≈ 0
+        (the scrub restored the exact bits), so its ledger entry records
+        the detection honestly at zero perturbation — the *undetected*
+        window between scrubs is what a soak prices by comparing scrub
+        cadence against the flip schedule. No-op (``checked=False``)
+        without an integrity-capable fabric."""
+        if self.fabric is None or not getattr(
+                self.fabric.parity, "supports_integrity", False):
+            return {"checked": False, "detected": 0, "corrected": 0,
+                    "reports": []}
+        out = self.fabric.scrub(step=step)
+        if self.recorder.enabled and out["detected"]:
+            self.recorder.record_recovery(
+                step=None if step is None else int(step),
+                lost_blocks=0,
+                tier_counts={"SILENT_ERROR": out["detected"]},
+                applied_sq=0.0,
+                silent_detected=out["detected"],
+                silent_corrected=out["corrected"])
+        return out
+
     def heal_domain(self, kind: str, index: int,
                     params: Optional[PyTree] = None,
                     step: Optional[int] = None) -> dict:

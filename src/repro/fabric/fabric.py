@@ -57,6 +57,8 @@ class FabricConfig:
     parity: bool = True
     parity_group: int = 4          # members per XOR parity group
     parity_interval: int = 1       # steps between parity re-encodes
+    rs_parity: int = 0             # 0 = XOR codec; m >= 1 = RS(k, m) codec
+                                   # with m GF(256) parity rows per group
     elastic: bool = False          # post-failure re-homing/re-seeding
     fused: bool = True             # single-sweep maintenance pipeline
     arena: bool = True             # flat-arena single-dispatch maintenance
@@ -69,6 +71,9 @@ class FabricConfig:
         if self.parity_group < 2:
             raise ValueError("parity_group must be >= 2: a 1-member group "
                              "degenerates the XOR code to a bare copy")
+        if self.rs_parity < 0:
+            raise ValueError("rs_parity must be >= 0 (0 selects the XOR "
+                             "codec, m >= 1 the RS(k, m) codec)")
         if self.async_maintain and not (self.fused and self.arena):
             raise ValueError(
                 "async_maintain requires the fused arena pipeline "
@@ -144,10 +149,18 @@ class CheckpointFabric:
         self.view = ClusterView(self.domains, initial)
         self.replicas = (ReplicaSet(partition, self.view)
                          if self.cfg.replicate else None)
-        self.parity = (ParityCodec(partition, self.view,
-                                   group_size=self.cfg.parity_group,
-                                   use_pallas=self.cfg.use_pallas)
-                       if self.cfg.parity else None)
+        self.parity = None
+        if self.cfg.parity:
+            if self.cfg.rs_parity > 0:
+                from repro.fabric.rs import RSCodec
+                self.parity = RSCodec(partition, self.view,
+                                      group_size=self.cfg.parity_group,
+                                      n_parity=self.cfg.rs_parity,
+                                      use_pallas=self.cfg.use_pallas)
+            else:
+                self.parity = ParityCodec(partition, self.view,
+                                          group_size=self.cfg.parity_group,
+                                          use_pallas=self.cfg.use_pallas)
         self.planner = TieredRecovery(partition, self.view,
                                       replicas=self.replicas,
                                       parity=self.parity)
@@ -201,7 +214,9 @@ class CheckpointFabric:
             "async_maintains": 0, "fence_count": 0,
             "maintain_bytes_moved": 0,
             "ici_bytes_moved": 0, "dcn_bytes_moved": 0,
-            "mesh_resizes": 0})
+            "mesh_resizes": 0, "tier_fallbacks": 0,
+            "rs_arena_encodes": 0, "scrubs": 0,
+            "silent_errors_detected": 0, "silent_errors_corrected": 0})
         if self.recorder.enabled:
             self.recorder.adopt_histogram("fabric/fence_seconds",
                                           self.fence_hist)
@@ -381,7 +396,12 @@ class CheckpointFabric:
         z = ckpt_values if ckpt_values is not None else params
         replica, scores, parity = fn(params, z)
         self.replicas.ingest(step, replica)
-        self.parity.ingest(step, parity)
+        if self.parity.needs_arena_encode:
+            # the sweep's XOR parity does not generalize to RS rows —
+            # re-encode from the live tree (per-leaf path has no arena)
+            self.parity.encode(step, params)
+        else:
+            self.parity.ingest(step, parity)
         if ckpt_values is not None:
             self.last_scores = scores
             self.last_scores_step = step
@@ -413,7 +433,15 @@ class CheckpointFabric:
         rep, scores, parity = fn(params, z, own_live=owned)
         self.replicas.ingest_arena(step, self._replica_xfer(rep),
                                    self.arena_layout)
-        self.parity.ingest(step, parity)
+        if self.parity.needs_arena_encode:
+            # RS rows re-encode from the sweep's snapshot arena (the same
+            # buffer the replica tier stores, pre-rotation — so the
+            # refreshed_step == encoded_step arena recovery route and the
+            # integrity scrub both see one consistent coded snapshot)
+            self.parity.encode_from_arena(step, rep, self.arena_layout)
+            self.stats["rs_arena_encodes"] += 1
+        else:
+            self.parity.ingest(step, parity)
         if z is not None:
             self.last_scores = scores
             self.last_scores_step = step
@@ -482,7 +510,13 @@ class CheckpointFabric:
         _, scores, parity = fn(snap, z, own_live=True)
         self.replicas.ingest_arena(step, self._replica_xfer(snap),
                                    self.arena_layout)
-        self.parity.ingest(step, parity)
+        if self.parity.needs_arena_encode:
+            # RS re-encode rides the same async dispatch — no fence here;
+            # _settle_pending blocks on the parity rows like the XOR path
+            self.parity.encode_from_arena(step, snap, self.arena_layout)
+            self.stats["rs_arena_encodes"] += 1
+        else:
+            self.parity.ingest(step, parity)
         if z is not None:
             self.last_scores = scores
             self.last_scores_step = step
@@ -681,7 +715,11 @@ class CheckpointFabric:
             homes_ok = np.where(
                 valid, self.view.alive[self.view.homes[
                     np.where(valid, members, 0)]], True).all(axis=1)
-            ok = self.view.alive[self.parity.parity_homes] & homes_ok
+            # XOR homes are (n_groups,), RS homes (n_groups, m): a group
+            # is fully placed only when every parity row's home is alive
+            ph = np.asarray(self.parity.parity_homes).reshape(
+                members.shape[0], -1)
+            ok = self.view.alive[ph].all(axis=1) & homes_ok
             par_frac = float(np.mean(ok)) if ok.size else 1.0
         return {"replica_alive_frac": rep_frac,
                 "parity_groups_ok_frac": par_frac,
@@ -805,6 +843,13 @@ class CheckpointFabric:
         stats["failed_devices"] = int(failed.size)
         stats["recovered_epoch"] = recovered_epoch
         stats["staleness"] = staleness
+        # never-silent: every parity group whose losses exceeded the
+        # code's surviving strength says why the cheap tier declined
+        stats["tier_fallbacks"] = plan.fallbacks
+        for fb in plan.fallbacks:
+            self.stats["tier_fallbacks"] += 1
+            if self.recorder.enabled:
+                self.recorder.event("tier_fallback", step=step, **fb)
         if self.cfg.elastic and failed.size:
             stats["placement"] = self._replan(step, recovered)
         return recovered, stats
@@ -842,6 +887,99 @@ class CheckpointFabric:
         if self.recorder.enabled:
             self.recorder.event("rehome", step=step, **out)
         return out
+
+    # -- integrity (silent errors) -------------------------------------------
+
+    def scrub(self, step: Optional[int] = None) -> dict:
+        """CodeNet-style integrity pass over the coded redundancy state.
+
+        Recomputes the RS parity rows from the replica arena and XORs
+        them against the stored rows: nonzero syndromes mean the coded
+        snapshot was silently corrupted since encode — a soft error the
+        liveness machinery cannot see. Localizable corruptions (single
+        corrupted member or parity row, needs m ≥ 2) are corrected in
+        place by XOR-ing the error pattern back out; the rest are
+        detected and reported. Requires the RS codec (``rs_parity ≥ 1``
+        for detection, ≥ 2 for localization) and an arena-mode replica
+        whose snapshot matches the encode step — otherwise the pass
+        reports ``checked=False`` and touches nothing.
+        """
+        out = {"checked": False, "detected": 0, "corrected": 0,
+               "reports": []}
+        codec = self.parity
+        if codec is None or not getattr(codec, "supports_integrity",
+                                        False):
+            return out
+        self._settle_pending()
+        if codec.parity is None or self.replicas is None \
+                or self.replicas.arena is None \
+                or self.replicas.refreshed_step != codec.encoded_step:
+            return out
+        self.stats["scrubs"] += 1
+        out["checked"] = True
+        synd = codec.syndromes_from_arena(self.replicas.arena,
+                                          self.replicas.arena_layout)
+        for rep in codec.localize_corruption(synd):
+            out["detected"] += 1
+            self.stats["silent_errors_detected"] += 1
+            corrected = False
+            if rep["localized"]:
+                new_arena = codec.correct_in_arena(self.replicas.arena,
+                                                   rep)
+                if rep["kind"] == "member":
+                    self.replicas.ingest_arena(codec.encoded_step,
+                                               new_arena,
+                                               self.replicas.arena_layout)
+                corrected = True
+                out["corrected"] += 1
+                self.stats["silent_errors_corrected"] += 1
+            ev = dict(step=step, group=rep["group"], kind=rep["kind"],
+                      member=rep["member"], block=rep["block"],
+                      row=rep["row"], localized=rep["localized"],
+                      corrected=corrected)
+            out["reports"].append(ev)
+            if self.recorder.enabled:
+                # ``kind`` is the event bus's own discriminator — the
+                # corruption's member/parity classification rides as
+                # ``error_kind``
+                fields = {("error_kind" if k == "kind" else k): v
+                          for k, v in ev.items()}
+                self.recorder.event("silent_error_detected", **fields)
+        return out
+
+    def inject_arena_bit_flip(self, block: Optional[int] = None,
+                              word: Optional[int] = None,
+                              bit: Optional[int] = None,
+                              rng: Optional[np.random.Generator] = None,
+                              ) -> dict:
+        """Fault injection for soaks/tests: flip one bit of one block's
+        payload in the *replica arena* — a silent corruption no liveness
+        check sees, caught (and with RS m ≥ 2, localized and corrected)
+        only by :meth:`scrub`. Returns where the flip landed."""
+        assert self.replicas is not None \
+            and self.replicas.arena is not None, \
+            "bit-flip injection needs an arena-mode replica"
+        assert self.parity is not None
+        self._settle_pending()
+        gather = np.asarray(self.parity._ensure_arena_gather(
+            self.replicas.arena_layout))
+        if rng is None:
+            rng = np.random.default_rng(0)
+        if block is None:
+            block = int(rng.integers(self.partition.total_blocks))
+        cols = np.nonzero(gather[block] >= 0)[0]
+        col = int(cols[int(word) % cols.size]) if word is not None \
+            else int(cols[rng.integers(cols.size)])
+        b = int(bit) if bit is not None else int(rng.integers(32))
+        idx = int(gather[block, col])
+        arena = self.replicas.arena
+        old = np.asarray(arena[idx], np.float32).view(np.int32).item()
+        new = np.array([(old & 0xFFFFFFFF) ^ (1 << b)], np.uint32)
+        arena = arena.at[idx].set(jnp.asarray(new.view(np.float32)[0]))
+        self.replicas.ingest_arena(self.replicas.refreshed_step, arena,
+                                   self.replicas.arena_layout)
+        return {"block": int(block), "word": col, "bit": b,
+                "arena_index": idx}
 
     # -- healing -------------------------------------------------------------
 

@@ -128,6 +128,13 @@ class ParityCodec:
     until the next :meth:`encode`.
     """
 
+    # single parity row per group; the RS subclass raises both. The
+    # fused arena sweep emits XOR parity directly (needs_arena_encode
+    # False); codecs that must re-encode from the snapshot arena set it.
+    n_parity = 1
+    needs_arena_encode = False
+    supports_integrity = False
+
     def __init__(self, partition: BlockPartition, view: ClusterView,
                  group_size: int = 4, use_pallas: bool | None = None):
         if group_size < 2:
@@ -150,18 +157,28 @@ class ParityCodec:
     def _build(self) -> None:
         """(Re)derive groups, parity homes, and the fused encode program
         from the view's current placement."""
+        self._stripe()
+        self.parity_homes = parity_group_homes(self.members, self.view)
+        self._build_encode()
+
+    def _stripe(self) -> None:
+        """Cut member groups over the view's current placement (shared by
+        the XOR and RS codecs — only homes and the fold differ)."""
         self.group_size = effective_parity_group(self.view,
-                                                 self.requested_group_size)
-        self.members = stripe_parity_groups(self.view, self.group_size)
+                                                 self.requested_group_size,
+                                                 reserve=self.n_parity)
+        self.members = stripe_parity_groups(self.view, self.group_size,
+                                            fold_tail=self.n_parity < 2)
         self.n_groups = self.members.shape[0]
         self.group_of = np.full((self.partition.total_blocks,), -1, np.int32)
         for j, row in enumerate(self.members):
             for b in row[row >= 0]:
                 self.group_of[b] = j
-        self.parity_homes = parity_group_homes(self.members, self.view)
         self.valid = (self.members >= 0)
         # -1 members gather row 0 but are masked out by ``valid``
         self._gather_ids = np.where(self.valid, self.members, 0)
+
+    def _build_encode(self) -> None:
         # encode runs every maintenance interval (the hot loop): fuse
         # pack + gather + XOR fold into one cached jitted program so the
         # per-step cost is one dispatch, not a per-leaf eager op chain
@@ -218,14 +235,25 @@ class ParityCodec:
 
     # -- recovery ------------------------------------------------------------
 
+    def code_strength(self, failed_devices) -> np.ndarray:
+        """(n_groups,) erasures each group can absorb right now: its
+        parity rows homed on devices alive and outside the failing set.
+        0 or 1 for the XOR codec, up to m for RS."""
+        failed = np.asarray(failed_devices, np.int32)
+        homes = np.asarray(self.parity_homes).reshape(self.n_groups, -1)
+        ok = self.view.alive[homes] & ~np.isin(homes, failed)
+        return ok.sum(axis=1).astype(np.int64)
+
     def reconstructable(self, lost_mask: np.ndarray,
                         available_mask: np.ndarray,
                         failed_devices, step: int) -> np.ndarray:
         """(total_blocks,) bool — lost blocks recoverable from parity.
 
-        A lost block is parity-recoverable iff the parity is fresh, its
-        group's parity home survived, and it is the group's *only* member
-        without an available live frame (single-erasure code).
+        A lost block is parity-recoverable iff the parity is fresh and
+        its group's erasure count (members without an available live
+        frame) is within the group's surviving code strength — exactly
+        one erasure against one live parity home for the XOR codec, up
+        to m erasures against m surviving parity rows for RS.
         """
         total = self.partition.total_blocks
         if not self.is_fresh(step):
@@ -233,15 +261,36 @@ class ParityCodec:
         lost = np.asarray(lost_mask, bool)
         available = np.asarray(available_mask, bool)
         failed = np.asarray(failed_devices, np.int32)
-        parity_alive = (self.view.alive[self.parity_homes]
-                        & ~np.isin(self.parity_homes, failed))
         member_unavail = self.valid & ~available[self._gather_ids]
-        single_erasure = member_unavail.sum(axis=1) == 1
-        ok_group = parity_alive & single_erasure
+        erased = member_unavail.sum(axis=1)
+        strength = self.code_strength(failed)
+        ok_group = (erased >= 1) & (erased <= strength)
         out = np.zeros((total,), bool)
         grouped_ok = ok_group[:, None] & member_unavail
         out[self._gather_ids[grouped_ok]] = True
         return out & lost
+
+    def exceeded_groups(self, lost_mask: np.ndarray,
+                        available_mask: np.ndarray,
+                        failed_devices, step: int) -> list[dict]:
+        """Never-silent fallback accounting: groups that hold lost blocks
+        the code cannot recover (erasures exceed surviving strength, or
+        the parity is stale). One dict per exceeded group — the fabric
+        turns each into a ``tier_fallback`` event so a RUNNING_CKPT
+        fallback always says *why* the cheaper tier declined."""
+        lost = np.asarray(lost_mask, bool)
+        available = np.asarray(available_mask, bool)
+        failed = np.asarray(failed_devices, np.int32)
+        member_lost = self.valid & lost[self._gather_ids]
+        erased = (self.valid & ~available[self._gather_ids]).sum(axis=1)
+        fresh = self.is_fresh(step)
+        strength = self.code_strength(failed) if fresh \
+            else np.zeros((self.n_groups,), np.int64)
+        bad = member_lost.any(axis=1) & (erased > strength)
+        return [dict(group=int(j), lost_members=int(member_lost[j].sum()),
+                     unavailable=int(erased[j]), strength=int(strength[j]),
+                     fresh=bool(fresh))
+                for j in np.nonzero(bad)[0]]
 
     def reconstruct(self, values: PyTree, recover_mask: np.ndarray,
                     available_mask: np.ndarray) -> jnp.ndarray:
@@ -255,6 +304,16 @@ class ParityCodec:
         return self._reconstruct_frames(frames, recover_mask,
                                         available_mask)
 
+    def _ensure_arena_gather(self, arena_layout) -> np.ndarray:
+        """Cache the arena-word → frame-column gather for this layout."""
+        from repro.core.arena import frames_gather_index
+        if self._arena_gather is None \
+                or self._arena_gather_layout is not arena_layout:
+            self._arena_gather = frames_gather_index(arena_layout,
+                                                     self.layout)
+            self._arena_gather_layout = arena_layout
+        return self._arena_gather
+
     def reconstruct_from_arena(self, arena: jnp.ndarray, arena_layout,
                                recover_mask: np.ndarray,
                                available_mask: np.ndarray) -> jnp.ndarray:
@@ -265,13 +324,9 @@ class ParityCodec:
         arena and the parity are emitted by the same sweep, so the tier
         planner checks ``refreshed_step == encoded_step`` and routes
         here."""
-        from repro.core.arena import frames_from_arena, frames_gather_index
-        if self._arena_gather is None \
-                or self._arena_gather_layout is not arena_layout:
-            self._arena_gather = frames_gather_index(arena_layout,
-                                                     self.layout)
-            self._arena_gather_layout = arena_layout
-        frames = frames_from_arena(arena, self._arena_gather)
+        from repro.core.arena import frames_from_arena
+        frames = frames_from_arena(arena,
+                                   self._ensure_arena_gather(arena_layout))
         return self._reconstruct_frames(frames, recover_mask,
                                         available_mask)
 

@@ -228,49 +228,107 @@ def checkpoint_cache_homes(view: ClusterView,
 # Parity re-striping
 # ---------------------------------------------------------------------------
 
-def effective_parity_group(view: ClusterView, group_size: int) -> int:
+def effective_parity_group(view: ClusterView, group_size: int,
+                           reserve: int = 1) -> int:
     """RAID-style width clamp in the current topology: members + parity must
     fit in the alive host count, else a single host failure can erase two
-    stripe units and the single-erasure code cannot recover. Leaves one host
-    free for the parity block whenever ≥3 hosts survive."""
+    stripe units and the single-erasure code cannot recover. Leaves
+    ``reserve`` hosts free for the parity rows (1 for the XOR codec, m for
+    RS(k, m) — each row wants its own member-free host so one host loss
+    never takes a member *and* the row that would recover it) whenever
+    enough hosts survive to keep ≥ 2 members."""
+    if view.n_alive_hosts >= reserve + 2:
+        return min(group_size, view.n_alive_hosts - reserve)
     if view.n_alive_hosts >= 3:
         return min(group_size, view.n_alive_hosts - 1)
     return group_size
 
 
-def stripe_parity_groups(view: ClusterView, group_size: int) -> np.ndarray:
+def rs_parity_homes(members: np.ndarray, view: ClusterView,
+                    n_parity: int) -> np.ndarray:
+    """(n_groups, n_parity) parity-row homes for the RS(k, m) tier.
+
+    Each group's m parity rows want m *host-disjoint* homes that also
+    avoid every member host — otherwise one host loss can erase a member
+    and the parity row that would have recovered it, wasting the extra
+    redundancy. Preference order per row: an alive device on a host free
+    of both members and this group's earlier parity rows, then member-
+    host-free, then member-device-free, then any alive device."""
+    alive = view.alive_devices()
+    if alive.size == 0:
+        raise RuntimeError("cannot place parity: no surviving devices")
+    a_hosts = np.asarray(view.host_of(alive))
+    load = view.load().astype(np.int64)
+    out = np.zeros((members.shape[0], n_parity), np.int32)
+    for j, row in enumerate(members):
+        ids = row[row >= 0]
+        m_hosts = set(np.asarray(view.host_of(view.homes[ids])).ravel()
+                      .tolist())
+        m_devs = set(int(d) for d in view.homes[ids])
+        p_hosts: set[int] = set()
+        for r in range(n_parity):
+            taken = m_hosts | p_hosts
+            host_free_all = alive[~np.isin(a_hosts, list(taken))]
+            host_free = alive[~np.isin(a_hosts, list(m_hosts))]
+            dev_free = alive[~np.isin(alive, list(m_devs))]
+            for cands in (host_free_all, host_free, dev_free, alive):
+                if cands.size:
+                    out[j, r] = _pick_balanced(cands, load)
+                    break
+            p_hosts.add(int(view.host_of(out[j, r])))
+    return out
+
+
+def stripe_parity_groups(view: ClusterView, group_size: int,
+                         fold_tail: bool = True) -> np.ndarray:
     """(n_groups, width) int32 member block ids, -1 padded, striped over the
     *current* placement.
 
-    Round-robin over per-host bucket lists so consecutive members come from
-    distinct hosts — whenever ≥ group_size alive hosts still have blocks
-    left, a group's members are host-disjoint and a single host failure
-    erases at most one member. A lone tail member is folded into the
-    previous group (widening it by one) so every group has ≥ 2 members —
-    a one-member group would make the parity a bare copy pinned to a single
-    surviving frame.
+    Each group draws one member from each of the ``group_size`` *fullest*
+    per-host block buckets (ties break by lowest host id), so groups stay
+    host-disjoint — and a single host failure erases at most one member —
+    whenever the load spread allows it at all. Byte-balanced primary
+    placement can pack far more blocks onto one host than the others
+    (many small leaves land together); plain round-robin interleaving
+    leaves that host's surplus as a same-host tail whose groups a single
+    host loss wipes entirely, while greedy max-first pairing defers the
+    same-host groups to the true pigeonhole residue
+    (``2·max_host_load − total`` at width 2). Whatever residue remains is
+    chunked same-host as a last resort — the planner's fallback
+    accounting prices what those groups cannot cover, never silently.
+
+    A lone tail member is folded into the previous group (widening it by
+    one) so every group has ≥ 2 members — a one-member group would make
+    the parity a bare copy pinned to a single surviving frame. The RS
+    codec passes ``fold_tail=False``: with m ≥ 2 rows a singleton group
+    already has host-disjoint copies, and widening a group past the
+    clamp can push members + rows over the alive-host count, re-opening
+    the double-loss hole the clamp closed.
     """
     hosts = np.asarray(view.host_of(view.homes))
     buckets = {int(h): list(np.nonzero(hosts == h)[0])
                for h in np.unique(hosts)}
-    order: list[int] = []
+    groups: list[list[int]] = []
     while buckets:
-        for h in sorted(buckets):
-            order.append(int(buckets[h].pop(0)))
+        heads = sorted(buckets, key=lambda h: (-len(buckets[h]), h))
+        if len(heads) == 1:
+            # single host left: chunk its surplus into same-host groups
+            tail = buckets.pop(heads[0])
+            groups.extend([int(b) for b in tail[i:i + group_size]]
+                          for i in range(0, len(tail), group_size))
+            break
+        grp: list[int] = []
+        for h in heads[:group_size]:
+            grp.append(int(buckets[h].pop(0)))
             if not buckets[h]:
                 del buckets[h]
-    n_groups = -(-len(order) // group_size)
-    ragged = len(order) % group_size
-    width = group_size
-    if n_groups > 1 and ragged == 1:
-        # fold the lone tail member into the previous group
-        n_groups -= 1
-        width = group_size + 1
-    members = np.full((n_groups, width), -1, np.int32)
-    for i, b in enumerate(order[:n_groups * group_size]):
-        members[i // group_size, i % group_size] = b
-    for j, b in enumerate(order[n_groups * group_size:]):
-        members[n_groups - 1, group_size + j] = b
+        groups.append(grp)
+    if fold_tail and len(groups) > 1 and len(groups[-1]) == 1:
+        groups[-2].extend(groups.pop())
+    width = max(group_size, max(len(g) for g in groups))
+    members = np.full((len(groups), width), -1, np.int32)
+    for j, grp in enumerate(groups):
+        members[j, :len(grp)] = grp
     return members
 
 

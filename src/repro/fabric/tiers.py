@@ -12,6 +12,10 @@ Tier order (cheapest perturbation first, see DESIGN.md):
                   like the params, so it gets its own ring-shifted homing;
                   blocks whose checkpoint copy also died fall through.
   DISK          — the persistent store mirror (always reachable, slowest).
+  SILENT_ERROR  — not a loss tier: the integrity scrub's classification
+                  for blocks whose coded state was silently corrupted
+                  (detected via RS syndromes, corrected in place when
+                  localizable — ‖δ′‖² ≈ 0, priced in the ledger).
 
 This extends the Thm 4.1/4.2 accounting per tier: the applied perturbation
 ``E‖δ′‖²`` decomposes over tiers, and the replica/parity terms vanish when
@@ -41,6 +45,7 @@ class RecoveryTier(enum.IntEnum):
     PARITY = 2
     RUNNING_CKPT = 3
     DISK = 4
+    SILENT_ERROR = 5
 
 
 # nominal read bandwidth per tier, bytes/second — ICI peer copy, on-device
@@ -52,6 +57,9 @@ TIER_BANDWIDTH = {
     RecoveryTier.PARITY: 200e9,
     RecoveryTier.RUNNING_CKPT: 400e9,
     RecoveryTier.DISK: 1e9,
+    # syndrome scrub + in-place XOR correction run at the parity tier's
+    # on-device fold bandwidth
+    RecoveryTier.SILENT_ERROR: 200e9,
 }
 
 
@@ -60,6 +68,10 @@ class TierPlan:
     tiers: np.ndarray                  # (total_blocks,) int8 RecoveryTier
     failed_devices: np.ndarray
     step: int
+    # never-silent fallback accounting: one dict per parity group whose
+    # losses exceeded the code's surviving strength (the fabric emits a
+    # ``tier_fallback`` event for each — see ParityCodec.exceeded_groups)
+    fallbacks: list = dataclasses.field(default_factory=list)
 
     def mask(self, tier: RecoveryTier) -> np.ndarray:
         return self.tiers == int(tier)
@@ -125,6 +137,7 @@ class TieredRecovery:
         tiers[replica_ok] = int(RecoveryTier.PEER_REPLICA)
 
         parity_ok = np.zeros((total,), bool)
+        fallbacks: list = []
         if self.parity is not None:
             # a member's frame is available if its home is still alive and
             # it isn't lost in this event — a block homed on a device dead
@@ -137,6 +150,8 @@ class TieredRecovery:
                                                 else False)
             parity_ok = self.parity.reconstructable(
                 lost & ~replica_ok, available, failed, step)
+            fallbacks = self.parity.exceeded_groups(
+                lost & ~replica_ok, available, failed, step)
         tiers[parity_ok & ~replica_ok] = int(RecoveryTier.PARITY)
 
         remaining = lost & ~replica_ok & ~parity_ok
@@ -144,7 +159,8 @@ class TieredRecovery:
                       & ~np.isin(self.ckpt_homes, failed))
         tiers[remaining & ckpt_alive] = int(RecoveryTier.RUNNING_CKPT)
         tiers[remaining & ~ckpt_alive] = int(RecoveryTier.DISK)
-        return TierPlan(tiers=tiers, failed_devices=failed, step=int(step))
+        return TierPlan(tiers=tiers, failed_devices=failed, step=int(step),
+                        fallbacks=fallbacks)
 
     # -- execution -----------------------------------------------------------
 

@@ -1,0 +1,71 @@
+"""Dispatch wrappers: GF(256) multiply-accumulate, RS encode/decode folds.
+
+Same backend-selection contract as ``parity_xor.ops``: compiled Pallas on
+TPU, the jnp log/antilog oracle elsewhere, interpret-mode Pallas only
+when forced (kernel-semantics validation). Both paths are bit-exact on
+the packed int32 frame words.
+
+The RS tier composes everything from one primitive, ``gf256_mac`` — the
+encode is m MAC folds (one per parity row), the erasure decode is ≤ m
+MAC folds over [member frames, parity frames] with host-solved weights,
+and the integrity syndromes are the encode XOR the stored parity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gf256_mac.kernel import gf256_mac_pallas
+from repro.kernels.gf256_mac.ref import gf256_mac_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gf256_mac(frames: jnp.ndarray, base: jnp.ndarray, coeff: jnp.ndarray,
+              use_pallas: bool | None = None,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """``out[j] = base[j] ^ XOR_i gf_mul(coeff[j, i], frames[j, i])``.
+
+    frames: (n_groups, g, E) int32; base: (n_groups, E) int32;
+    coeff: (n_groups, g) GF(256) bytes — 0 drops a member, 1 is XOR.
+    ``use_pallas=None`` is auto: compiled kernel on TPU, oracle elsewhere.
+    """
+    if use_pallas is None:
+        use_pallas = _is_tpu()
+    if not use_pallas:
+        return gf256_mac_ref(frames, base, coeff)
+    if interpret is None:
+        interpret = not _is_tpu()
+    return gf256_mac_pallas(frames, base, coeff, interpret=interpret)
+
+
+def rs_encode(frames: jnp.ndarray, coeff_rows: jnp.ndarray,
+              use_pallas: bool | None = None,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """All parity rows of every group: (n_groups, m, E) int32.
+
+    frames: (n_groups, g, E) int32 grouped member frames;
+    coeff_rows: (m, n_groups, g) per-row coefficient bytes with padding
+    members already zeroed (the valid-mask generalization). m is tiny
+    (≤ ~4), so one MAC dispatch per row.
+    """
+    base = jnp.zeros(frames.shape[::2], jnp.int32)
+    rows = [gf256_mac(frames, base, coeff_rows[r], use_pallas, interpret)
+            for r in range(coeff_rows.shape[0])]
+    return jnp.stack(rows, axis=1)
+
+
+def rs_decode(frames_ext: jnp.ndarray, weights: jnp.ndarray,
+              use_pallas: bool | None = None,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """One erased ordinal across every group: (n_groups, E) int32.
+
+    frames_ext: (n_groups, g + m, E) int32 — member frames concatenated
+    with the group's parity rows; weights: (n_groups, g + m) host-solved
+    decode coefficients (all-zero rows yield zeros for groups with fewer
+    erasures — callers scatter only real ordinals).
+    """
+    base = jnp.zeros(frames_ext.shape[::2], jnp.int32)
+    return gf256_mac(frames_ext, base, weights, use_pallas, interpret)

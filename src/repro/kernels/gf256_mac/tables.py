@@ -1,0 +1,140 @@
+"""GF(256) field arithmetic tables + host-side linear algebra.
+
+The Reed-Solomon tier works over GF(2^8) with the primitive polynomial
+0x11D (x^8 + x^4 + x^3 + x^2 + 1, generator alpha = 2 — the RAID-6 /
+CCSDS convention). Everything here is host-side numpy: the log/antilog
+tables the jnp oracle gathers from, scalar field ops, the Cauchy
+coefficient matrix the codec encodes with, and the Gauss-Jordan solve
+that turns an erasure pattern into per-survivor decode weights.
+
+Why Cauchy and not Vandermonde: the erasure decode inverts the e x e
+submatrix selecting e parity rows and e erased member columns. Every
+square submatrix of a Cauchy matrix is nonsingular, so *any* combination
+of <= m erasures against any m surviving parity rows is solvable;
+Vandermonde submatrices over GF(2^8) can be singular. Columns are scaled
+so row 0 is all-ones — parity row 0 of the RS code is then bit-identical
+to the XOR tier's parity block (RS(k, 1) degenerates to `parity_xor`),
+and scaling preserves the every-submatrix-nonsingular property.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+GF_POLY = 0x11D
+
+# EXP is doubled so EXP[log a + log b] needs no modular reduction on the
+# host path; LOG[0] is a sentinel (0) masked out by every consumer.
+GF_EXP = np.zeros((512,), np.int32)
+GF_LOG = np.zeros((256,), np.int32)
+_x = 1
+for _i in range(255):
+    GF_EXP[_i] = _x
+    GF_LOG[_x] = _i
+    _x <<= 1
+    if _x & 0x100:
+        _x ^= GF_POLY
+GF_EXP[255:510] = GF_EXP[:255]
+del _x, _i
+
+
+def gf_mul(a, b):
+    """Elementwise GF(256) product of arrays/scalars in [0, 256)."""
+    a = np.asarray(a, np.int32)
+    b = np.asarray(b, np.int32)
+    out = GF_EXP[GF_LOG[a] + GF_LOG[b]]
+    return np.where((a == 0) | (b == 0), 0, out)
+
+
+def gf_inv(a):
+    """Multiplicative inverse; 0 has none (asserted)."""
+    a = np.asarray(a, np.int32)
+    assert np.all(a != 0), "gf_inv(0) is undefined"
+    return GF_EXP[255 - GF_LOG[a]]
+
+
+def gf_scale_words_np(words, c) -> np.ndarray:
+    """Scale each byte of packed int32 words by the scalar byte ``c``
+    (host-side mirror of the kernel's SWAR multiply; used by syndrome
+    localization)."""
+    words = np.asarray(words, np.int64) & 0xFFFFFFFF
+    out = np.zeros_like(words)
+    for plane in range(4):
+        b = (words >> (8 * plane)) & 0xFF
+        out |= gf_mul(b, c).astype(np.int64) << (8 * plane)
+    return (out & 0xFFFFFFFF).astype(np.uint32).view(np.int32)
+
+
+def gf_mat_inv(a: np.ndarray) -> np.ndarray:
+    """Invert a square matrix over GF(256) by Gauss-Jordan elimination.
+
+    Raises ``np.linalg.LinAlgError`` on a singular input — with Cauchy
+    coefficients that never happens for a legal erasure pattern, so a
+    raise here means the caller selected a malformed submatrix.
+    """
+    a = np.array(a, np.int32, copy=True)
+    n = a.shape[0]
+    out = np.eye(n, dtype=np.int32)
+    for col in range(n):
+        piv = col + int(np.argmax(a[col:, col] != 0))
+        if a[piv, col] == 0:
+            raise np.linalg.LinAlgError("singular GF(256) matrix")
+        if piv != col:
+            a[[col, piv]] = a[[piv, col]]
+            out[[col, piv]] = out[[piv, col]]
+        inv = gf_inv(a[col, col])
+        a[col] = gf_mul(a[col], inv)
+        out[col] = gf_mul(out[col], inv)
+        for r in range(n):
+            if r != col and a[r, col]:
+                f = a[r, col]
+                a[r] ^= gf_mul(f, a[col])
+                out[r] ^= gf_mul(f, out[col])
+    return out
+
+
+def rs_coefficients(width: int, n_parity: int) -> np.ndarray:
+    """(n_parity, width) Cauchy encode matrix, row 0 normalized to ones.
+
+    Parity row r of a group is ``P_r = XOR_i gf_mul(C[r, i], D_i)`` over
+    the group's valid members. ``width + n_parity <= 256`` bounds the
+    code (one field element per codeword position).
+    """
+    if width + n_parity > 256:
+        raise ValueError(
+            f"RS({width}, {n_parity}) exceeds GF(256): width + parity "
+            "count must be <= 256")
+    x = np.arange(n_parity, dtype=np.int32)            # parity positions
+    y = np.arange(width, dtype=np.int32) + n_parity    # member positions
+    c = gf_inv(x[:, None] ^ y[None, :])                # Cauchy: 1/(x ^ y)
+    return gf_mul(c, gf_inv(c[0])[None, :])            # row 0 -> all ones
+
+
+def rs_decode_weights(coeff: np.ndarray, erased: np.ndarray,
+                      survivors: np.ndarray,
+                      parity_rows: np.ndarray) -> np.ndarray:
+    """Decode weights for one group's erasure pattern.
+
+    ``coeff`` is the (m, width) encode matrix, ``erased`` the member
+    slots to solve for (e <= len(parity_rows)), ``survivors`` the member
+    slots with trusted live frames, ``parity_rows`` the parity row
+    indices to fold (the first e are used). Returns ``(e, width + m)``
+    weights W such that erased member q's frame is
+
+        XOR_i gf_mul(W[q, i], member_frame_i)
+        XOR_r gf_mul(W[q, width + r], parity_frame_r)
+
+    — i.e. the syndrome fold and the inverse application collapsed into
+    one multiply-accumulate over [member frames, parity frames].
+    """
+    m, width = coeff.shape
+    erased = np.asarray(erased, np.int64)
+    rows = np.asarray(parity_rows, np.int64)[:erased.size]
+    a = coeff[np.ix_(rows, erased)]
+    a_inv = gf_mat_inv(a)
+    w = np.zeros((erased.size, width + m), np.int32)
+    for q in range(erased.size):
+        for ri, r in enumerate(rows):
+            w[q, width + int(r)] ^= a_inv[q, ri]
+            for i in np.asarray(survivors, np.int64):
+                w[q, int(i)] ^= gf_mul(a_inv[q, ri], coeff[int(r), int(i)])
+    return w

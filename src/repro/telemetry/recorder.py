@@ -50,6 +50,12 @@ EVENT_SCHEMA: dict[str, tuple[str, ...]] = {
     "save":     ("step", "blocks", "bytes_moved", "seconds", "mode"),
     "mirror":   ("step", "bytes", "segments", "background"),
     "store_write_failed": ("step", "segment", "host", "path", "error"),
+    "store_write_retried": ("step", "segment", "host", "path", "error",
+                            "attempt", "delay_seconds"),
+    "tier_fallback": ("step", "group", "lost_members", "unavailable",
+                      "strength", "fresh"),
+    "silent_error_detected": ("step", "group", "error_kind", "member",
+                              "block", "row", "localized", "corrected"),
     "compact":  ("reclaimed", "rekeyed"),
     "rehome":   ("step", "rehomed_blocks", "alive_devices", "alive_hosts",
                  "parity_groups"),

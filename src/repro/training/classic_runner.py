@@ -260,7 +260,24 @@ def run_with_trace(model: IterativeModel, policy: CheckpointPolicy, *,
         live = ctl.pack_live(p, account=True) if packed else p
         ctl.maintain(i, live, own_live=packed)
         ctl.maybe_checkpoint(i, live, own_live=packed)
-        for ev in events_at.pop(i, []):
+        evs = events_at.pop(i, [])
+        if len(evs) > 1:
+            # same-step events are one correlated multi-domain loss:
+            # recover the union in one tier-planned pass (multi-erasure)
+            names = ",".join(f"{e.kind}:{e.index}" for e in evs)
+            with rec.span("recovery", step=i, domain=names):
+                p, info = ctl.on_domain_events(
+                    p, [(e.kind, e.index) for e in evs], step=i)
+            info["step"] = i
+            events_out.append(info)
+            if heal_after is not None:
+                applied = {(a["kind"], a["index"])
+                           for a in info.get("events", [])}
+                for ev in evs:
+                    if (ev.kind, ev.index) in applied:
+                        heal_at.setdefault(i + heal_after, []).append(ev)
+        elif evs:
+            ev = evs[0]
             with rec.span("recovery", step=i,
                           domain=f"{ev.kind}:{ev.index}"):
                 p, info = ctl.on_domain_event(p, ev.kind, ev.index, step=i)

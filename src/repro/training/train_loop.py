@@ -89,6 +89,17 @@ class TrainLoopConfig:
     # trace — reproducible soaks and elastic-mesh tests
     fail_schedule: Optional[list] = None
     heal_after: Optional[int] = None
+    # silent-error soak: in-arena bit flips injected at these steps — an
+    # int step (random block/word/bit) or a (step, block) pair targeting
+    # one block. The flip corrupts the replica snapshot invisibly; an RS
+    # fabric's scrub detects/corrects it, while an XOR fabric carries the
+    # corruption into its next replica-tier recovery where the measured
+    # ‖δ′‖² prices the undetected window honestly.
+    flip_schedule: Optional[list] = None
+    # integrity-scrub cadence in steps (0 = never). Runs the fabric's
+    # syndrome pass after maintenance; detections land in metrics and the
+    # perturbation ledger at ‖δ′‖² ≈ 0 (corrected in place).
+    scrub_interval: int = 0
     # telemetry sink (repro.telemetry.Recorder): events/spans/ledger for
     # the whole loop + its controller/fabric/store. Default NULL_RECORDER —
     # every emit point is a no-op and the hot path is unchanged.
@@ -104,6 +115,10 @@ class TrainLoopConfig:
                 and self.fabric is None:
             raise ValueError("trace-driven soak mode needs a fabric "
                              "(set TrainLoopConfig.fabric)")
+        if (self.flip_schedule or self.scrub_interval) \
+                and self.fabric is None:
+            raise ValueError("bit-flip injection / integrity scrubs need "
+                             "a fabric (set TrainLoopConfig.fabric)")
 
 
 class TrainLoop:
@@ -339,6 +354,11 @@ class TrainLoop:
         it = iter(batches)
         events_at = self._sample_trace(n_steps)
         heal_at: dict[int, list] = {}
+        flips_at: dict[int, list] = {}
+        for fl in (self.loop_cfg.flip_schedule or []):
+            s, blk = (int(fl[0]), int(fl[1])) \
+                if isinstance(fl, (tuple, list)) else (int(fl), None)
+            flips_at.setdefault(max(1, min(s, n_steps)), []).append(blk)
         elastic = self._elastic_enabled(state)
         self._last_batch_dim = None
         for i in range(1, n_steps + 1):
@@ -393,7 +413,31 @@ class TrainLoop:
                         fab.block_until_maintained()
                         t_fence = time.perf_counter()
                     rec["overhead_seconds"] = t_fence - tm0
-                for ev in events_at.pop(i, []):
+                evs = events_at.pop(i, [])
+                if len(evs) > 1:
+                    # simultaneous multi-domain loss: every event resolves
+                    # against the pre-failure view and the union recovers
+                    # in ONE tier-planned pass (the RS tier's multi-erasure
+                    # case — applying them sequentially would let the first
+                    # recovery's re-encode hide the correlation)
+                    names = ",".join(f"{e.kind}:{e.index}" for e in evs)
+                    with self.recorder.span("recovery", step=int(state.step),
+                                            domain=names):
+                        live, info = self.controller.on_domain_events(
+                            live, [(e.kind, e.index) for e in evs],
+                            step=int(state.step))
+                    state = self._with_live(state, live)
+                    rec.setdefault("failures", []).append(info)
+                    if self.loop_cfg.heal_after is not None:
+                        applied = {(a["kind"], a["index"])
+                                   for a in info.get("events", [])}
+                        for ev in evs:
+                            if (ev.kind, ev.index) in applied:
+                                heal_at.setdefault(
+                                    i + self.loop_cfg.heal_after,
+                                    []).append(ev)
+                elif evs:
+                    ev = evs[0]
                     with self.recorder.span("recovery", step=int(state.step),
                                             domain=f"{ev.kind}:{ev.index}"):
                         live, info = self.controller.on_domain_event(
@@ -416,6 +460,22 @@ class TrainLoop:
                     # relayout the arena state, and re-jit the step —
                     # training continues on the new topology next step
                     state = self._maybe_resize(state, int(state.step), rec)
+                for blk in flips_at.pop(i, []):
+                    # soft-error injection: corrupt the replica snapshot
+                    # invisibly — only the scrub (or the honestly-priced
+                    # perturbation of a later replica recovery) sees it
+                    if fab is not None and fab.replicas is not None \
+                            and fab.replicas.arena is not None:
+                        where = fab.inject_arena_bit_flip(block=blk,
+                                                          rng=self._rng)
+                        rec.setdefault("bit_flips", []).append(where)
+                if (self.loop_cfg.scrub_interval
+                        and i % self.loop_cfg.scrub_interval == 0):
+                    with self.recorder.span("scrub", step=int(state.step)):
+                        sc = self.controller.scrub(step=int(state.step))
+                    if sc["checked"]:
+                        rec["scrub"] = {"detected": sc["detected"],
+                                        "corrected": sc["corrected"]}
                 if (self.loop_cfg.fail_prob > 0
                         and self._rng.random() < self.loop_cfg.fail_prob):
                     with self.recorder.span("recovery",

@@ -294,9 +294,14 @@ def test_store_flush_chains_failed_job_context(tmp_path):
         store.flush()
     msg = str(ei.value)
     assert "step 7" in msg and "segment" in msg and "shard" in msg
-    assert isinstance(ei.value.__cause__, OSError)   # original chained
+    # chain: flush context -> retry-budget RuntimeError -> original OSError
+    assert isinstance(ei.value.__cause__, RuntimeError)
+    assert "attempts" in str(ei.value.__cause__)
+    assert isinstance(ei.value.__cause__.__cause__, OSError)
     ev = [e for e in rec.events if e["kind"] == "store_write_failed"]
     assert len(ev) == 1
+    retried = [e for e in rec.events if e["kind"] == "store_write_retried"]
+    assert len(retried) == store._retry_limit
     assert ev[0]["step"] == 7 and "disk full" in ev[0]["error"]
     assert ev[0]["segment"] is not None and ev[0]["path"] is not None
     # the error is one-shot: a second flush succeeds
