@@ -14,6 +14,19 @@ not the model):
   maint_sweep_*      — analytic HBM bytes + measured wall-clock per
                        maintenance step, fused single sweep vs the seed
                        three-pass path (both including PRIORITY scoring).
+  maint_sweep_quant  — word-level quantized arena: the reduced model's
+                       redundancy bytes per sweep (replica + parity +
+                       staging) and analytic bytes/step with every leaf
+                       cast to bf16, vs the f32 baseline of the same
+                       shapes. REQUIRED: the bf16 run moves ≤ 0.55× the
+                       f32 bytes (``quant_bytes_le_half_f32``) and the
+                       all-f32 e2e run stays loss-bit-equal to the
+                       PyTree path (``f32_loss_bit_equal`` — the word
+                       arena is a bitwise no-op at f32).
+  maint_arena_padding — tail packing: pad-word overhead of the default
+                       (tail-packed) layout vs ``tail_pack=False``; the
+                       ``padding_ratio`` gauge is RECORDED for the perf
+                       trajectory.
   maint_partial_save — bytes moved into the running checkpoint by the
                        donation-based in-place save at r=0.125 vs the full
                        rewrite (the §4.3 property, now true in memory).
@@ -77,6 +90,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import shutil
 import tempfile
 import time
@@ -240,6 +254,66 @@ def _sweep_rows(params, quick: bool) -> tuple[list[str], dict]:
     return rows, out
 
 
+def _padding_rows(params, quick: bool) -> list[str]:
+    """Tail packing: alignment overhead of the default layout vs the
+    fully tile-aligned (``tail_pack=False``) layout on the reduced
+    model. ``padding_ratio`` = pad words / live payload words."""
+    from repro.core.arena import build_arena_layout
+
+    part = partition_pytree(params, 128)
+    packed = build_arena_layout(part)
+    aligned = build_arena_layout(part, tail_pack=False)
+    n_tail = (sum(1 for ab in packed.blocks
+                  if ab.offset >= packed.tail_start)
+              if packed.has_tail else 0)
+    saved = (aligned.total_words - packed.total_words) * 4
+    return [csv_row(
+        "maint_arena_padding", 0.0,
+        f"padding_ratio={packed.padding_ratio:.4f};"
+        f"padding_ratio_unpacked={aligned.padding_ratio:.4f};"
+        f"tail_blocks={n_tail};bytes_saved={saved};"
+        f"arena_bytes={packed.nbytes};"
+        f"tail_packed_not_larger="
+        f"{bool(packed.total_words <= aligned.total_words)}")]
+
+
+def _quant_rows(params, quick: bool, f32_loss_bit_equal: bool) -> list[str]:
+    """Word-level quantized arena: redundancy bytes of the reduced model
+    with every leaf cast to bf16 vs the f32 baseline of the same shapes.
+    The arena stores raw words (2 bf16 elements per 32-bit word), so the
+    replica, parity and sweep traffic all halve; the 0.55 gate leaves
+    slack for tile-alignment padding on narrow leaves.
+
+    ``f32_loss_bit_equal`` re-surfaces the e2e headline's
+    ``loss_bit_equal`` under the quant gate: for an all-f32 model the
+    word arena is bitwise the historical layout, so the arena-resident
+    training run must stay bit-identical to the PyTree path."""
+    p16 = jax.tree_util.tree_map(lambda x: x.astype(jnp.bfloat16), params)
+    out = {}
+    for name, tree in (("f32", params), ("bf16", p16)):
+        part = partition_pytree(tree, 128)
+        fab = CheckpointFabric(part, FabricConfig())
+        fab.maintain(1, tree, force=True)
+        t = fab._traffic_model()
+        out[name] = {"bytes": int(t["arena"]),
+                     "red": int(sum(fab.redundancy_nbytes().values())),
+                     "padding": float(t.get("padding_ratio", 0.0))}
+    ratio_bytes = out["bf16"]["bytes"] / max(out["f32"]["bytes"], 1)
+    ratio_red = out["bf16"]["red"] / max(out["f32"]["red"], 1)
+    ok = bool(ratio_bytes <= 0.55 and ratio_red <= 0.55)
+    return [csv_row(
+        "maint_sweep_quant", 0.0,
+        f"bytes_per_step_bf16={out['bf16']['bytes']};"
+        f"bytes_per_step_f32={out['f32']['bytes']};"
+        f"redundancy_bytes_bf16={out['bf16']['red']};"
+        f"redundancy_bytes_f32={out['f32']['red']};"
+        f"bytes_ratio_bf16_over_f32={ratio_bytes:.3f};"
+        f"redundancy_ratio_bf16_over_f32={ratio_red:.3f};"
+        f"quant_bytes_le_half_f32={ok};"
+        f"f32_loss_bit_equal={bool(f32_loss_bit_equal)};"
+        f"padding_ratio={out['bf16']['padding']:.4f}")]
+
+
 def _partial_save_rows(params, quick: bool) -> list[str]:
     """In-place partial save: O(k·block_bytes) AND faster than the
     full-leaf rewrite.
@@ -272,11 +346,18 @@ def _partial_save_rows(params, quick: bool) -> list[str]:
                                  fabric=FabricConfig())),
                 ("inplace_tree", dict(inplace_save=True)),
                 ("rewrite", dict(inplace_save=False)))
+    # warm one full ROUND_ROBIN *selection period*, not one rotation:
+    # when total_blocks % k != 0 the selection window shifts each
+    # rotation, so distinct (selection size → jit bucket) keys keep
+    # appearing for total/gcd(total, k) saves — timing before that pays
+    # a recompile mid-measurement
+    period = part.total_blocks // math.gcd(part.total_blocks, k)
+    warm = -(-period // cycle) * cycle
     for name, kw in variants:
         ctl = FTController(params, rr_pol, **kw)
         has_fabric = ctl.fabric is not None
         live = params
-        for i in range(cycle):                  # warm cycle: compile every
+        for i in range(warm):                   # compile every
             live = _drift(live)                 # (leaf, bucket) pair
             if has_fabric:
                 ctl.maintain(1 + i, live)
@@ -289,9 +370,9 @@ def _partial_save_rows(params, quick: bool) -> list[str]:
                 # (and the replica arena the save scatters from); block on
                 # it so save_seconds times the save, not the sweep's async
                 # tail (the sweep is measured by the maint_sweep_* rows)
-                ctl.maintain(1 + cycle + i, live)
+                ctl.maintain(1 + warm + i, live)
                 jax.block_until_ready(ctl.fabric.replicas.arena)
-            ctl.checkpoint_now(1 + cycle + i, live)
+            ctl.checkpoint_now(1 + warm + i, live)
         if kw.get("inplace_save"):
             moved = ctl.stats["save_bytes_moved"] / max(ctl.stats["saves"], 1)
         else:
@@ -806,9 +887,14 @@ def run(trials: int = 4, quick: bool = False,
     params = _reduced_params()
     sweep_rows, _ = _sweep_rows(params, quick)
     rows.extend(sweep_rows)
+    rows.extend(_padding_rows(params, quick))
     rows.extend(_partial_save_rows(params, quick))
     rows.extend(_store_rows(params, quick))
-    rows.extend(_e2e_rows(quick))
+    e2e_rows = _e2e_rows(quick)
+    rows.extend(e2e_rows)
+    f32_bit = any(r.startswith("e2e_step_maintain_headline")
+                  and "loss_bit_equal=True" in r for r in e2e_rows)
+    rows.extend(_quant_rows(params, quick, f32_bit))
     rows.extend(_overlap_rows(quick))
     rows.extend(_sharded_rows(quick))
     rows.extend(_telemetry_rows(quick, telemetry_out))

@@ -77,6 +77,13 @@ REQUIRED_FLAGS = [
     # injected arena bit flip — both deterministic on any machine
     ("tier_soak_multi_erasure", "rs_recovery_bit_equal=True"),
     ("tier_soak_multi_erasure", "silent_error_detected=True"),
+    # word-level quantized arena: a bf16 model's redundancy bytes per
+    # sweep must stay at or below 0.55x the f32 baseline of the same
+    # shapes, and the all-f32 e2e run must stay loss-bit-equal to the
+    # PyTree path (the word arena is a bitwise no-op at f32) — both
+    # deterministic (analytic bytes + bit comparison)
+    ("maint_sweep_quant", "quant_bytes_le_half_f32=True"),
+    ("maint_sweep_quant", "f32_loss_bit_equal=True"),
 ]
 # wall-clock flags: recorded loudly, never gated (shared CI runners are
 # too noisy — the committed baseline documents the local inversion)
@@ -112,6 +119,10 @@ RECORDED_VALUES = [
     # the contrast the RS tier's bit-equal gate is measured against
     ("tier_soak_multi_erasure", "xor_fallbacks"),
     ("tier_soak_multi_erasure", "xor_applied_sq"),
+    # quantized-arena byte trajectory + tail-packing alignment overhead
+    ("maint_sweep_quant", "redundancy_ratio_bf16_over_f32"),
+    ("maint_arena_padding", "padding_ratio"),
+    ("maint_arena_padding", "padding_ratio_unpacked"),
 ]
 
 

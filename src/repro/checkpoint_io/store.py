@@ -105,20 +105,25 @@ class ShardedCheckpointStore:
         tiers, while the disk mirror keeps its stable layout until a
         re-keying :meth:`compact` migrates segments to their current homes.
 
-        ``arena_layout`` (+ ``arena_values``, the packed float32 arena of
+        ``arena_layout`` (+ ``arena_values``, the packed word arena of
         ``params``) switches on the **arena segment layout**: segments are
-        the arena block table's rows (float32 payloads, one per
+        the arena block table's rows (word payloads — raw leaf-dtype bytes
+        for word-packable dtypes, the f32 image otherwise; one per
         (leaf, block)), a save appends one contiguous buffer per host
         shard, and partial reads memmap exactly the needed byte ranges."""
         self.partition = partition
         self.arena_layout = arena_layout
         self._gen = {}
         if arena_layout is not None:
-            first, n = [], 0
-            for leaf in partition.leaves:
-                first.append(n)
-                n += leaf.n_blocks
-            self._leaf_first_seg = np.asarray(first, np.int64)
+            # arena-block index of each leaf's first block. The block
+            # table is offset-ordered (tail-packed leaves after the main
+            # region), NOT flatten-ordered — derive from the table, where
+            # each leaf's blocks are contiguous and in b order.
+            first = np.full((len(partition.leaves),), -1, np.int64)
+            for idx, ab in enumerate(arena_layout.blocks):
+                if first[ab.leaf] < 0:
+                    first[ab.leaf] = idx
+            self._leaf_first_seg = first
         if homes is not None and domains is not None:
             self.host_of_block = np.asarray(
                 domains.host_of(np.asarray(homes)), np.int32)
@@ -139,7 +144,17 @@ class ShardedCheckpointStore:
             "segments": [None] * n_segments,
         }
         if arena_layout is not None:
-            manifest["arena"] = {"n_segments": n_segments}
+            # per-segment stored dtype: word-packable leaves persist raw
+            # element bytes in that dtype, everything else the f32 image —
+            # an offline reader needs no partition object to decode
+            from repro.core.blocks import word_packable
+            seg_dtype = [
+                str(np.dtype(partition.leaves[ab.leaf].dtype))
+                if word_packable(partition.leaves[ab.leaf].dtype)
+                else "float32"
+                for ab in arena_layout.blocks]
+            manifest["arena"] = {"n_segments": n_segments,
+                                 "segment_dtype": seg_dtype}
         if self.host_of_block is not None:
             manifest["host_of_block"] = [int(h) for h in self.host_of_block]
         self._write_manifest(manifest)
@@ -205,29 +220,36 @@ class ShardedCheckpointStore:
         br = self.partition.block_rows
         if self.arena_layout is not None:
             # arena-layout store fed from a PyTree: convert each selected
-            # (leaf, block) to its float32 arena payload so the on-disk
+            # (leaf, block) to its word arena payload so the on-disk
             # format stays uniform (and colocated leaves each keep their
-            # own segment instead of overwriting a shared gid key)
+            # own segment instead of overwriting a shared gid key).
+            # Word-packable dtypes store raw little-endian element bytes
+            # zero-padded to whole words; legacy dtypes (f64/int64/bool)
+            # keep the f32-image convention, one word per element.
+            from repro.core.blocks import word_packable
             for li, (leaf_meta, x) in enumerate(
                     zip(self.partition.leaves, leaves)):
                 seg = mask_np[leaf_meta.offset:
                               leaf_meta.offset + leaf_meta.n_blocks]
                 if not seg.any():
                     continue
-                arr = np.asarray(x, np.float32).reshape(
+                packable = word_packable(leaf_meta.dtype)
+                arr = (np.asarray(x) if packable
+                       else np.asarray(x, np.float32)).reshape(
                     max(leaf_meta.rows, 1), -1)
                 payload = self.arena_layout.payload_words[li]
                 for b in np.nonzero(seg)[0]:
                     lo = int(b) * br
                     hi = min(lo + br, max(leaf_meta.rows, 1))
                     blk = np.ascontiguousarray(arr[lo:hi]).reshape(-1)
-                    if blk.size < payload:   # ragged tail: zero-pad like
-                        full = np.zeros((payload,), np.float32)  # the arena
+                    full = np.zeros((payload,), np.float32)
+                    if packable:
+                        full.view(np.dtype(leaf_meta.dtype))[:blk.size] = blk
+                    else:
                         full[:blk.size] = blk
-                        blk = full
                     ab = int(self._leaf_first_seg[li]) + int(b)
-                    jobs.append((ab, blk))
-                    nbytes += blk.nbytes
+                    jobs.append((ab, full))
+                    nbytes += full.nbytes
         else:
             for leaf_meta, x in zip(self.partition.leaves, leaves):
                 seg = mask_np[leaf_meta.offset:leaf_meta.offset + leaf_meta.n_blocks]
@@ -271,12 +293,17 @@ class ShardedCheckpointStore:
                 np.nonzero(mask_np)[0]):
             ab = self.arena_layout.blocks[ab_index]
             t0 = ab.offset // ARENA_TILE
-            nt = ab.words // ARENA_TILE
+            # tail-packed blocks start mid-tile and may straddle two tiles;
+            # their (consecutive-integer) tiles sit at adjacent positions
+            # of the unique ascending gather, so one flat slice from the
+            # intra-tile start still covers the payload
+            last = (ab.offset + max(ab.words, 1) - 1) // ARENA_TILE
+            nt = int(last - t0 + 1)
             pos = int(np.searchsorted(tiles, t0))
             assert pos + nt <= tiles.size and tiles[pos] == t0, \
                 "gathered tiles do not cover the selected blocks"
-            payload = flat[pos * ARENA_TILE:
-                           pos * ARENA_TILE + ab.payload]
+            start = pos * ARENA_TILE + (ab.offset - t0 * ARENA_TILE)
+            payload = flat[start:start + ab.payload]
             jobs.append((int(ab_index), payload))
             nbytes += payload.nbytes
         if background:
@@ -639,18 +666,23 @@ class ShardedCheckpointStore:
                 if block_mask is not None and not block_mask[gid]:
                     continue
                 if self.arena_layout is not None:
-                    # arena segment: float32 payload keyed by arena-block
-                    # id — decode back to the leaf dtype, trimming the
-                    # padding the ragged tail block carries
+                    # arena segment keyed by arena-block id: word-packable
+                    # dtypes store raw element bytes (view the payload
+                    # directly as the leaf dtype — bit-exact), legacy
+                    # dtypes the f32 image (value cast back). Trim the
+                    # zero padding the ragged/sub-word tail carries.
+                    from repro.core.blocks import word_packable
                     seg = int(self._leaf_first_seg[li]) + b
-                    blk = _payload(seg, np.float32)
+                    packable = word_packable(dtype)
+                    blk = _payload(seg, dtype if packable else np.float32)
                     if blk is None:
                         continue
                     lo = b * br
                     n_rows = min(br, rows - lo) if leaf_meta.n_blocks > 1 \
                         else rows
                     blk = blk[:n_rows * width].reshape(-1, width)
-                    arr[lo:lo + blk.shape[0]] = blk.astype(dtype)
+                    arr[lo:lo + blk.shape[0]] = (blk if packable
+                                                 else blk.astype(dtype))
                 else:
                     blk = _payload(gid, dtype)
                     if blk is None:

@@ -4,41 +4,68 @@ The fabric's hot loop (replica refresh + parity encode + PRIORITY scoring
 + in-place partial save) previously operated on a *forest* of leaves: one
 kernel dispatch per touched leaf, `(1, BE)` row tiles that waste TPU
 sublanes, and per-leaf eager dispatch overhead that dominates wall-clock
-at small scale (see ``BENCH_maintain.json``: the donation save moved 7.7×
-fewer bytes than the rewrite yet ran ~18× slower).
+at small scale (see ``BENCH_maintain.json``).
 
-The arena collapses the forest to a single contiguous ``float32`` buffer:
+The arena collapses the forest to a single contiguous buffer of 32-bit
+**words** (carried as ``float32`` at the JAX level so every existing
+consumer keeps its dtype expectations; the words of non-f32 leaves are
+raw bit patterns, not values):
 
-  - every leaf is cast to float32 (value-exact for f32/bf16/f16 — the same
-    convention the parity frames already use) and laid out block-major:
-    leaf segments in flatten order, each block's payload zero-padded to a
-    multiple of ``ARENA_TILE`` = 8·128 words, so every block covers whole
-    ``(8, 128)`` sublane-aligned tiles of the 2D ``(rows, 128)`` retiling;
+  - every leaf's payload is bit-packed ``dtype_word_ratio`` elements per
+    word (f32/i32 → 1, bf16/f16/i16 → 2, fp8/i8 → 4; f32 leaves are
+    therefore stored *bitwise as their values*, the historical layout),
+    and the block table tags each segment with the leaf dtype — replica,
+    parity, RS MAC, scatter saves and the integrity scrub all move raw
+    words, so redundancy bytes scale with the stored precision;
+  - **main region**: multi-block and >= tile leaves laid out block-major
+    in flatten order, each block's payload zero-padded to a multiple of
+    ``ARENA_TILE`` = 8·128 words so every block covers whole ``(8, 128)``
+    sublane-aligned tiles of the 2D ``(rows, 128)`` retiling;
+  - **tail region** (tail packing): single-block leaves narrower than a
+    tile are packed back-to-back at *word* granularity after the main
+    region — they share tiles, which removes the ~1.6× alignment cost
+    small leaves used to pay on the reduced config. The region end is
+    re-aligned so ``data_words`` stays a tile multiple; build with
+    ``tail_pack=False`` to recover the fully aligned layout;
   - the **block table** maps ``(leaf, block) → (offset, words, payload)``
     — ``payload`` is the live words, the tail up to ``words`` is zero
     padding (XOR-neutral for parity, diff-neutral for scores);
   - colocated leaves (shared global block ids) get *separate* segments —
     the table is keyed by arena-block id, so a partial save or disk
     mirror of one gid moves every colocated payload for that gid;
-  - per-leaf arena column starts equal the (tile-aligned) parity
-    ``FrameLayout`` columns, so an XOR over arena tiles lands bit-exactly
-    in the codec's ``(n_groups, frame_elems)`` parity frames.
+  - per-leaf arena column starts equal the parity ``FrameLayout``
+    (word-) columns, so an XOR over arena words lands bit-exactly in the
+    codec's ``(n_groups, frame_elems)`` parity frames.
+
+Alongside the word domain the layout describes a **value domain** for
+the optimizer seam: per leaf, ``seg_elems = seg_words · ratio`` f32
+values per block at ``value_offset`` — ``decode_values`` /
+``encode_values`` move between the two with one slice + bitcast per
+*run* of consecutive same-dtype leaves (coalesced; an all-bf16 model is
+a single run). For an all-f32 model ``total_values == total_words`` and
+both transforms are the identity, so gradients, moments and the
+optimizer update are bit-identical to the historical f32 arena.
 
 Invariants (relied on by kernels, the store, and the property tests):
 
-  I1  ``offset`` and ``words`` of every table row are multiples of
-      ``ARENA_TILE``; ``data_words`` and ``total_words`` too.
-  I2  segments are disjoint and cover ``[0, data_words)`` exactly;
+  I1  main-region ``offset``/``words`` are multiples of ``ARENA_TILE``;
+      tail-region blocks are word-contiguous (``words == payload``,
+      offsets unaligned) and ``tail_start``/``data_words``/
+      ``total_words`` are tile multiples.
+  I2  segments are disjoint and cover ``[0, data_words)`` exactly except
+      the tail-alignment gap ``[tail_end, data_words)``, which is zero;
       ``[data_words, total_words)`` is the arena-level shard pad (zero
       tiles appended so ``n_tiles`` divides ``shards`` evenly — empty
-      when ``shards == 1``, which is the historical layout bit-for-bit).
-  I3  ``unpack(pack(tree)) == tree`` bit-exactly for every supported
-      dtype (f32/bf16/f16), any shape (including scalars and ragged
-      tail blocks).
-  I4  pad words are 0.0f (bit pattern 0x00000000) after ``pack`` and are
-      *kept* zero by every arena mutation (scatter saves copy whole
-      segments, so pads are overwritten with source pads — also zero;
-      the shard-pad tail is never a scatter target).
+      when ``shards == 1``).
+  I3  ``unpack(pack(tree)) == tree`` bit-exactly for every word-packable
+      dtype (f32/bf16/f16/fp8/int8/…), any shape (including scalars and
+      ragged tail blocks).
+  I4  pad words are 0x00000000 after ``pack`` and are *kept* zero by
+      every arena mutation (scatter saves copy whole segments, so pads
+      are overwritten with source pads — also zero; the tail-alignment
+      gap and the shard-pad tail are never scatter targets). Sub-word
+      element pads are zero *bits*, which decode to value 0 for every
+      packable dtype.
 
 Sharded form: when the trainer runs on a mesh, the same 1-D buffer
 carries a flat ``NamedSharding`` over every mesh axis — device ``d`` of
@@ -63,8 +90,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blocks import (BlockPartition, expand_block_mask,
-                               leaf_block_view, leaf_frame_width)
+from repro.core.blocks import (BlockPartition, decode_block_words,
+                               dtype_word_ratio, expand_block_mask,
+                               leaf_block_view, leaf_block_words,
+                               leaf_frame_width, leaf_word_width,
+                               word_packable)
 
 PyTree = Any
 
@@ -72,8 +102,9 @@ ARENA_LANES = 128          # lane width of the 2D retiling
 ARENA_SUBLANES = 8         # f32 sublane tile height
 ARENA_TILE = ARENA_LANES * ARENA_SUBLANES   # words per (8, 128) tile
 
-# dtypes whose values survive a float32 round trip bit-exactly — the same
-# contract the parity frames have always assumed, now checked explicitly
+# kept for reference/back-compat: the dtypes the pre-word-level arena
+# admitted (f32 round-trippable). The live gate is ``arena_compatible``,
+# which now admits every word-packable dtype.
 ARENA_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
 
 
@@ -82,16 +113,18 @@ def _align(n: int, a: int = ARENA_TILE) -> int:
 
 
 def leaf_payload_words(leaf, block_rows: int) -> int:
-    """Live f32 words per block of this leaf — the parity frame payload
-    width (:func:`repro.core.blocks.leaf_frame_width`)."""
-    return leaf_frame_width(leaf, block_rows)
+    """Live words per block of this leaf — the parity frame payload
+    width (:func:`repro.core.blocks.leaf_word_width`)."""
+    return leaf_word_width(leaf, block_rows)
 
 
 def arena_compatible(partition: BlockPartition) -> bool:
-    """True when every leaf dtype round-trips float32 bit-exactly."""
-    names = {np.dtype(d).name for d in
-             ("float32", "bfloat16", "float16")}
-    return all(np.dtype(l.dtype).name in names for l in partition.leaves)
+    """True when every leaf dtype is word-packable (1/2/4-byte int or
+    float: f32, bf16, f16, fp8, int8/16/32, uint8/16/32 — stored as raw
+    bit patterns, so the round trip is bit-exact by construction).
+    Truly unsupported dtypes (f64, int64, complex, bool) gate the model
+    to the PyTree path with a loud ``fabric/arena_gated`` warn+event."""
+    return all(word_packable(l.dtype) for l in partition.leaves)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,8 +132,8 @@ class ArenaBlock:
     """One block-table row: where block ``b`` of leaf ``li`` lives."""
     leaf: int          # leaf index in flatten order
     gid: int           # global block id (colocated leaves share gids)
-    offset: int        # word offset of the segment (ARENA_TILE aligned)
-    words: int         # aligned segment length (ARENA_TILE multiple)
+    offset: int        # word offset of the segment (tile-aligned unless tail)
+    words: int         # segment length (== payload for tail blocks)
     payload: int       # live words; [payload, words) is zero padding
 
 
@@ -108,26 +141,33 @@ class ArenaBlock:
 class ArenaLayout:
     """Static block table + tile routing for one partition.
 
-    ``ab_t0``/``ab_nt`` (first tile / tile count per arena block) and the
-    gid→arena-block CSR (``gid_ab``/``gid_ptr``) make the per-save
-    lookups O(selected) — the save hot path never scans the full table.
+    ``ab_t0``/``ab_nt`` (first tile / touched-tile count per arena block)
+    and the gid→arena-block CSR (``gid_ab``/``gid_ptr``) make the
+    per-save lookups O(selected) — the save hot path never scans the
+    full table.
 
     ``eq=False``: identity comparison/hash, so a layout can ride as a
     static (meta) field of a registered pytree (``ArenaTrainState``) —
     the numpy tables would make the generated ``__eq__`` ill-defined, and
     every consumer shares the one instance its fabric built anyway."""
     partition: BlockPartition
-    blocks: tuple[ArenaBlock, ...]      # leaf-major, block-minor
+    blocks: tuple[ArenaBlock, ...]      # offset-ascending
     leaf_offset: tuple[int, ...]        # word offset of each leaf's segment
-    seg_words: tuple[int, ...]          # aligned words per block, per leaf
+    seg_words: tuple[int, ...]          # segment words per block, per leaf
     payload_words: tuple[int, ...]      # live words per block, per leaf
     total_words: int                    # ARENA_TILE multiple (incl. shard pad)
     ab_t0: np.ndarray                   # (n_ab,) first tile per arena block
-    ab_nt: np.ndarray                   # (n_ab,) tiles per arena block
+    ab_nt: np.ndarray                   # (n_ab,) touched tiles per arena block
     gid_ab: np.ndarray                  # arena blocks sorted by gid (CSR)
     gid_ptr: np.ndarray                 # (total_blocks + 1,) CSR pointers
     shards: int = 1                     # even flat-sharding divisor of n_tiles
     data_words: int = -1                # words before the shard-pad tail
+    tail_start: int = -1                # word offset of the tail-packed region
+    leaf_order: tuple[int, ...] = ()    # leaf indices in offset order
+    payload_elems: tuple[int, ...] = () # live elements per block, per leaf
+    seg_elems: tuple[int, ...] = ()     # value-domain elems per block, per leaf
+    value_offset: tuple[int, ...] = ()  # value-domain start per leaf
+    total_values: int = -1              # f32 value-domain length
 
     @property
     def n_tiles(self) -> int:
@@ -152,20 +192,119 @@ class ArenaLayout:
     def nbytes(self) -> int:
         return self.total_words * 4
 
+    @property
+    def uniform_f32(self) -> bool:
+        """True when every leaf is f32 — words *are* values and the value
+        domain is the identity (``total_values == total_words``)."""
+        return all(np.dtype(l.dtype) == np.dtype(np.float32)
+                   for l in self.partition.leaves)
+
+    @property
+    def has_tail(self) -> bool:
+        return 0 <= self.tail_start < self.data_words
+
+    @property
+    def tail_end(self) -> int:
+        """End of the last tail payload (``data_words`` minus the
+        tail-alignment gap; == ``tail_start`` when no tail region)."""
+        end = self.tail_start
+        for ab in self.blocks:
+            if ab.offset >= self.tail_start:
+                end = max(end, ab.offset + ab.payload)
+        return end
+
+    @property
+    def padding_ratio(self) -> float:
+        """Pad words / live payload words over the whole buffer — the
+        number tail packing shrinks (reported in ``maintain_traffic`` and
+        the ``maint_arena_padding`` bench row)."""
+        data = sum(ab.payload for ab in self.blocks)
+        return (self.total_words - data) / max(data, 1)
+
     # -- host-side routing (O(selected), not O(table)) -----------------------
 
     def tile_gids(self) -> np.ndarray:
         """(n_tiles,) global block id owning each (8, 128) tile.
 
+        Tail-region tiles report -1: they may be shared by several
+        blocks, so per-gid reductions must use :meth:`word_tables` there.
         Shard-pad tail tiles report gid 0: their words are zero in every
         arena (I4), so any per-gid reduction over tiles (scores, diffs)
         sees an exact ``+0.0`` contribution — bit-neutral."""
-        gids = np.asarray([ab.gid for ab in self.blocks], np.int32)
-        gids = np.repeat(gids, self.ab_nt)
-        pad = self.n_tiles - gids.size
-        if pad:
-            gids = np.concatenate([gids, np.zeros(pad, np.int32)])
+        gids = np.zeros((self.n_tiles,), np.int32)
+        for ab in self.blocks:
+            if ab.offset >= self.tail_start >= 0:
+                continue
+            t0 = ab.offset // ARENA_TILE
+            gids[t0:t0 + ab.words // ARENA_TILE] = ab.gid
+        if self.has_tail:
+            gids[self.tail_start // ARENA_TILE:
+                 self.data_words // ARENA_TILE] = -1
         return gids
+
+    def word_tables(self) -> tuple[np.ndarray, np.ndarray, tuple]:
+        """Cached ``(word_gid, word_code, code_dtypes)``.
+
+        ``word_gid[w]`` is the gid owning word ``w`` (pads → 0, whose
+        zero words contribute an exact +0.0 to any reduction);
+        ``word_code[w]`` tags the stored dtype: 0 = f32 (including every
+        pad), ``k >= 1`` = ``code_dtypes[k - 1]``. The per-word drift
+        scorer and the tail parity epilogue are driven by these."""
+        cached = getattr(self, "_word_tables", None)
+        if cached is None:
+            gid = np.zeros((self.total_words,), np.int32)
+            code = np.zeros((self.total_words,), np.int8)
+            codes: dict[str, int] = {}
+            dts: list[np.dtype] = []
+            for ab in self.blocks:
+                dt = np.dtype(self.partition.leaves[ab.leaf].dtype)
+                if dt == np.dtype(np.float32) or not word_packable(dt):
+                    c = 0
+                else:
+                    if dt.name not in codes:
+                        dts.append(dt)
+                        codes[dt.name] = len(dts)
+                    c = codes[dt.name]
+                gid[ab.offset:ab.offset + ab.words] = ab.gid
+                code[ab.offset:ab.offset + ab.words] = c
+            cached = (gid, code, tuple(dts))
+            object.__setattr__(self, "_word_tables", cached)
+        return cached
+
+    def value_runs(self) -> tuple[tuple[int, int, int, int, Any], ...]:
+        """Cached coalesced decode/encode plan: ``(word_start, words,
+        value_start, values, dtype)`` per run of consecutive same-dtype
+        leaves in offset order (pads ride inside their leaf's run; the
+        tail-alignment gap and shard pad close an f32 run). An all-f32
+        model is one run; an all-bf16 model is one run."""
+        cached = getattr(self, "_value_runs", None)
+        if cached is None:
+            runs: list[list] = []   # [w0, nw, v0, nv, dtype]
+            w = v = 0
+
+            def push(nw: int, nv: int, dt) -> None:
+                nonlocal w, v
+                if nw == 0:
+                    return
+                if runs and np.dtype(runs[-1][4]) == np.dtype(dt):
+                    runs[-1][1] += nw
+                    runs[-1][3] += nv
+                else:
+                    runs.append([w, nw, v, nv, np.dtype(dt)])
+                w += nw
+                v += nv
+
+            for li in self.leaf_order:
+                leaf = self.partition.leaves[li]
+                dt = np.dtype(leaf.dtype) if word_packable(leaf.dtype) \
+                    else np.dtype(np.float32)
+                push(self.seg_words[li] * leaf.n_blocks,
+                     self.seg_elems[li] * leaf.n_blocks, dt)
+            push(self.total_words - w, self.total_values - v, np.float32)
+            assert w == self.total_words and v == self.total_values
+            cached = tuple(tuple(r) for r in runs)
+            object.__setattr__(self, "_value_runs", cached)
+        return cached
 
     def blocks_for_gids(self, global_ids) -> np.ndarray:
         """Ascending arena-block indices covering the given gids — every
@@ -178,20 +317,41 @@ class ArenaLayout:
         return np.sort(np.concatenate(parts))
 
     def tiles_for_blocks(self, global_ids) -> np.ndarray:
-        """Ascending (8-row-) tile indices covered by the given gids."""
+        """Ascending unique (8-row-) tile indices touched by the given
+        gids (tail blocks may share tiles, hence the dedup)."""
         abs_ = self.blocks_for_gids(global_ids)
         if abs_.size == 0:
             return np.empty((0,), np.int32)
         t0, nt = self.ab_t0[abs_], self.ab_nt[abs_]
         total = int(nt.sum())
         starts = np.cumsum(nt) - nt
-        return (np.repeat(t0, nt)
-                + (np.arange(total) - np.repeat(starts, nt))).astype(np.int32)
+        tiles = (np.repeat(t0, nt)
+                 + (np.arange(total) - np.repeat(starts, nt)))
+        return np.unique(tiles).astype(np.int32)
+
+    def split_tail_blocks(self, global_ids) -> tuple[np.ndarray, np.ndarray]:
+        """Arena-block indices of the given gids, split into
+        (main-region, tail-region) — the two scatter granularities."""
+        abs_ = self.blocks_for_gids(global_ids)
+        if abs_.size == 0 or not self.has_tail:
+            return abs_, np.empty((0,), np.int64)
+        off = np.asarray([self.blocks[i].offset for i in abs_])
+        tail = off >= self.tail_start
+        return abs_[~tail], abs_[tail]
 
     def seg_bytes_for_blocks(self, global_ids) -> int:
-        """Aligned bytes a scatter of these gids actually moves."""
-        abs_ = self.blocks_for_gids(global_ids)
-        return 4 * ARENA_TILE * int(self.ab_nt[abs_].sum())
+        """Bytes a scatter of these gids actually moves: whole touched
+        tiles for main-region blocks, payload words for tail blocks."""
+        main, tail = self.split_tail_blocks(global_ids)
+        tiles = 0
+        if main.size:
+            t0, nt = self.ab_t0[main], self.ab_nt[main]
+            total = int(nt.sum())
+            starts = np.cumsum(nt) - nt
+            tiles = np.unique(np.repeat(t0, nt) + (np.arange(total)
+                              - np.repeat(starts, nt))).size
+        words = sum(self.blocks[i].payload for i in tail)
+        return 4 * (ARENA_TILE * tiles + int(words))
 
 
 def as_live_arena(x: Any, layout: Optional[ArenaLayout]):
@@ -212,61 +372,103 @@ def as_live_arena(x: Any, layout: Optional[ArenaLayout]):
     return None
 
 
-def build_arena_layout(partition: BlockPartition,
-                       shards: int = 1) -> ArenaLayout:
-    """Lay out ``partition`` in the flat arena.
+def build_arena_layout(partition: BlockPartition, shards: int = 1,
+                       tail_pack: bool = True) -> ArenaLayout:
+    """Lay out ``partition`` in the flat word arena.
+
+    Main-region leaves go first in flatten order (tile-aligned
+    segments); tail leaves (single-block, payload < ``ARENA_TILE``
+    words) follow back-to-back at word granularity, then the region is
+    re-aligned to a tile. ``tail_pack=False`` keeps every segment
+    tile-aligned (the pre-tail-packing layout — the ``maint_arena_padding``
+    bench compares the two).
 
     ``shards > 1`` appends zero tiles so ``n_tiles % shards == 0`` —
     every flat shard of the 1-D buffer then owns a whole number of
     ``(8, 128)`` tiles and the data region ``[0, data_words)`` is
     *identical* to the ``shards=1`` layout (relayout across shard counts
     is a slice + re-pad, bit-exact)."""
-    blocks: list[ArenaBlock] = []
-    leaf_offset, seg_words, payload_words = [], [], []
-    off = 0
-    for li, leaf in enumerate(partition.leaves):
-        payload = leaf_payload_words(leaf, partition.block_rows)
-        seg = _align(payload)
-        leaf_offset.append(off)
-        seg_words.append(seg)
-        payload_words.append(payload)
-        for b in range(leaf.n_blocks):
-            blocks.append(ArenaBlock(leaf=li, gid=leaf.offset + b,
-                                     offset=off, words=seg,
-                                     payload=payload))
-            off += seg
-    ab_gid = np.asarray([ab.gid for ab in blocks], np.int64)
-    order = np.argsort(ab_gid, kind="stable")
-    gid_ptr = np.searchsorted(ab_gid[order],
-                              np.arange(partition.total_blocks + 1))
     if shards < 1:
         raise ValueError(f"shards must be >= 1, got {shards}")
-    data_words = off
+    br = partition.block_rows
+    n = len(partition.leaves)
+    pw_leaf = [leaf_word_width(leaf, br) for leaf in partition.leaves]
+    is_tail = [tail_pack and leaf.n_blocks == 1 and pw_leaf[li] < ARENA_TILE
+               for li, leaf in enumerate(partition.leaves)]
+    order = ([li for li in range(n) if not is_tail[li]]
+             + [li for li in range(n) if is_tail[li]])
+    blocks: list[ArenaBlock] = []
+    leaf_offset = [0] * n
+    seg_words = [0] * n
+    payload_words = [0] * n
+    payload_elems = [0] * n
+    seg_elems = [0] * n
+    value_offset = [0] * n
+    off = voff = 0
+    tail_start = None
+    for li in order:
+        leaf = partition.leaves[li]
+        pw = pw_leaf[li]
+        seg = pw if is_tail[li] else _align(pw)
+        if is_tail[li] and tail_start is None:
+            tail_start = off
+        r = dtype_word_ratio(leaf.dtype)
+        leaf_offset[li] = off
+        seg_words[li] = seg
+        payload_words[li] = pw
+        payload_elems[li] = leaf_frame_width(leaf, br)
+        seg_elems[li] = seg * r
+        value_offset[li] = voff
+        for b in range(leaf.n_blocks):
+            blocks.append(ArenaBlock(leaf=li, gid=leaf.offset + b,
+                                     offset=off, words=seg, payload=pw))
+            off += seg
+            voff += seg * r
+    if tail_start is None:
+        tail_start = off
+    data_words = _align(off)
+    voff += data_words - off          # tail-alignment gap, f32 values
+    ab_gid = np.asarray([ab.gid for ab in blocks], np.int64)
+    gid_order = np.argsort(ab_gid, kind="stable")
+    gid_ptr = np.searchsorted(ab_gid[gid_order],
+                              np.arange(partition.total_blocks + 1))
     pad_tiles = (-(data_words // ARENA_TILE)) % shards
     total_words = data_words + pad_tiles * ARENA_TILE
+    total_values = voff + pad_tiles * ARENA_TILE
+    ab_t0 = np.asarray([ab.offset // ARENA_TILE for ab in blocks], np.int64)
+    ab_last = np.asarray([(ab.offset + max(ab.words, 1) - 1) // ARENA_TILE
+                          for ab in blocks], np.int64)
     return ArenaLayout(partition=partition, blocks=tuple(blocks),
                        leaf_offset=tuple(leaf_offset),
                        seg_words=tuple(seg_words),
                        payload_words=tuple(payload_words),
                        total_words=total_words,
-                       ab_t0=np.asarray([ab.offset // ARENA_TILE
-                                         for ab in blocks], np.int64),
-                       ab_nt=np.asarray([ab.words // ARENA_TILE
-                                         for ab in blocks], np.int64),
-                       gid_ab=order, gid_ptr=gid_ptr,
-                       shards=shards, data_words=data_words)
+                       ab_t0=ab_t0, ab_nt=ab_last - ab_t0 + 1,
+                       gid_ab=gid_order, gid_ptr=gid_ptr,
+                       shards=shards, data_words=data_words,
+                       tail_start=tail_start, leaf_order=tuple(order),
+                       payload_elems=tuple(payload_elems),
+                       seg_elems=tuple(seg_elems),
+                       value_offset=tuple(value_offset),
+                       total_values=total_values)
 
 
 # ---------------------------------------------------------------------------
 # pack / unpack / restore (pure, jittable; layout is static)
 # ---------------------------------------------------------------------------
 
+def _is_f32(leaf) -> bool:
+    return np.dtype(leaf.dtype) == np.dtype(np.float32)
+
+
 def pack_arena(values: PyTree, layout: ArenaLayout,
                out_sharding=None) -> jnp.ndarray:
-    """Pack a tree into the flat (total_words,) float32 arena.
+    """Pack a tree into the flat (total_words,) word arena.
 
     One read of every leaf, one write of the arena — this *is* the replica
-    refresh cost when the fabric snapshots into arena form.
+    refresh cost when the fabric snapshots into arena form. f32 leaves are
+    value-stored (bitwise the historical layout); other word-packable
+    dtypes are raw bit patterns via :func:`leaf_block_words`.
 
     ``out_sharding`` (a flat 1-D ``NamedSharding``) pins every part and
     the result; **required** when any input leaf is mesh-sharded — see
@@ -275,16 +477,24 @@ def pack_arena(values: PyTree, layout: ArenaLayout,
     part = layout.partition
     con = ((lambda v: jax.lax.with_sharding_constraint(v, out_sharding))
            if out_sharding is not None else (lambda v: v))
+    leaves = jax.tree_util.tree_leaves(values)
     parts = []
-    for x, leaf, seg, payload in zip(jax.tree_util.tree_leaves(values),
-                                     part.leaves, layout.seg_words,
-                                     layout.payload_words):
-        view = leaf_block_view(x.astype(jnp.float32), part.block_rows)
+    covered = 0
+    for li in layout.leaf_order:
+        x, leaf = leaves[li], part.leaves[li]
+        seg = layout.seg_words[li]
+        if _is_f32(leaf):
+            view = leaf_block_view(x.astype(jnp.float32), part.block_rows)
+        else:
+            view = jax.lax.bitcast_convert_type(
+                leaf_block_words(x, part.block_rows), jnp.float32)
         if view.shape[1] < seg:
             view = jnp.pad(view, ((0, 0), (0, seg - view.shape[1])))
         parts.append(con(view.reshape(-1)))
-    if layout.pad_words:
-        parts.append(con(jnp.zeros((layout.pad_words,), jnp.float32)))
+        covered += seg * leaf.n_blocks
+    if layout.total_words > covered:
+        parts.append(con(jnp.zeros((layout.total_words - covered,),
+                                   jnp.float32)))
     out = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
     return con(out)
 
@@ -295,10 +505,14 @@ def _decode_leaf(arena: jnp.ndarray, layout: ArenaLayout, li: int):
     seg, payload = layout.seg_words[li], layout.payload_words[li]
     off = layout.leaf_offset[li]
     flat = jax.lax.dynamic_slice(arena, (off,), (leaf.n_blocks * seg,))
-    vals = flat.reshape(leaf.n_blocks, seg)[:, :payload]
-    rows = max(leaf.rows, 1)
-    vals = vals.reshape(-1, max(leaf.row_width, 1))[:rows]
-    return vals.reshape(leaf.shape).astype(leaf.dtype)
+    view = flat.reshape(leaf.n_blocks, seg)
+    if _is_f32(leaf):
+        vals = view[:, :payload]
+        rows = max(leaf.rows, 1)
+        vals = vals.reshape(-1, max(leaf.row_width, 1))[:rows]
+        return vals.reshape(leaf.shape).astype(leaf.dtype)
+    bits = jax.lax.bitcast_convert_type(view[:, :payload], jnp.int32)
+    return decode_block_words(bits, leaf, layout.partition.block_rows)
 
 
 def unpack_arena(arena: jnp.ndarray, layout: ArenaLayout) -> PyTree:
@@ -306,6 +520,133 @@ def unpack_arena(arena: jnp.ndarray, layout: ArenaLayout) -> PyTree:
     out = [_decode_leaf(arena, layout, li)
            for li in range(len(layout.partition.leaves))]
     return jax.tree_util.tree_unflatten(layout.partition.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# value domain (the optimizer seam)
+# ---------------------------------------------------------------------------
+
+def pack_values(values: PyTree, layout: ArenaLayout,
+                out_sharding=None) -> jnp.ndarray:
+    """Pack a tree into the flat ``(total_values,)`` f32 value buffer —
+    the gradient/moment counterpart of :func:`pack_arena`. For an all-f32
+    layout this emits the *same program* as ``pack_arena`` (words are
+    values and ``seg_elems == seg_words``)."""
+    part = layout.partition
+    con = ((lambda v: jax.lax.with_sharding_constraint(v, out_sharding))
+           if out_sharding is not None else (lambda v: v))
+    leaves = jax.tree_util.tree_leaves(values)
+    parts = []
+    covered = 0
+    for li in layout.leaf_order:
+        x, leaf = leaves[li], part.leaves[li]
+        se = layout.seg_elems[li]
+        view = leaf_block_view(x.astype(jnp.float32), part.block_rows)
+        if view.shape[1] < se:
+            view = jnp.pad(view, ((0, 0), (0, se - view.shape[1])))
+        parts.append(con(view.reshape(-1)))
+        covered += se * leaf.n_blocks
+    if layout.total_values > covered:
+        parts.append(con(jnp.zeros((layout.total_values - covered,),
+                                   jnp.float32)))
+    out = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    return con(out)
+
+
+def decode_values(arena: jnp.ndarray, layout: ArenaLayout) -> jnp.ndarray:
+    """Word arena → ``(total_values,)`` f32 values, one slice + bitcast
+    per coalesced same-dtype run (identity for all-f32 layouts)."""
+    if layout.uniform_f32:
+        return arena
+    parts = []
+    for w0, nw, _v0, _nv, dt in layout.value_runs():
+        w = jax.lax.slice(arena, (w0,), (w0 + nw,))
+        if dt == np.dtype(np.float32):
+            parts.append(w)
+            continue
+        bits = jax.lax.bitcast_convert_type(w, jnp.int32)
+        e = bits if dt == np.dtype(np.int32) \
+            else jax.lax.bitcast_convert_type(bits, dt)
+        parts.append(e.astype(jnp.float32).reshape(-1))
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def encode_values(values: jnp.ndarray, layout: ArenaLayout) -> jnp.ndarray:
+    """Inverse of :func:`decode_values`: re-encode the f32 value buffer
+    into raw arena words (``astype`` to the stored dtype — the same
+    rounding the PyTree optimizer path applies — then bitcast)."""
+    if layout.uniform_f32:
+        return values
+    parts = []
+    for _w0, nw, v0, nv, dt in layout.value_runs():
+        v = jax.lax.slice(values, (v0,), (v0 + nv,))
+        if dt == np.dtype(np.float32):
+            parts.append(v)
+            continue
+        r = dtype_word_ratio(dt)
+        e = v.astype(dt)
+        bits = e if dt == np.dtype(np.int32) else (
+            jax.lax.bitcast_convert_type(e, jnp.int32) if r == 1
+            else jax.lax.bitcast_convert_type(e.reshape(nw, r), jnp.int32))
+        parts.append(jax.lax.bitcast_convert_type(bits, jnp.float32))
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def relayout_values(buf, old: ArenaLayout, new: ArenaLayout,
+                    out_sharding=None):
+    """Value-domain counterpart of :func:`relayout_arena` (optimizer
+    moments across a shard-count change): the region before the shard
+    pad is partition-determined, so this is a host slice + re-pad."""
+    d_old = old.total_values - old.pad_words
+    d_new = new.total_values - new.pad_words
+    if d_old != d_new:
+        raise ValueError("relayout_values: layouts disagree on the data "
+                         f"region ({d_old} vs {d_new} values) — not the "
+                         "same partition")
+    host = np.asarray(buf)
+    out = np.concatenate(
+        [host[:d_new], np.zeros((new.pad_words,), np.float32)])
+    return jax.device_put(out, out_sharding) if out_sharding is not None \
+        else jnp.asarray(out)
+
+
+def arena_drift_scores(live: jnp.ndarray, ref: jnp.ndarray,
+                       layout: ArenaLayout) -> jnp.ndarray:
+    """Per-gid squared drift ``||live_b − ref_b||²`` → (total_blocks,) f32,
+    decoding each word by its stored dtype.
+
+    Main-region tiles reduce per tile first (for an all-f32 layout this
+    is bit-identical to the historical tile scorer); tail-region words
+    reduce by ``word_gid`` directly, since tail tiles are shared. Pad
+    words diff two zero words → exact +0.0 (I4)."""
+    word_gid, word_code, dts = layout.word_tables()
+    wc = (live - ref) ** 2
+    for k, dt in enumerate(dts, start=1):
+        r = dtype_word_ratio(dt)
+        ex = jax.lax.bitcast_convert_type(
+            jax.lax.bitcast_convert_type(live, jnp.int32), dt)
+        er = jax.lax.bitcast_convert_type(
+            jax.lax.bitcast_convert_type(ref, jnp.int32), dt)
+        d = ex.astype(jnp.float32) - er.astype(jnp.float32)
+        dk = jnp.sum(d * d, axis=-1) if r > 1 else d * d
+        wc = jnp.where(jnp.asarray(word_code == k), dk, wc)
+    total = layout.partition.total_blocks
+    tile_gid = np.where(word_gid[::ARENA_TILE] >= 0,
+                        word_gid[::ARENA_TILE], 0)
+    partials = jnp.sum(wc.reshape(-1, ARENA_TILE), axis=1)
+    if layout.has_tail:
+        tt0 = layout.tail_start // ARENA_TILE
+        tt1 = layout.data_words // ARENA_TILE
+        mask = np.ones((layout.n_tiles,), bool)
+        mask[tt0:tt1] = False
+        partials = jnp.where(jnp.asarray(mask), partials, 0.0)
+    scores = jax.ops.segment_sum(partials, jnp.asarray(tile_gid),
+                                 num_segments=total)
+    if layout.has_tail:
+        lo, hi = layout.tail_start, layout.data_words
+        scores = scores + jax.ops.segment_sum(
+            wc[lo:hi], jnp.asarray(word_gid[lo:hi]), num_segments=total)
+    return scores
 
 
 def relayout_arena(arena, old: ArenaLayout, new: ArenaLayout,
@@ -378,9 +719,10 @@ def frames_gather_index(layout: ArenaLayout, frame_layout) -> np.ndarray:
     """(total_blocks, frame_elems) arena word index per frame position
     (-1 where the frame is zero padding) — ``frames_from_arena``'s map.
 
-    Valid because the arena's per-leaf columns match the (tile-aligned)
-    ``FrameLayout`` columns: frame row ``gid`` is the side-by-side concat
-    of every colocated leaf's segment for that gid."""
+    Valid because the arena's per-leaf columns match the ``FrameLayout``
+    word columns: frame row ``gid`` is the side-by-side concat of every
+    colocated leaf's segment for that gid. Word-granular, so tail-packed
+    (unaligned) blocks index straight in."""
     part = layout.partition
     idx = np.full((part.total_blocks, frame_layout.frame_elems), -1,
                   np.int64)

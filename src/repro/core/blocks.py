@@ -130,6 +130,85 @@ def leaf_frame_width(leaf: LeafMeta, block_rows: int) -> int:
     return block_rows * leaf.row_width
 
 
+def word_packable(dtype) -> bool:
+    """True when ``dtype`` values are stored in arena/frame words as raw
+    bit patterns: 1/2/4-byte ints and floats (f32, bf16, f16, the fp8
+    family, int8/16/32, uint8/16/32). Everything else (f64, int64,
+    complex, bool) falls back to the legacy f32-image convention — one
+    word per element, value cast through float32."""
+    dt = np.dtype(dtype)
+    # ml_dtypes types (bfloat16, the fp8 family) register as numpy kind
+    # 'V' (void) but are plain fixed-width bit patterns like any other
+    # int/float, so admit them alongside the native f/i/u kinds. True
+    # void/structured dtypes never appear as pytree leaves here.
+    return dt.kind in "fiuV" and dt.itemsize in (1, 2, 4)
+
+
+def dtype_word_ratio(dtype) -> int:
+    """Elements per 32-bit word: 1 (f32/i32), 2 (bf16/f16/i16), 4
+    (fp8/i8). Non-word-packable dtypes use the f32-image convention, so
+    one element per word."""
+    dt = np.dtype(dtype)
+    return 4 // dt.itemsize if word_packable(dt) else 1
+
+
+def leaf_word_width(leaf: LeafMeta, block_rows: int) -> int:
+    """Payload 32-bit *words* per block of this leaf: its
+    :func:`leaf_frame_width` elements bit-packed ``dtype_word_ratio``
+    per word (sub-word tail padded with zero bits)."""
+    r = dtype_word_ratio(leaf.dtype)
+    return -(-leaf_frame_width(leaf, block_rows) // r)
+
+
+def leaf_block_words(x: jnp.ndarray, block_rows: int) -> jnp.ndarray:
+    """(n_blocks, payload_words) int32 raw bit pattern of a leaf's blocks.
+
+    Word-packable dtypes pack ``dtype_word_ratio`` consecutive elements
+    per word, element 0 in the low-order bytes — the same packing as a
+    numpy ``.view(int32)`` on little-endian hosts (property-tested in
+    ``tests/test_quant_arena.py``). Other dtypes store one f32 image per
+    word, the historical frames convention.
+    """
+    r = dtype_word_ratio(x.dtype)
+    if not word_packable(x.dtype):
+        x = x.astype(jnp.float32)
+    view = leaf_block_view(x, block_rows)
+    if r == 1:
+        if view.dtype == jnp.int32:
+            return view
+        return jax.lax.bitcast_convert_type(view, jnp.int32)
+    words = -(-view.shape[1] // r)
+    tail = words * r - view.shape[1]
+    if tail:
+        view = jnp.pad(view, ((0, 0), (0, tail)))
+    return jax.lax.bitcast_convert_type(
+        view.reshape(view.shape[0], words, r), jnp.int32)
+
+
+def decode_block_words(words: jnp.ndarray, leaf: LeafMeta,
+                       block_rows: int) -> jnp.ndarray:
+    """Inverse of :func:`leaf_block_words`: ``(n_blocks, >= payload_words)``
+    int32 words back to the leaf-shaped array — bit-exact for
+    word-packable dtypes, a value cast through f32 otherwise."""
+    dt = np.dtype(leaf.dtype)
+    elems = leaf_frame_width(leaf, block_rows)
+    r = dtype_word_ratio(dt)
+    pw = -(-elems // r)
+    words = words[:, :pw]
+    if not word_packable(dt):
+        vals = jax.lax.bitcast_convert_type(words, jnp.float32)
+    elif dt == np.dtype(np.int32):
+        vals = words
+    else:
+        vals = jax.lax.bitcast_convert_type(words, dt)
+        if r > 1:
+            vals = vals.reshape(words.shape[0], pw * r)
+    vals = vals[:, :elems]
+    rows = max(leaf.rows, 1)
+    vals = vals.reshape(-1, max(leaf.row_width, 1))[:rows]
+    return vals.reshape(leaf.shape).astype(leaf.dtype)
+
+
 def leaf_block_view(x: jnp.ndarray, block_rows: int) -> jnp.ndarray:
     """Reshape a leaf to (n_blocks, elems_per_block), zero-padded.
 

@@ -468,15 +468,15 @@ class FTController:
         — the PRIORITY fallback when this step's maintenance sweep didn't
         already cache the scores."""
         if self._arena_score_jit is None:
-            from repro.core.arena import ARENA_TILE, pack_arena
+            from repro.core.arena import arena_drift_scores, pack_arena
             layout = self._arena_layout
-            tile_gid = jnp.asarray(layout.tile_gids())
-            total = self.partition.total_blocks
 
             def _tile_scores(rep, z):
-                d = rep.reshape(-1, ARENA_TILE) - z.reshape(-1, ARENA_TILE)
-                return jax.ops.segment_sum(jnp.sum(d * d, axis=1),
-                                           tile_gid, num_segments=total)
+                # dtype-aware word scorer: decodes each word by its
+                # stored dtype and handles word-packed tail blocks —
+                # bit-identical to the historical f32 tile diff +
+                # segment-sum on an all-f32 tail-free layout
+                return arena_drift_scores(rep, z, layout)
 
             self._arena_score_jit = jax.jit(
                 lambda p, z: _tile_scores(pack_arena(p, layout), z))

@@ -96,17 +96,25 @@ class CheckpointFabric:
         # flat parameter arena: the canonical hot-path representation —
         # requires the single-sweep pipeline (``fused=False`` is the seed
         # baseline), both tiers (the sweep's pack is the replica write,
-        # its XOR routing needs the parity striping), and
-        # f32-round-trippable leaf dtypes; otherwise fall back to the
-        # per-leaf fused path. With a ``mesh`` the layout is built with
-        # one tile-aligned shard per device (``shards=mesh size``) so
-        # every device owns a contiguous span and the sweep runs
-        # shard-local (see arena.py "Sharded form").
+        # its XOR routing needs the parity striping), and word-packable
+        # leaf dtypes (f32/bf16/f16/fp8/int8… stored as raw bit patterns;
+        # only f64/int64/complex/bool gate — they fall back to the
+        # per-leaf fused path with a warn+event upstream). With a
+        # ``mesh`` the layout is built with one tile-aligned shard per
+        # device (``shards=mesh size``) so every device owns a contiguous
+        # span and the sweep runs shard-local (see arena.py "Sharded
+        # form"); the meshed fabric additionally requires an all-f32
+        # model for now — a quantized layout's value domain is not
+        # tile-divisible, so the flat optimizer sharding would not line
+        # up with the word shards.
         self.arena_layout = None
         if self.cfg.arena and self.cfg.fused and self.cfg.replicate \
                 and self.cfg.parity:
             from repro.core.arena import arena_compatible, build_arena_layout
-            if arena_compatible(partition):
+            uniform_f32 = all(np.dtype(l.dtype) == np.dtype(np.float32)
+                              for l in partition.leaves)
+            if arena_compatible(partition) \
+                    and (mesh is None or uniform_f32):
                 shards = 1
                 if mesh is not None:
                     shards = int(np.asarray(mesh.devices).size)
@@ -133,8 +141,9 @@ class CheckpointFabric:
             if self.arena_layout is None:
                 raise ValueError(
                     "a meshed fabric needs the sharded arena pipeline "
-                    "(arena=True, fused=True, both tiers, arena-compatible "
-                    "dtypes) — there is no sharded per-leaf fallback")
+                    "(arena=True, fused=True, both tiers, and an all-f32 "
+                    "model — quantized dtypes are single-host-arena only "
+                    "for now) — there is no sharded per-leaf fallback")
             self._bind_mesh(mesh, np.arange(n, dtype=np.int32))
         if homes is not None:
             initial = np.asarray(homes, np.int32)
@@ -216,7 +225,14 @@ class CheckpointFabric:
             "ici_bytes_moved": 0, "dcn_bytes_moved": 0,
             "mesh_resizes": 0, "tier_fallbacks": 0,
             "rs_arena_encodes": 0, "scrubs": 0,
-            "silent_errors_detected": 0, "silent_errors_corrected": 0})
+            "silent_errors_detected": 0, "silent_errors_corrected": 0,
+            "arena_padding_ratio": 0.0})
+        if self.arena_layout is not None:
+            # gauge, not a counter: pad words / payload words of the live
+            # layout — the number tail packing shrinks (run-report +
+            # maint_arena_padding bench read it from here)
+            self.stats["arena_padding_ratio"] = float(
+                self.arena_layout.padding_ratio)
         if self.recorder.enabled:
             self.recorder.adopt_histogram("fabric/fence_seconds",
                                           self.fence_hist)
@@ -1082,6 +1098,7 @@ class CheckpointFabric:
             self._arena_maintain(at, params, None)
             self.last_maintained_step = at
         self.stats["mesh_resizes"] += 1
+        self.stats["arena_padding_ratio"] = float(new_layout.padding_ratio)
         if self.recorder.enabled:
             self.recorder.event(
                 "mesh_resize", step=at, shards=new_layout.shards,

@@ -16,10 +16,13 @@ parameter update since encode) is unusable — the XOR would mix bit patterns
 from different iterations into garbage — so the tier planner gates on
 freshness.
 
-Block frames: each block's payload is packed as the float32 bit pattern of
-its rows, one fixed-width int32 row per global block id (zero-padded —
-zeros are XOR-neutral). Colocated leaves (shared block ids) concatenate
-side by side within the frame.
+Block frames: each block's payload is bit-packed into 32-bit words
+(``dtype_word_ratio`` elements per word — raw bf16/fp8/int8 bits, not f32
+images, so frame bytes scale with the stored precision), one fixed-width
+int32 row per global block id (zero-padded — zeros are XOR-neutral).
+Colocated leaves (shared block ids) concatenate side by side within the
+frame. Non-word-packable dtypes (f64/int64/…) keep the historical
+one-f32-image-per-element convention.
 """
 from __future__ import annotations
 
@@ -30,8 +33,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blocks import (BlockPartition, LeafMeta, expand_block_mask,
-                               leaf_block_view, leaf_frame_width)
+from repro.core.blocks import (BlockPartition, LeafMeta,  # noqa: F401
+                               decode_block_words, expand_block_mask,
+                               leaf_block_words, leaf_word_width)
 from repro.fabric.placement import (ClusterView, effective_parity_group,
                                     parity_group_homes, stripe_parity_groups)
 from repro.kernels.parity_xor.ops import parity_encode, parity_reconstruct
@@ -44,8 +48,10 @@ PyTree = Any
 # ---------------------------------------------------------------------------
 
 # canonical definition lives with the block partition (the arena shares
-# it); kept under the old name for in-package callers
-_leaf_frame_width = leaf_frame_width
+# it); kept under the old name for in-package callers. Since the
+# word-level arena this is the payload *word* count per block (elements
+# bit-packed ``dtype_word_ratio`` per word), not the element count.
+_leaf_frame_width = leaf_word_width
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,13 +83,12 @@ def frame_layout(partition: BlockPartition) -> FrameLayout:
 
 def pack_frames(values: PyTree, partition: BlockPartition,
                 layout: FrameLayout) -> jnp.ndarray:
-    """(total_blocks, frame_elems) int32 — float32 bit patterns, 0-padded."""
+    """(total_blocks, frame_elems) int32 — raw bit-packed words, 0-padded."""
     out = jnp.zeros((partition.total_blocks, layout.frame_elems), jnp.int32)
     flat = jax.tree_util.tree_leaves(values)
     for x, leaf, col, w in zip(flat, partition.leaves, layout.cols,
                                layout.widths):
-        view = leaf_block_view(x.astype(jnp.float32), partition.block_rows)
-        bits = jax.lax.bitcast_convert_type(view, jnp.int32)
+        bits = leaf_block_words(x, partition.block_rows)
         out = out.at[leaf.offset:leaf.offset + leaf.n_blocks,
                      col:col + w].set(bits)
     return out
@@ -105,10 +110,8 @@ def unpack_frames_into(dst: PyTree, frames_by_block: jnp.ndarray,
             continue
         bits = frames_by_block[leaf.offset:leaf.offset + leaf.n_blocks,
                                col:col + w]
-        vals = jax.lax.bitcast_convert_type(bits, jnp.float32)
-        rows = max(leaf.rows, 1)
-        decoded = vals.reshape(-1, max(leaf.row_width, 1))[:rows]
-        decoded = decoded.reshape(leaf.shape).astype(x.dtype)
+        decoded = decode_block_words(bits, leaf,
+                                     partition.block_rows).astype(x.dtype)
         em = expand_block_mask(jnp.asarray(seg), leaf, partition.block_rows)
         out.append(jnp.where(em, decoded, x))
     return jax.tree_util.tree_unflatten(partition.treedef, out)

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blocks import BlockPartition, leaf_block_view
+from repro.core.blocks import (BlockPartition, leaf_block_view,
+                               leaf_block_words)
 from repro.fabric.parity import FrameLayout
 from repro.kernels.fused_maintain.kernel import (fused_maintain_pallas,
                                                  scatter_save_pallas)
@@ -97,11 +98,13 @@ def _leaf_sweep_pallas(x, z, meta: LeafGroupMeta, block_rows: int,
 
 def _leaf_sweep_jnp(x, z, meta: LeafGroupMeta, block_rows: int):
     """jnp fast path: same outputs, one compact gather+fold per leaf —
-    never the (total_blocks, frame_width) packed buffer of the seed path."""
+    never the (total_blocks, frame_width) packed buffer of the seed path.
+    Scores diff f32 views of the values (what ``block_scores`` does);
+    the parity contribution is the leaf's raw bit-packed words."""
     xv = leaf_block_view(x.astype(jnp.float32), block_rows)
     zv = leaf_block_view(z.astype(jnp.float32), block_rows)
     scores = jnp.sum((xv - zv) ** 2, axis=1)
-    bits = jax.lax.bitcast_convert_type(xv, jnp.int32)
+    bits = leaf_block_words(x, block_rows)
     idx = jnp.asarray(meta.members)
     valid = idx >= 0
     gathered = bits[jnp.where(valid, idx, 0)]        # (n_out, m_hat, E)
@@ -139,7 +142,10 @@ def make_fused_maintain_fn(partition: BlockPartition, layout: FrameLayout,
         parity = jnp.zeros((n_groups, layout.frame_elems), jnp.int32)
         replicas = []
         for x, z, leaf, meta in zip(flat, zflat, partition.leaves, metas):
-            if use_pallas:
+            # the Pallas leaf kernel is an element-width f32 program; for
+            # word-packed dtypes (bf16/fp8/int8 — element count != word
+            # count) the jnp word path computes the same outputs
+            if use_pallas and np.dtype(leaf.dtype) == np.dtype(np.float32):
                 rep_v, sc, contrib = _leaf_sweep_pallas(x, z, meta, br,
                                                         interpret)
                 rows = max(leaf.rows, 1)
@@ -187,20 +193,30 @@ def arena_routing(arena_layout, frame_layout: FrameLayout,
     because the frame layout is arena-tile aligned. Sorting tiles by
     destination makes every parity output tile's contributors consecutive
     grid steps (seed on ``first``, XOR-fold after), exactly the per-leaf
-    kernel's revisit accumulation but across the entire model at once."""
+    kernel's revisit accumulation but across the entire model at once.
+
+    Tail-packed blocks (word-granular, tile-sharing) are *not* routed
+    here — :class:`ArenaMaintainProgram` XOR-folds their payload words
+    into the parity with a word-granular epilogue."""
     from repro.core.arena import ARENA_TILE
     group_of = np.asarray(group_of, np.int32)
     n_tiles = arena_layout.n_tiles
     ftiles = frame_layout.frame_elems // ARENA_TILE
+    tail_start = getattr(arena_layout, "tail_start", -1)
+    if tail_start < 0:
+        tail_start = arena_layout.total_words
     # shard-pad tail tiles (sharded layouts only) carry no payload: they
     # route to no parity destination (dest -1, dropped from the perm) and
     # report gid 0 — zero words diffed against zero words add an exact
-    # +0.0 to gid 0's score, so the score path can stay full-length
+    # +0.0 to gid 0's score, so the score path can stay full-length.
+    # Tail-region tiles are likewise unrouted (word epilogue).
     dest_full = np.full((n_tiles,), -1, np.int64)
     tile_gid = np.zeros((n_tiles,), np.int32)
     for ab in arena_layout.blocks:
         g = group_of[ab.gid]
         assert g >= 0, f"arena block gid={ab.gid} outside any parity group"
+        if ab.offset >= tail_start:
+            continue
         t0 = ab.offset // ARENA_TILE
         nt = ab.words // ARENA_TILE
         col_t = frame_layout.cols[ab.leaf] // ARENA_TILE
@@ -214,7 +230,7 @@ def arena_routing(arena_layout, frame_layout: FrameLayout,
     dest = inverse.astype(np.int32)
     first = np.ones_like(dest)
     first[1:] = (dest[1:] != dest[:-1]).astype(np.int32)
-    m_hat = int(np.bincount(dest).max())
+    m_hat = int(np.bincount(dest).max()) if dest.size else 0
     members = np.full((touched.size, m_hat), -1, np.int32)
     fill = np.zeros((touched.size,), np.int64)
     for pos, row in zip(perm, dest):
@@ -239,8 +255,18 @@ class ArenaMaintainProgram:
     Returns ``(replica_arena, scores, parity)`` — parity bit-identical
     to :meth:`ParityCodec.encode` under the same striping, scores
     allclose to :func:`repro.core.blocks.block_scores` (different
-    association order). With ``ckpt_arena=None`` the sweep still
-    refreshes replica + parity; scores are zeros (nothing to diff).
+    association order; per-dtype word decode for quantized leaves).
+    With ``ckpt_arena=None`` the sweep still refreshes replica +
+    parity; scores are zeros (nothing to diff).
+
+    Tail-packed blocks are swept by a word-granular epilogue: their
+    payload words gather by flat parity position and XOR *into* the
+    tile-scattered parity (a position can receive both a main tile and
+    tail words — different gids of one group own different leaves'
+    overlapping columns). The compiled Pallas arena kernel is an
+    aligned-tile f32 program, so it only engages on uniform-f32 layouts
+    without a tail region; everything else runs the (identical-output)
+    jnp sweep.
 
     ``params`` may also be the live flat arena itself (arena-resident
     training state): the pack disappears entirely and the sweep is the
@@ -252,11 +278,18 @@ class ArenaMaintainProgram:
                  frame_layout: FrameLayout, group_of: np.ndarray,
                  n_groups: int, use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None, out_sharding=None):
-        from repro.core.arena import ARENA_TILE, pack_arena
+        from repro.core.arena import (ARENA_TILE, arena_drift_scores,
+                                      pack_arena)
         if use_pallas is None:
             use_pallas = _is_tpu()
         if interpret is None:
             interpret = not _is_tpu()
+        # the compiled arena kernel assumes words == f32 values on
+        # exclusively owned aligned tiles; quantized or tail-packed
+        # layouts run the jnp word sweep (same outputs) instead
+        pallas_eligible = (arena_layout.uniform_f32
+                           and not arena_layout.has_tail)
+        use_pallas = bool(use_pallas and pallas_eligible)
         self.layout = arena_layout
         self.routing = arena_routing(arena_layout, frame_layout, group_of)
         r = self.routing
@@ -270,8 +303,38 @@ class ArenaMaintainProgram:
         touched = jnp.asarray(r.touched)
         members = jnp.asarray(np.where(r.members >= 0, r.members, 0))
         valid = jnp.asarray(r.members >= 0)
-        gid_nat = jnp.asarray(r.tile_gid)
         gid_sorted = jnp.asarray(r.tile_gid[r.perm])
+
+        # tail-packed blocks: word-granular parity routing. Every tail
+        # payload word has one flat parity position group·frame_elems +
+        # col + j; positions shared across gids (overlapping columns of
+        # different leaves in one group) gather all their contributor
+        # words and XOR-fold.
+        tail_pos = tail_members = tail_valid = None
+        if arena_layout.has_tail:
+            gof = np.asarray(group_of, np.int64)
+            pos_l, wid_l = [], []
+            for ab in arena_layout.blocks:
+                if ab.offset < arena_layout.tail_start:
+                    continue
+                base = (gof[ab.gid] * frame_elems
+                        + frame_layout.cols[ab.leaf])
+                pos_l.append(base + np.arange(ab.payload))
+                wid_l.append(np.arange(ab.offset, ab.offset + ab.payload))
+            pos = np.concatenate(pos_l)
+            wid = np.concatenate(wid_l)
+            upos, inv = np.unique(pos, return_inverse=True)
+            m_hat = int(np.bincount(inv).max())
+            tmem = np.zeros((upos.size, m_hat), np.int64)
+            tval = np.zeros((upos.size, m_hat), bool)
+            fill = np.zeros((upos.size,), np.int64)
+            for w, row in zip(wid, inv):
+                tmem[row, fill[row]] = w
+                tval[row, fill[row]] = True
+                fill[row] += 1
+            tail_pos = jnp.asarray(upos)
+            tail_members = jnp.asarray(tmem)
+            tail_valid = jnp.asarray(tval)
 
         def _sweep(rep, z_arena):
             if use_pallas:
@@ -280,23 +343,31 @@ class ArenaMaintainProgram:
                 sc, par = arena_maintain_pallas(
                     rep.reshape(-1, 128), z_arena.reshape(-1, 128),
                     perm, dest, first, n_dest, interpret=interpret)
-                partials, seg_ids = sc[:, 0], gid_sorted
+                scores = jax.ops.segment_sum(sc[:, 0], gid_sorted,
+                                             num_segments=total)
                 par_c = par.reshape(n_dest, ARENA_TILE)
             else:
-                xt = rep.reshape(-1, ARENA_TILE)
-                d = xt - z_arena.reshape(-1, ARENA_TILE)
-                partials, seg_ids = jnp.sum(d * d, axis=1), gid_nat
-                bits = jax.lax.bitcast_convert_type(xt, jnp.int32)
+                # per-dtype word scorer: bit-identical to the historical
+                # tile scorer on all-f32 main regions, word-gid reduction
+                # over the (shared-tile) tail region
+                scores = arena_drift_scores(rep, z_arena, arena_layout)
+                bits = jax.lax.bitcast_convert_type(
+                    rep.reshape(-1, ARENA_TILE), jnp.int32)
                 gathered = bits[members]          # (n_dest, m_hat, TILE)
                 par_c = jax.lax.reduce(
                     jnp.where(valid[..., None], gathered, 0),
                     jnp.int32(0), jax.lax.bitwise_xor, (1,))
-            scores = jax.ops.segment_sum(partials, seg_ids,
-                                         num_segments=total)
             full = jnp.zeros((full_tiles, ARENA_TILE), jnp.int32)
-            parity = full.at[touched].set(par_c).reshape(n_groups,
-                                                         frame_elems)
-            return scores, parity
+            parity = full.at[touched].set(par_c).reshape(n_groups * r.frame_tiles * ARENA_TILE)
+            if tail_pos is not None:
+                wbits = jax.lax.bitcast_convert_type(rep, jnp.int32)
+                fold = jax.lax.reduce(
+                    jnp.where(tail_valid, wbits[tail_members], 0),
+                    jnp.int32(0), jax.lax.bitwise_xor, (1,))
+                # XOR into (not over) the tile parity: a flat position
+                # can hold a main tile's words AND tail contributions
+                parity = parity.at[tail_pos].set(parity[tail_pos] ^ fold)
+            return scores, parity.reshape(n_groups, frame_elems)
 
         # ``out_sharding`` (SPMD meshes) pins the internal pack to the
         # flat arena sharding — both the layout the sweep wants and the
@@ -374,25 +445,32 @@ class ArenaMaintainProgram:
 _ARENA_SCATTER_CACHE: dict = {}
 
 
-def _arena_scatter_fn(total_words: int, k_hat: int, use_pallas: bool,
-                      interpret: bool):
+def _arena_scatter_fn(total_words: int, k_hat: int, w_hat: int,
+                      use_pallas: bool, interpret: bool):
     from repro.core.arena import ARENA_TILE
-    key = (total_words, k_hat, use_pallas, interpret)
+    key = (total_words, k_hat, w_hat, use_pallas, interpret)
     fn = _ARENA_SCATTER_CACHE.get(key)
     if fn is not None:
         return fn
 
-    def _scatter(dst, src, tiles):
-        if use_pallas:
-            from repro.kernels.fused_maintain.kernel import \
-                arena_scatter_pallas
-            out = arena_scatter_pallas(dst.reshape(-1, 128),
-                                       src.reshape(-1, 128), tiles,
-                                       interpret=interpret)
-        else:
-            d = dst.reshape(-1, ARENA_TILE)
-            out = d.at[tiles].set(src.reshape(-1, ARENA_TILE)[tiles])
-        return out.reshape(total_words)
+    def _scatter(dst, src, tiles, widx):
+        out = dst
+        if k_hat:
+            if use_pallas:
+                from repro.kernels.fused_maintain.kernel import \
+                    arena_scatter_pallas
+                out = arena_scatter_pallas(out.reshape(-1, 128),
+                                           src.reshape(-1, 128), tiles,
+                                           interpret=interpret)
+            else:
+                d = out.reshape(-1, ARENA_TILE)
+                out = d.at[tiles].set(src.reshape(-1, ARENA_TILE)[tiles])
+            out = out.reshape(total_words)
+        if w_hat:
+            # tail-packed blocks share tiles, so their save granularity
+            # is the payload word (duplicate pad indices are idempotent)
+            out = out.at[widx].set(src[widx])
+        return out
 
     fn = jax.jit(_scatter, donate_argnums=(0,))
     _ARENA_SCATTER_CACHE[key] = fn
@@ -408,6 +486,11 @@ def arena_scatter_save(dst_arena: jnp.ndarray, src_arena: jnp.ndarray,
     from ``src_arena`` in place — one donated dispatch total, O(k·seg)
     bytes, vs ``tree_scatter_save``'s one dispatch per touched leaf.
 
+    Main-region blocks move as whole tiles (the Pallas/jnp tile
+    scatter); tail-packed blocks move their payload words only — a tile
+    copy would clobber unselected tile-mates. Bytes moved therefore
+    match :meth:`ArenaLayout.seg_bytes_for_blocks` exactly.
+
     ``global_idx``: host-resident selected global block ids (colocated
     leaves' segments ride along — they share gids). Returns
     ``(updated_arena, bytes_moved)``; ``dst_arena`` is donated."""
@@ -415,17 +498,46 @@ def arena_scatter_save(dst_arena: jnp.ndarray, src_arena: jnp.ndarray,
         use_pallas = _is_tpu()
     if interpret is None:
         interpret = not _is_tpu()
-    tiles = arena_layout.tiles_for_blocks(global_idx)
-    if tiles.size == 0:
+    main, tail = arena_layout.split_tail_blocks(global_idx)
+    tiles = np.empty((0,), np.int32)
+    if main.size:
+        t0, nt = arena_layout.ab_t0[main], arena_layout.ab_nt[main]
+        starts = np.cumsum(nt) - nt
+        tiles = np.unique(np.repeat(t0, nt) + (np.arange(int(nt.sum()))
+                          - np.repeat(starts, nt))).astype(np.int32)
+    widx = (np.concatenate(
+        [np.arange(arena_layout.blocks[i].offset,
+                   arena_layout.blocks[i].offset
+                   + arena_layout.blocks[i].payload) for i in tail])
+        if tail.size else np.empty((0,), np.int64))
+    if tiles.size == 0 and widx.size == 0:
         return dst_arena, 0
-    k_hat = _bucket(tiles.size, arena_layout.n_tiles)
-    padded = np.full((k_hat,), tiles[0], np.int32)
-    padded[:tiles.size] = tiles
-    fn = _arena_scatter_fn(int(arena_layout.total_words), k_hat,
+    k_hat = _bucket(tiles.size, arena_layout.n_tiles) if tiles.size else 0
+    tiles_p = np.full((max(k_hat, 1),), tiles[0] if tiles.size else 0,
+                      np.int32)
+    tiles_p[:tiles.size] = tiles
+    # w_hat is a *layout constant* — the whole tail region, bucketed —
+    # not the selection's tail word count: a per-save w_hat crosses with
+    # k_hat into a fresh jit key almost every save (ROUND_ROBIN windows
+    # shift across rotations) and recompiles in the save hot loop. Pad
+    # slots repeat a word this save writes anyway (first selected
+    # block's first payload word), so the duplicates are idempotent;
+    # the tail region is sub-tile-scale by construction, so the extra
+    # scatter lanes are noise.
+    tail_words = (arena_layout.tail_end - arena_layout.tail_start
+                  if arena_layout.has_tail else 0)
+    w_hat = (_bucket(tail_words, arena_layout.total_words)
+             if tail_words else 0)
+    pad_src = tail if tail.size else main
+    pad_word = int(arena_layout.blocks[int(pad_src[0])].offset)
+    widx_p = np.full((max(w_hat, 1),), pad_word, np.int64)
+    widx_p[:widx.size] = widx
+    fn = _arena_scatter_fn(int(arena_layout.total_words), k_hat, w_hat,
                            use_pallas, interpret)
-    out = fn(dst_arena, src_arena, jnp.asarray(padded))
+    out = fn(dst_arena, src_arena, jnp.asarray(tiles_p),
+             jnp.asarray(widx_p))
     from repro.core.arena import ARENA_TILE
-    return out, int(tiles.size) * ARENA_TILE * 4
+    return out, int(tiles.size) * ARENA_TILE * 4 + int(widx.size) * 4
 
 
 # ---------------------------------------------------------------------------
@@ -567,9 +679,15 @@ def maintain_traffic(partition: BlockPartition, layout: FrameLayout,
         from repro.core.arena import ARENA_TILE
         a = arena_layout.nbytes
         r = arena_routing(arena_layout, layout, group_of)
-        compact = int(r.touched.size) * ARENA_TILE * 4
+        tail_words = sum(ab.payload for ab in arena_layout.blocks
+                         if ab.offset >= arena_layout.tail_start) \
+            if arena_layout.has_tail else 0
+        compact = int(r.touched.size) * ARENA_TILE * 4 + tail_words * 4
         partials = arena_layout.n_tiles * 4
         out["arena_bytes"] = int(a)
+        # pad words / live payload words: the alignment overhead tail
+        # packing removes — a gauge, not a byte count
+        out["padding_ratio"] = float(arena_layout.padding_ratio)
         out["staging_arena"] = int(compact + partials)
         out["arena"] = int(
             model + a                # pack: read live, write snapshot

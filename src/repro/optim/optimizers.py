@@ -9,11 +9,20 @@ moments are fp32 regardless of param dtype (TPU practice).
 **Arena-native apply**: every optimizer here is elementwise, so the same
 ``update`` applies unchanged to the flat parameter arena
 (:mod:`repro.core.arena`) — the arena is a one-leaf pytree and the moment
-buffers become flat mirrors of it. :func:`arena_apply` wraps that call
-with the one step the flat form can't express on its own: the per-leaf
-dtype round trip (the arena stores the f32 *image* of the leaf-dtype
-value, so non-f32 segments must pass through their dtype after the f32
-update, exactly like the tree path's ``.astype(p.dtype)``).
+buffers become flat mirrors of it in the f32 *value* domain
+(``(total_values,)``, master moments stay f32 whatever the stored
+precision). :func:`arena_apply` wraps that call with the one step the
+flat form can't express on its own: the dtype round trip. The word
+arena stores raw leaf-dtype bit patterns, so the step is decode → f32
+update → re-encode, one slice/bitcast per *coalesced same-dtype run*
+(``layout.value_runs()``), never per segment. For an all-f32 layout the
+decode/encode are the identity and the whole thing collapses to a bare
+``optimizer.update`` on the arena — bit-identical to the historical f32
+value-arena apply and to the per-leaf tree apply. Mixed-precision
+layouts match the tree path's ``.astype(p.dtype)`` rounding exactly on
+stored params; moments differ from the tree path only where the tree
+path would also have quantized them (we keep them f32 — strictly less
+perturbation, covered by the paper's Thm 3.2 self-correction class).
 """
 from __future__ import annotations
 
@@ -23,7 +32,6 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 PyTree = Any
 
@@ -129,26 +137,27 @@ def _adam_like(lr, b1, b2, eps, wd, name, moment_dtype=jnp.float32) -> Optimizer
 
 def arena_apply(optimizer: Optimizer, grads: jnp.ndarray, state: OptState,
                 arena: jnp.ndarray, layout) -> tuple[jnp.ndarray, OptState]:
-    """One optimizer step over the flat parameter arena.
+    """One optimizer step over the flat word arena.
 
-    ``arena``/``grads`` are ``(total_words,)`` f32 buffers laid out by
-    ``layout`` (:class:`repro.core.arena.ArenaLayout`); ``state``'s moment
-    buffers are flat mirrors (``optimizer.init(arena)``). The update is
-    the optimizer's own elementwise math — bit-identical to the per-leaf
-    tree apply — followed by a dtype round trip on non-f32 leaves'
-    segments so the arena keeps holding the f32 image of the leaf-dtype
-    value (pack convention, invariant I3). Pad words stay zero: zero
-    grads give zero moments and a zero step, and weight decay of 0 is 0
-    (invariant I4), so no masking pass is needed.
+    ``arena`` is the ``(total_words,)`` word buffer laid out by ``layout``
+    (:class:`repro.core.arena.ArenaLayout`); ``grads`` and ``state``'s
+    moment buffers live in the f32 value domain (``(total_values,)``,
+    ``optimizer.init`` on a value-shaped zeros buffer). The step decodes
+    the arena to values — one slice + bitcast per coalesced same-dtype
+    run, not per segment — runs the optimizer's own elementwise math
+    (bit-identical to the per-leaf tree apply), and re-encodes through
+    each run's stored dtype (the same ``.astype(p.dtype)`` rounding the
+    tree path applies). For all-f32 layouts values *are* words, both
+    casts vanish, and the update runs directly on the arena. Pad words
+    stay zero either way: zero grads give zero moments and a zero step,
+    weight decay of 0 is 0 (invariant I4), and sub-word element pads
+    decode to 0.0 and re-encode to zero bits, so no masking pass is
+    needed.
     """
-    new_arena, new_state = optimizer.update(grads, state, arena)
-    f32 = np.dtype(np.float32)
-    for li, leaf in enumerate(layout.partition.leaves):
-        if np.dtype(leaf.dtype) == f32:
-            continue
-        off = layout.leaf_offset[li]
-        n = layout.seg_words[li] * leaf.n_blocks
-        seg = jax.lax.dynamic_slice(new_arena, (off,), (n,))
-        seg = seg.astype(leaf.dtype).astype(jnp.float32)
-        new_arena = jax.lax.dynamic_update_slice(new_arena, seg, (off,))
-    return new_arena, new_state
+    from repro.core.arena import decode_values, encode_values
+
+    if layout.uniform_f32:
+        return optimizer.update(grads, state, arena)
+    values = decode_values(arena, layout)
+    new_values, new_state = optimizer.update(grads, state, values)
+    return encode_values(new_values, layout), new_state

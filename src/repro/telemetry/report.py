@@ -54,10 +54,17 @@ def _bytes_breakdown(rec: Any) -> dict:
     compacted = sum(int(ev.get("reclaimed") or 0)
                     for ev in (getattr(rec, "events", []) or [])
                     if ev.get("kind") == "compact")
+    # arena_padding_ratio is a gauge, not a counter: take the max across
+    # fabric scope instances rather than summing (one fabric in practice)
+    padding = max((float(v.get("arena_padding_ratio", 0.0))
+                   for name, v in scopes.items()
+                   if name == "fabric" or name.startswith("fabric#")),
+                  default=0.0)
     return {"maintain": _get("fabric", "maintain_bytes_moved"),
             "save": _get("controller", "save_bytes_moved"),
             "mirrored": _get("controller", "bytes_mirrored"),
-            "compact_reclaimed": compacted}
+            "compact_reclaimed": compacted,
+            "arena_padding_ratio": padding}
 
 
 def _interconnect(rec: Any) -> dict:
@@ -160,6 +167,10 @@ def format_report(report: dict) -> str:
     lines.append(f"bytes moved: maintain={b['maintain']:,} "
                  f"save={b['save']:,} mirrored={b['mirrored']:,} "
                  f"compact_reclaimed={b['compact_reclaimed']:,}")
+    if b.get("arena_padding_ratio"):
+        lines.append(
+            f"arena padding ratio: {b['arena_padding_ratio']:.4f} "
+            "(pad words / payload words, tail-packed layout)")
 
     ic = report.get("interconnect") or {}
     if ic.get("ici") or ic.get("dcn"):

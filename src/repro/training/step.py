@@ -91,11 +91,16 @@ def make_arena_train_step(ops: ModelOps, cfg: ModelConfig, ctx: DistContext,
     where the explicit ``pack_arena`` of the grads is one model-sized
     pass.)
 
-    Bit-equivalent to the PyTree step on an arena-compatible model: the
-    decode is value-preserving (invariant I3), ``pack_arena`` of the
-    grads is the f32 image of the same values the tree optimizer reads,
-    and the flat apply is the same elementwise math (with the non-f32
-    dtype round trip done per segment in :func:`arena_apply`).
+    Bit-equivalent to the PyTree step on an all-f32 model: the decode is
+    a bitcast view of the stored words, ``pack_values`` of the grads is
+    the f32 image of the same values the tree optimizer reads, and the
+    flat apply is the same elementwise math. On mixed-precision models
+    the grads/moments live in the f32 *value* domain
+    (``layout.total_values`` ≥ ``total_words``) and :func:`arena_apply`
+    does the decode → update → re-encode round trip one coalesced
+    same-dtype run at a time; stored params round through exactly the
+    tree path's ``.astype(p.dtype)``, while master moments stay f32
+    (allclose to the tree path, documented in DESIGN.md).
 
     On a mesh (``ctx.mesh is not None``) the step is SPMD: the arena and
     adam moments carry the flat :func:`~repro.sharding.partition
@@ -109,7 +114,7 @@ def make_arena_train_step(ops: ModelOps, cfg: ModelConfig, ctx: DistContext,
     (asserted in ``tests/test_sharded_arena.py``; across topologies,
     reduction order differs at ULP level as with any SPMD change).
     """
-    from repro.core.arena import pack_arena, unpack_arena
+    from repro.core.arena import pack_values, unpack_arena
     from repro.sharding.partition import (arena_sharding,
                                           param_partition_specs)
     from jax.sharding import NamedSharding
@@ -127,16 +132,21 @@ def make_arena_train_step(ops: ModelOps, cfg: ModelConfig, ctx: DistContext,
                     x, NamedSharding(ctx.mesh, s)), p, specs)
 
         def pack_grads(g):
-            return pack_arena(g, layout, out_sharding=flat_sh)
+            return pack_values(g, layout, out_sharding=flat_sh)
 
         def constrain_arena(a):
+            # Value buffers only share the flat arena sharding when the
+            # two domains coincide (all-f32 layout; mixed-dtype + mesh is
+            # gated off upstream in the fabric).
+            if a.size != layout.total_words:
+                return a
             return jax.lax.with_sharding_constraint(a, flat_sh)
     else:
         def constrain_tree(p):
             return p
 
         def pack_grads(g):
-            return pack_arena(g, layout)
+            return pack_values(g, layout)
 
         def constrain_arena(a):
             return a
@@ -153,7 +163,7 @@ def make_arena_train_step(ops: ModelOps, cfg: ModelConfig, ctx: DistContext,
 
             mbatch = jax.tree_util.tree_map(split, batch)
             acc_dtype = jnp.dtype(cfg.opt_moment_dtype)
-            g0 = constrain_arena(jnp.zeros((layout.total_words,),
+            g0 = constrain_arena(jnp.zeros((layout.total_values,),
                                            acc_dtype))
 
             def body(carry, bx):

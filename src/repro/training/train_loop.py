@@ -218,12 +218,17 @@ class TrainLoop:
         if self.loop_cfg.arena_state and self.controller is not None \
                 and self.loop_cfg.fabric is not None:
             # arena-resident state was requested (the default) with a
-            # fabric, but the fabric could not build an arena layout
-            # (non-arena dtypes, custom scorer, partial tiers). Never
-            # fall back silently: the tree path packs every maintained
-            # step, a real perf cliff on SPMD meshes.
+            # fabric, but the fabric could not build an arena layout.
+            # Since the word-level arena, quantized dtypes (bf16/f16/fp8/
+            # int8…) are arena-native; only truly word-unpackable leaves
+            # (f64, int64, complex, bool), custom scorers, partial tiers,
+            # or mixed-dtype models on an SPMD mesh gate here. Never fall
+            # back silently: the tree path packs every maintained step, a
+            # real perf cliff on SPMD meshes.
             import warnings
-            msg = ("arena_state=True but the fabric is not arena-capable; "
+            msg = ("arena_state=True but the fabric is not arena-capable "
+                   "(word-unpackable dtype such as f64/int64/bool, custom "
+                   "scorer, partial tiers, or mixed dtypes on a mesh); "
                    "falling back to PyTree training state (per-step packs). "
                    "Set TrainLoopConfig(arena_state=False) to silence.")
             warnings.warn(msg, stacklevel=2)
@@ -321,6 +326,14 @@ class TrainLoop:
                     and x.size == old_layout.total_words:
                 return relayout_arena(x, old_layout, new_layout,
                                       out_sharding=ash)
+            if getattr(x, "ndim", None) == 1 \
+                    and x.size == old_layout.total_values:
+                # value-domain moment mirrors of a quantized layout
+                # (total_values > total_words); same shard-count-invariant
+                # data region argument, value-granular
+                from repro.core.arena import relayout_values
+                return relayout_values(x, old_layout, new_layout,
+                                       out_sharding=ash)
             # scalars (adam step count) re-commit replicated on the new
             # mesh — a leaf left on the old device set cannot enter the
             # re-jitted step

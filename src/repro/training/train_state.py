@@ -64,9 +64,17 @@ class ArenaTrainState:
     @classmethod
     def create(cls, arena: jnp.ndarray, optimizer,
                layout) -> "ArenaTrainState":
-        # moments as flat arenas: the arena is a one-leaf pytree, so
-        # optimizer.init applies unchanged (zeros stay zero on pads)
-        return cls(arena=arena, opt_state=optimizer.init(arena),
+        # Moments are flat f32 mirrors in the *value* domain
+        # (total_values == total_words for all-f32 layouts, where this
+        # degenerates to init-on-the-arena; larger for quantized layouts
+        # whose words hold >1 element). The arena itself is a one-leaf
+        # pytree, so optimizer.init applies unchanged (zeros stay zero
+        # on pads). Shape is what matters — init only reads it.
+        if layout is not None and layout.total_values != arena.size:
+            seed = jnp.zeros((layout.total_values,), jnp.float32)
+        else:
+            seed = arena
+        return cls(arena=arena, opt_state=optimizer.init(seed),
                    step=jnp.zeros((), jnp.int32), layout=layout)
 
     @property

@@ -67,21 +67,36 @@ def test_layout_invariants():
     params = _params()
     part = partition_pytree(params, 16)
     lay = build_arena_layout(part)
+    # I1 (word-level): the data region and the whole buffer are tile
+    # multiples; main-region segments are tile-aligned, tail-packed
+    # segments word-contiguous and pad-free
     assert lay.total_words % ARENA_TILE == 0
-    covered = 0
+    assert lay.data_words % ARENA_TILE == 0
+    assert lay.has_tail     # _params has sub-tile leaves ("b", "s")
     prev_end = 0
-    for ab in lay.blocks:                       # I1 + I2: aligned, disjoint,
-        assert ab.offset % ARENA_TILE == 0      # covering
-        assert ab.words % ARENA_TILE == 0
+    for ab in lay.blocks:                       # I2: disjoint, covering,
+        if ab.offset < lay.tail_start:          # offset-ascending
+            assert ab.offset % ARENA_TILE == 0
+            assert ab.words % ARENA_TILE == 0
+        else:
+            assert ab.words == ab.payload       # tail: no intra-seg pad
         assert 0 < ab.payload <= ab.words
         assert ab.offset == prev_end
         prev_end = ab.offset + ab.words
-        covered += ab.words
-    assert covered == lay.total_words
+    assert prev_end == lay.tail_end <= lay.data_words
     assert lay.n_tiles == lay.total_words // ARENA_TILE
+    # tail packing strictly shrinks the buffer vs the aligned layout
+    loose = build_arena_layout(part, tail_pack=False)
+    assert lay.total_words < loose.total_words
+    assert lay.padding_ratio < loose.padding_ratio
+    assert not loose.has_tail
     gids = lay.tile_gids()
     assert gids.shape == (lay.n_tiles,)
-    assert set(gids.tolist()) == set(range(part.total_blocks))
+    main_gids = {ab.gid for ab in lay.blocks if ab.offset < lay.tail_start}
+    tail_tiles = set(range(lay.tail_start // ARENA_TILE,
+                           lay.data_words // ARENA_TILE))
+    assert {int(g) for g in gids if g >= 0} == main_gids
+    assert {i for i, g in enumerate(gids) if g < 0} == tail_tiles
 
 
 def test_layout_colocated_leaves_get_separate_segments():
@@ -96,9 +111,14 @@ def test_layout_colocated_leaves_get_separate_segments():
 
 
 def test_arena_compatible_gates_dtypes():
+    # word-packable dtypes — incl. the quantized set — are arena-native
     good = partition_pytree({"a": jnp.zeros((4,), jnp.bfloat16),
-                             "b": jnp.zeros((4,), jnp.float32)}, 4)
-    bad = partition_pytree({"a": jnp.zeros((4,), jnp.int32)}, 4)
+                             "b": jnp.zeros((4,), jnp.float32),
+                             "c": jnp.zeros((4,), jnp.int8),
+                             "d": jnp.zeros((4,), jnp.int32)}, 4)
+    # only truly word-unpackable dtypes gate (f64/int64/bool/complex);
+    # np array: jnp would silently downcast f64 -> f32 without x64 mode
+    bad = partition_pytree({"a": np.zeros((4,), np.float64)}, 4)
     assert arena_compatible(good)
     assert not arena_compatible(bad)
     fab = CheckpointFabric(bad, FabricConfig())
@@ -224,10 +244,17 @@ def test_arena_routing_covers_every_tile_once():
     codec = _codec(params, part)
     lay = build_arena_layout(part)
     r = arena_routing(lay, codec.layout, codec.group_of)
-    assert sorted(r.perm.tolist()) == list(range(lay.n_tiles))
+    # routing covers exactly the main-region tiles, each once; tail tiles
+    # are swept by the word-granular epilogue instead
+    main_tiles = list(range(lay.tail_start // ARENA_TILE))
+    assert sorted(r.perm.tolist()) == main_tiles
     assert r.first[0] == 1
     listed = r.members[r.members >= 0]
-    assert sorted(listed.tolist()) == list(range(lay.n_tiles))
+    assert sorted(listed.tolist()) == main_tiles
+    # the aligned (tail_pack=False) layout routes every tile
+    loose = build_arena_layout(part, tail_pack=False)
+    r2 = arena_routing(loose, codec.layout, codec.group_of)
+    assert sorted(r2.perm.tolist()) == list(range(loose.n_tiles))
 
 
 def test_frames_from_arena_matches_pack_frames():

@@ -134,38 +134,45 @@ def test_classic_runner_arena_matches_tree():
 
 @pytest.mark.parametrize("opt_name", ["sgd", "adamw"])
 def test_arena_apply_matches_tree_update(opt_name):
-    """Flat elementwise apply over the arena == per-leaf tree apply,
-    bit-exactly, including the non-f32 dtype round trip; pads stay zero
-    (invariant I4)."""
+    """Flat elementwise apply over the word arena == per-leaf tree apply,
+    bit-exactly, including the quantized-dtype round trip (grads and
+    moments live in the f32 value domain); pads stay zero (I4)."""
+    from repro.core.arena import pack_values
     rng = np.random.default_rng(0)
     params = {"w": jnp.asarray(rng.normal(size=(70, 9)), jnp.float32),
               "h": jnp.asarray(rng.normal(size=(33, 5)), jnp.bfloat16),
               "b": jnp.asarray(rng.normal(size=(7,)), jnp.float16)}
     part = partition_pytree(params, 16)
     layout = build_arena_layout(part)
+    assert not layout.uniform_f32 and layout.total_values > layout.total_words
     opt = sgd(0.1) if opt_name == "sgd" else adamw(1e-2)
     arena = pack_arena(params, layout)
     st_tree = opt.init(params)
-    st_flat = opt.init(arena)
+    st_flat = opt.init(jnp.zeros((layout.total_values,), jnp.float32))
     tree = params
     for i in range(3):
         grads = jax.tree_util.tree_map(
             lambda x: jnp.asarray(rng.normal(size=x.shape), x.dtype), tree)
-        g_arena = pack_arena(grads, layout)
+        g_values = pack_values(grads, layout)
         tree, st_tree = opt.update(grads, st_tree, tree)
-        arena, st_flat = arena_apply(opt, g_arena, st_flat, arena, layout)
+        arena, st_flat = arena_apply(opt, g_values, st_flat, arena, layout)
         assert (np.asarray(pack_arena(tree, layout))
                 == np.asarray(arena)).all(), f"step {i} diverged"
-    # pads still zero after three updates
+    # word-domain pads still zero after three updates
     pad_mask = np.ones((layout.total_words,), bool)
+    vpad_mask = np.ones((layout.total_values,), bool)
     for li, leaf in enumerate(part.leaves):
         off, seg, pay = (layout.leaf_offset[li], layout.seg_words[li],
                          layout.payload_words[li])
+        voff, vseg, vpay = (layout.value_offset[li], layout.seg_elems[li],
+                            layout.payload_elems[li])
         for b in range(leaf.n_blocks):
             pad_mask[off + b * seg: off + b * seg + pay] = False
+            vpad_mask[voff + b * vseg: voff + b * vseg + vpay] = False
     assert (np.asarray(arena)[pad_mask] == 0.0).all()
     if opt_name == "adamw":
-        assert (np.asarray(st_flat.mu)[pad_mask] == 0.0).all()
+        # moments are value-domain mirrors; their pads stay zero too
+        assert (np.asarray(st_flat.mu)[vpad_mask] == 0.0).all()
 
 
 def test_arena_train_state_lazy_params_view():
